@@ -1,0 +1,86 @@
+//! Heterogeneous workload on simulated Summit with multi-DVM PRRTE — an
+//! interactive version of Experiment 3 (Fig. 9a/b) with configurable
+//! geometry and fault injection:
+//!
+//!     cargo run --release --example heterogeneous_summit -- \
+//!         [--nodes 1024] [--tasks 3098] [--dvm-nodes 256] [--faults]
+//!
+//! Prints the RU timeline areas (Pilot Startup / Warmup / Prepare Exec /
+//! Exec / Idle) the paper plots, plus TTX/RU/OVH.
+
+use rp::analytics::RuTimeline;
+use rp::experiments::harness::{AgentSim, SimConfig};
+use rp::experiments::workloads::heterogeneous_summit;
+use rp::platform::PlatformKind;
+use rp::util::args::Args;
+use rp::util::rng::Rng;
+
+fn main() {
+    let args = Args::from_env();
+    let nodes = args.u64_or("nodes", 1024) as u32;
+    let n_tasks = args.usize_or("tasks", 3098);
+    let dvm_nodes = args.u64_or("dvm-nodes", 256) as u32;
+    let faults = args.flag("faults");
+    let seed = args.u64_or("seed", 42);
+
+    let mut rng = Rng::new(seed);
+    let tasks = heterogeneous_summit(n_tasks, 600.0, 900.0, &mut rng);
+    let gpu = tasks.iter().filter(|t| t.gpus() > 0).count();
+    let mpi = tasks.iter().filter(|t| t.uses_mpi() && t.cores() > 42).count();
+    println!(
+        "workload: {n_tasks} tasks ({gpu} GPU, {mpi} multi-node MPI, {} CPU)",
+        n_tasks - gpu - mpi
+    );
+
+    let mut cfg = SimConfig::new(PlatformKind::Summit, nodes);
+    cfg.sched_rate = 300.0;
+    cfg.launch_method = Some("prrte".into());
+    cfg.nodes_per_dvm = dvm_nodes;
+    cfg.agent_nodes = if nodes > 1024 { 1 } else { 0 };
+    cfg.task_failures = faults;
+    cfg.dvm_failures = faults;
+    cfg.seed = seed;
+    let agent_nodes = cfg.agent_nodes;
+    let out = AgentSim::new(cfg).run(&tasks);
+
+    let tl = RuTimeline::build(
+        &out.tracer,
+        &out.task_cores,
+        out.pilot_cores,
+        out.t_start,
+        out.t_end.max(1.0),
+        out.t_bootstrap_done,
+        24,
+    );
+
+    println!(
+        "pilot: {} nodes = {} cores / {} GPUs, {} DVMs of ≤{} nodes",
+        nodes,
+        out.pilot_cores,
+        out.pilot_gpus,
+        (nodes - agent_nodes).div_ceil(dvm_nodes),
+        dvm_nodes
+    );
+    println!(
+        "TTX {:.0} s | sched ramp {:.1} s | RU {:.0} % | done {} failed {}",
+        out.ttx,
+        out.sched_span,
+        tl.utilization() * 100.0,
+        out.n_done,
+        out.n_failed
+    );
+
+    // ASCII Fig-9: stacked areas per time bin
+    println!("\n{:>7}  {}", "t (s)", "startup=S warmup=W prepare=P exec=# idle=.");
+    for (k, b) in tl.bins.iter().enumerate() {
+        let t = tl.t0 + (k as f64 + 0.5) * tl.bin_w;
+        let total: f64 = b.iter().sum();
+        let width = 60.0;
+        let mut line = String::new();
+        for (s, ch) in [(0, 'S'), (1, 'W'), (2, 'P'), (3, '#'), (4, '.')] {
+            let n = (width * b[s] / total).round() as usize;
+            line.push_str(&ch.to_string().repeat(n));
+        }
+        println!("{t:>7.0}  {line}");
+    }
+}

@@ -1,0 +1,63 @@
+//! Quickstart: the canonical RP usage pattern (§III-D) on the local
+//! platform — describe a pilot, describe tasks, submit, wait.
+//!
+//!     cargo run --release --example quickstart
+//!
+//! Runs a small mixed workload (real processes + registered functions)
+//! through the full Session → TaskManager → DB → Agent pipeline and
+//! prints the resulting task states and the trace-derived TTX.
+
+use rp::session::Session;
+use rp::task::{TaskDescription, TaskState};
+use rp::util::json::Json;
+
+fn main() {
+    let mut session = Session::new();
+    println!("session {}", session.uid);
+
+    // a function-task implementation (RAPTOR-style); examples/docking_raptor
+    // shows the PJRT-artifact version of this
+    session.register_function("fibonacci", |payload| {
+        let n = payload.as_f64().unwrap_or(0.0) as u64;
+        let (mut a, mut b) = (0u64, 1u64);
+        for _ in 0..n {
+            (a, b) = (b, a + b);
+        }
+        Ok(a as f64)
+    });
+
+    // executable tasks (spawned processes) + function tasks
+    let mut tasks: Vec<TaskDescription> = Vec::new();
+    for i in 0..8 {
+        let mut td = TaskDescription::emulated("/bin/sh", 1, 1, 0.0);
+        td.arguments = vec!["-c".into(), format!("exit 0 # task {i}")];
+        td.name = format!("exe.{i}");
+        tasks.push(td);
+    }
+    for i in 0..8 {
+        let mut td = TaskDescription::func("fibonacci", Json::Num(40.0 + i as f64), 0.0);
+        td.name = format!("fib.{i}");
+        tasks.push(td);
+    }
+
+    let n = tasks.len();
+    let result = session.run_local(tasks, 0).expect("workload failed");
+
+    println!("{:<8} {:<10} {:>12}", "task", "state", "result");
+    for t in &result.tasks {
+        println!(
+            "{:<8} {:<10} {:>12}",
+            t.description.name,
+            match t.state {
+                TaskState::Done => "DONE",
+                TaskState::Failed => "FAILED",
+                _ => "?",
+            },
+            t.result.map(|r| format!("{r}")).unwrap_or_default()
+        );
+    }
+    let done = result.tasks.iter().filter(|t| t.state == TaskState::Done).count();
+    println!("\n{done}/{n} tasks DONE in {:.3} s (trace: {} events)", result.ttx, result.tracer.len());
+    session.close();
+    assert_eq!(done, n);
+}

@@ -1,0 +1,137 @@
+"""AOT lowering: jax (L2, calling L1 Pallas kernels) -> HLO text artifacts
+the Rust PJRT runtime loads at startup.
+
+HLO *text* — NOT `.serialize()` — is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Also writes artifacts/expected.json: deterministic test vectors whose
+expected outputs come from the PURE-JNP REFERENCE (kernels/ref.py), so the
+Rust integration tests validate the whole chain Pallas -> HLO -> PJRT
+against the oracle.
+
+Usage: cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import ref
+
+# artifact geometry (kept modest: these are per-task payloads, executed
+# thousands of times by the coordinator)
+DOCK_B, DOCK_L, DOCK_R = 8, 16, 256
+SYNAPSE_N, SYNAPSE_ITERS = 128, 4
+MD_N = 128
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def det(shape, scale=1.0, seed=0):
+    """Deterministic pseudo-input, exactly reproducible in Rust:
+    v[k] = ((k*31 + seed*17) % 97 / 97 - 0.5) * scale, row-major flat index."""
+    n = int(np.prod(shape))
+    k = np.arange(n, dtype=np.int64)
+    v = (((k * 31 + seed * 17) % 97).astype(np.float32) / 97.0 - 0.5) * scale
+    return v.reshape(shape)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    spec = jax.ShapeDtypeStruct
+    f32 = jnp.float32
+    artifacts = {}
+
+    # ---- dock_batch: (B,L,3),(B,L),(R,3),(R,) -> (B,) --------------------
+    lowered = jax.jit(lambda lx, lq, rx, rq: (model.dock_batch(lx, lq, rx, rq),)).lower(
+        spec((DOCK_B, DOCK_L, 3), f32),
+        spec((DOCK_B, DOCK_L), f32),
+        spec((DOCK_R, 3), f32),
+        spec((DOCK_R,), f32),
+    )
+    artifacts["dock_batch"] = to_hlo_text(lowered)
+
+    # ---- synapse_task: (N,N) -> (N,N) ------------------------------------
+    lowered = jax.jit(
+        lambda s: (model.synapse_task(s, iters=SYNAPSE_ITERS),)
+    ).lower(spec((SYNAPSE_N, SYNAPSE_N), f32))
+    artifacts["synapse_task"] = to_hlo_text(lowered)
+
+    # ---- md_step: (N,3),(N,3) -> ((N,3),(N,3)) ----------------------------
+    lowered = jax.jit(lambda x, v: model.md_step(x, v)).lower(
+        spec((MD_N, 3), f32), spec((MD_N, 3), f32)
+    )
+    artifacts["md_step"] = to_hlo_text(lowered)
+
+    for name, text in artifacts.items():
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    # ---- expected.json: oracle test vectors ------------------------------
+    lx = det((DOCK_B, DOCK_L, 3), scale=2.0, seed=1)
+    lq = det((DOCK_B, DOCK_L), scale=0.2, seed=2)
+    rx = det((DOCK_R, 3), scale=6.0, seed=3)
+    rq = det((DOCK_R,), scale=0.2, seed=4)
+    dock_out = np.asarray(
+        ref.dock_batch_ref(jnp.asarray(lx), jnp.asarray(lq), jnp.asarray(rx), jnp.asarray(rq))
+    )
+
+    syn_in = det((SYNAPSE_N, SYNAPSE_N), scale=0.1, seed=5)
+    syn_out = np.asarray(ref.synapse_ref(jnp.asarray(syn_in), SYNAPSE_ITERS))
+
+    md_x = det((MD_N, 3), scale=6.0, seed=6)
+    md_v = det((MD_N, 3), scale=0.2, seed=7)
+    md_x1, md_v1 = ref.md_step_ref(jnp.asarray(md_x), jnp.asarray(md_v))
+
+    expected = {
+        "dock_batch": {
+            "B": DOCK_B, "L": DOCK_L, "R": DOCK_R,
+            "lig_xyz": lx.ravel().tolist(),
+            "lig_q": lq.ravel().tolist(),
+            "rec_xyz": rx.ravel().tolist(),
+            "rec_q": rq.ravel().tolist(),
+            "scores": dock_out.ravel().tolist(),
+        },
+        "synapse_task": {
+            "N": SYNAPSE_N, "iters": SYNAPSE_ITERS,
+            "input_formula": "v[k] = ((k*31 + 5*17) % 97 / 97 - 0.5) * 0.1",
+            "out_sum": float(syn_out.sum(dtype=np.float64)),
+            "out_first8": syn_out.ravel()[:8].tolist(),
+        },
+        "md_step": {
+            "N": MD_N,
+            "xyz": md_x.ravel().tolist(),
+            "vel": md_v.ravel().tolist(),
+            "xyz_out_first8": np.asarray(md_x1).ravel()[:8].tolist(),
+            "vel_out_first8": np.asarray(md_v1).ravel()[:8].tolist(),
+            "xyz_out_sum": float(np.asarray(md_x1).sum(dtype=np.float64)),
+        },
+    }
+    path = os.path.join(args.out_dir, "expected.json")
+    with open(path, "w") as f:
+        json.dump(expected, f)
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,103 @@
+"""Structural performance estimates for the L1 Pallas kernels.
+
+interpret=True gives CPU-numpy timings that say nothing about TPU
+performance, so real-TPU projections are *structural*: VMEM footprint of
+each kernel's per-grid-step working set, FLOP counts, arithmetic
+intensity, and an MXU-shape check. These are the numbers behind
+DESIGN.md §8 / EXPERIMENTS.md "L1 kernel notes", kept executable so they
+track the kernels.
+"""
+
+from dataclasses import dataclass
+
+F32 = 4  # bytes
+VMEM_BYTES = 16 * 1024 * 1024  # per-core VMEM on contemporary TPUs
+MXU_TILE = 128
+
+
+@dataclass
+class KernelEstimate:
+    name: str
+    vmem_bytes: int
+    flops_per_step: float
+    bytes_per_step: float
+    mxu_aligned: bool
+
+    @property
+    def vmem_fraction(self) -> float:
+        return self.vmem_bytes / VMEM_BYTES
+
+    @property
+    def arithmetic_intensity(self) -> float:
+        """FLOPs per HBM byte moved per grid step."""
+        return self.flops_per_step / max(self.bytes_per_step, 1.0)
+
+
+def dock_estimate(L: int = 16, tile: int = 128) -> KernelEstimate:
+    """Docking kernel: per grid step holds lig (L,3)+(L,), rec tile
+    (T,3)+(T,), the (L,T) pair intermediates, and the (1,1) accumulator."""
+    vmem = F32 * (L * 3 + L + tile * 3 + tile + 3 * L * tile + 1)
+    # per pair: r2(3 mul+3 add+1 add), inv powers (~6), lj (~4), coul
+    # (2 mul + rsqrt~4), sum (2) ≈ 25 flops
+    flops = 25.0 * L * tile
+    moved = F32 * (tile * 4)  # rec tile streamed from HBM; lig resident
+    return KernelEstimate("docking", vmem, flops, moved, tile % MXU_TILE == 0)
+
+
+def synapse_estimate(bm: int = 64, bn: int = 64, bk: int = 64) -> KernelEstimate:
+    """Synapse burner: per grid step holds A (bm,bk), B (bk,bn), the add
+    tile and the accumulator (bm,bn)."""
+    vmem = F32 * (bm * bk + bk * bn + 2 * bm * bn)
+    flops = 2.0 * bm * bn * bk
+    moved = F32 * (bm * bk + bk * bn)
+    aligned = all(d % MXU_TILE == 0 for d in (bm, bn, bk))
+    return KernelEstimate("synapse", vmem, flops, moved, aligned)
+
+
+def mdforce_estimate(N: int = 128, tile: int = 64) -> KernelEstimate:
+    vmem = F32 * (N * 3 + tile * 3 + 3 * N * tile + N * 3)
+    flops = 30.0 * N * tile
+    moved = F32 * (tile * 3)
+    return KernelEstimate("mdforce", vmem, flops, moved, tile % MXU_TILE == 0)
+
+
+def mxu_utilization_estimate(bm: int, bn: int, bk: int) -> float:
+    """Fraction of MXU work that is useful for a (bm,bk)x(bk,bn) tile:
+    padding waste when dims are not multiples of the 128x128 systolic
+    array."""
+    def eff(d):
+        full = -(-d // MXU_TILE) * MXU_TILE
+        return d / full
+
+    return eff(bm) * eff(bn) * eff(bk)
+
+
+def report() -> str:
+    rows = [
+        dock_estimate(),
+        synapse_estimate(),
+        synapse_estimate(128, 128, 128),
+        synapse_estimate(256, 256, 256),
+        mdforce_estimate(),
+    ]
+    out = [
+        f"{'kernel':<10} {'VMEM':>10} {'%VMEM':>7} {'flops/step':>12} "
+        f"{'AI (flop/B)':>12} {'MXU-aligned':>12}"
+    ]
+    for r in rows:
+        out.append(
+            f"{r.name:<10} {r.vmem_bytes:>10} {100*r.vmem_fraction:>6.2f}% "
+            f"{r.flops_per_step:>12.0f} {r.arithmetic_intensity:>12.1f} "
+            f"{str(r.mxu_aligned):>12}"
+        )
+    out.append(
+        f"synapse MXU utilization estimate: 64-blocks "
+        f"{mxu_utilization_estimate(64,64,64):.2f}, 128-blocks "
+        f"{mxu_utilization_estimate(128,128,128):.2f}, 256-blocks "
+        f"{mxu_utilization_estimate(256,256,256):.2f}"
+    )
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    print(report())

@@ -1,0 +1,1 @@
+from . import docking, mdforce, ref, synapse  # noqa: F401

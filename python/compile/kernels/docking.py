@@ -1,0 +1,65 @@
+"""L1 Pallas kernel: ligand-receptor docking score (Experiment 5's
+OpenEye-dock substitute).
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the (L ligand-atoms x R
+receptor-atoms) interaction matrix is tiled over the receptor axis via the
+BlockSpec grid; each grid step loads one receptor tile into VMEM, computes
+the (L, TILE) pair energies on the VPU, and accumulates the partial sum
+into a (1, 1) VMEM accumulator. interpret=True on CPU (Mosaic custom-calls
+cannot run on the CPU PJRT plugin); the same code lowers to Mosaic on TPU.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import COULOMB_K, LJ_EPS, LJ_SIGMA, SOFT
+
+
+def _dock_kernel(lig_xyz_ref, lig_q_ref, rec_xyz_ref, rec_q_ref, out_ref):
+    j = pl.program_id(0)
+    lig = lig_xyz_ref[...]            # (L, 3)
+    ligq = lig_q_ref[...]             # (L,)
+    rec = rec_xyz_ref[...]            # (T, 3)
+    recq = rec_q_ref[...]             # (T,)
+
+    diff = lig[:, None, :] - rec[None, :, :]          # (L, T, 3)
+    r2 = jnp.sum(diff * diff, axis=-1) + SOFT          # (L, T)
+    inv_r2 = (LJ_SIGMA * LJ_SIGMA) / r2
+    inv_r6 = inv_r2 * inv_r2 * inv_r2
+    lj = 4.0 * LJ_EPS * (inv_r6 * inv_r6 - inv_r6)
+    coul = COULOMB_K * (ligq[:, None] * recq[None, :]) / jnp.sqrt(r2)
+    partial = jnp.sum(lj + coul, dtype=jnp.float32)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[0, 0] = partial
+
+    @pl.when(j > 0)
+    def _accum():
+        out_ref[0, 0] += partial
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def dock_score(lig_xyz, lig_q, rec_xyz, rec_q, tile: int = 128):
+    """Pallas-tiled docking score; semantics == ref.dock_score_ref."""
+    L = lig_xyz.shape[0]
+    R = rec_xyz.shape[0]
+    assert R % tile == 0, f"receptor atom count {R} not divisible by tile {tile}"
+    grid = (R // tile,)
+    out = pl.pallas_call(
+        _dock_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((L, 3), lambda j: (0, 0)),
+            pl.BlockSpec((L,), lambda j: (0,)),
+            pl.BlockSpec((tile, 3), lambda j: (j, 0)),
+            pl.BlockSpec((tile,), lambda j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda j: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        interpret=True,
+    )(lig_xyz, lig_q, rec_xyz, rec_q)
+    return out[0, 0]

@@ -1,0 +1,83 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the ground truth the kernels are checked against (pytest +
+hypothesis in python/tests/), and the semantics the Rust integration tests
+verify through the AOT artifacts (artifacts/expected.json).
+"""
+
+import jax.numpy as jnp
+
+# ------------------------------------------------------------------ docking
+
+# Lennard-Jones + Coulomb parameters of the synthetic scoring function.
+LJ_EPS = 0.2       # kcal/mol
+LJ_SIGMA = 3.4     # Angstrom
+COULOMB_K = 332.0  # kcal*A/(mol*e^2)
+SOFT = 1.0         # softening to avoid r=0 singularities
+
+
+def dock_score_ref(lig_xyz, lig_q, rec_xyz, rec_q):
+    """Interaction energy (score) of one ligand pose against a receptor.
+
+    lig_xyz: (L, 3) float32, lig_q: (L,), rec_xyz: (R, 3), rec_q: (R,).
+    Returns a scalar float32: sum over all ligand-receptor atom pairs of
+    LJ(r) + Coulomb(r), with softened distances.
+    """
+    diff = lig_xyz[:, None, :] - rec_xyz[None, :, :]        # (L, R, 3)
+    r2 = jnp.sum(diff * diff, axis=-1) + SOFT               # (L, R)
+    inv_r2 = (LJ_SIGMA * LJ_SIGMA) / r2
+    inv_r6 = inv_r2 * inv_r2 * inv_r2
+    lj = 4.0 * LJ_EPS * (inv_r6 * inv_r6 - inv_r6)
+    coul = COULOMB_K * (lig_q[:, None] * rec_q[None, :]) / jnp.sqrt(r2)
+    return jnp.sum(lj + coul, dtype=jnp.float32)
+
+
+def dock_batch_ref(ligs_xyz, ligs_q, rec_xyz, rec_q):
+    """Score a batch of ligands: (B, L, 3), (B, L) -> (B,)."""
+    import jax
+
+    return jax.vmap(lambda x, q: dock_score_ref(x, q, rec_xyz, rec_q))(
+        ligs_xyz, ligs_q
+    )
+
+# ------------------------------------------------------------------ synapse
+
+def synapse_ref(state, iters: int):
+    """Synapse FLOP-burner semantics: `iters` steps of
+    state <- normalize(state @ state + state). Deterministic, bounded.
+
+    state: (N, N) float32. Returns (N, N) float32.
+    """
+    def step(s):
+        s = jnp.matmul(s, s) + s
+        # normalize to keep values bounded over arbitrarily many iters
+        return s / (jnp.max(jnp.abs(s)) + 1.0)
+
+    for _ in range(iters):
+        state = step(state)
+    return state
+
+# ------------------------------------------------------------------ mdforce
+
+def mdforce_ref(xyz):
+    """Pairwise Lennard-Jones forces (the GROMACS hot loop stand-in).
+
+    xyz: (N, 3) float32 -> (N, 3) float32 forces.
+    F_i = sum_j 24*eps*(2*(sigma^2/r2_ij)^6 - (sigma^2/r2_ij)^3)/r2_ij * diff_ij
+    with softened r2 (self-pairs contribute zero via the diff factor).
+    """
+    diff = xyz[:, None, :] - xyz[None, :, :]                # (N, N, 3)
+    r2 = jnp.sum(diff * diff, axis=-1) + SOFT
+    inv_r2 = (LJ_SIGMA * LJ_SIGMA) / r2
+    inv_r6 = inv_r2 * inv_r2 * inv_r2
+    fmag = 24.0 * LJ_EPS * (2.0 * inv_r6 * inv_r6 - inv_r6) / r2  # (N, N)
+    return jnp.sum(fmag[:, :, None] * diff, axis=1, dtype=jnp.float32)
+
+
+def md_step_ref(xyz, vel, dt=0.001):
+    """One velocity-Verlet step with unit masses (L2 composition)."""
+    f0 = mdforce_ref(xyz)
+    xyz1 = xyz + vel * dt + 0.5 * f0 * dt * dt
+    f1 = mdforce_ref(xyz1)
+    vel1 = vel + 0.5 * (f0 + f1) * dt
+    return xyz1, vel1

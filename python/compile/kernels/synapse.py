@@ -1,0 +1,52 @@
+"""L1 Pallas kernel: the Synapse FLOP-burner step (Experiments 1-2's
+GROMACS/BPTI emulation substitute).
+
+The compute is MXU-shaped: a tiled (bm, bk) x (bk, bn) matmul accumulating
+over the K grid axis, fused with the elementwise `+ state` epilogue. Grid
+(M/bm, N/bn, K/bk); each step keeps one A-tile, one B-tile and the output
+accumulator in VMEM. interpret=True for CPU-PJRT execution.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _step_kernel(x_ref, y_ref, add_ref, o_ref, *, n_k):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == n_k - 1)
+    def _epilogue():
+        o_ref[...] += add_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def synapse_step(state, bm: int = 64, bn: int = 64, bk: int = 64):
+    """One un-normalized burner step: state @ state + state (Pallas)."""
+    n = state.shape[0]
+    assert state.shape == (n, n)
+    assert n % bm == 0 and n % bn == 0 and n % bk == 0
+    n_k = n // bk
+    grid = (n // bm, n // bn, n_k)
+    return pl.pallas_call(
+        functools.partial(_step_kernel, n_k=n_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, n), jnp.float32),
+        interpret=True,
+    )(state, state, state)

@@ -1,0 +1,51 @@
+"""L2: the task-payload compute graphs, composed from the L1 Pallas
+kernels. These are what `python/compile/aot.py` lowers to the HLO-text
+artifacts the Rust runtime executes (python never runs at request time).
+
+ * dock_batch   — Experiment-5 payload: score a batch of ligands against a
+                  receptor (the OpenEye-docking substitute).
+ * synapse_task — Experiment-1/2 payload: the Synapse FLOP burner
+                  (normalized matmul chain; FLOPs = iters * 2N^3).
+ * md_step      — Fig-4 payload: one velocity-Verlet step over the Pallas
+                  LJ-force kernel (the GROMACS substitute).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.docking import dock_score
+from .kernels.mdforce import mdforce
+from .kernels.synapse import synapse_step
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def dock_batch(ligs_xyz, ligs_q, rec_xyz, rec_q, tile: int = 128):
+    """Score a batch of ligand poses: (B, L, 3), (B, L) -> (B,)."""
+    return jax.vmap(lambda x, q: dock_score(x, q, rec_xyz, rec_q, tile=tile))(
+        ligs_xyz, ligs_q
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("iters",))
+def synapse_task(state, iters: int = 4):
+    """`iters` normalized burner steps (see kernels.ref.synapse_ref)."""
+
+    def step(s, _):
+        s = synapse_step(s)
+        s = s / (jnp.max(jnp.abs(s)) + 1.0)
+        return s, None
+
+    out, _ = jax.lax.scan(step, state, None, length=iters)
+    return out
+
+
+@jax.jit
+def md_step(xyz, vel, dt: float = 0.001):
+    """One velocity-Verlet step with unit masses over the Pallas forces."""
+    f0 = mdforce(xyz)
+    xyz1 = xyz + vel * dt + 0.5 * f0 * dt * dt
+    f1 = mdforce(xyz1)
+    vel1 = vel + 0.5 * (f0 + f1) * dt
+    return xyz1, vel1

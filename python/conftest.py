@@ -1,0 +1,6 @@
+# Allow running pytest from the repo root (`pytest python/tests/`) as well
+# as from python/: the `compile` package lives in this directory.
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))

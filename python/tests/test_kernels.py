@@ -1,0 +1,142 @@
+"""L1 correctness: Pallas kernels (interpret=True) vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes and value ranges; fixed-seed cases pin the exact
+geometries the AOT artifacts use.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import docking, mdforce, ref, synapse
+
+settings.register_profile("ci", deadline=None, max_examples=20)
+settings.load_profile("ci")
+
+
+def arr(rng, shape, scale=1.0):
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32) * scale)
+
+
+# ------------------------------------------------------------------ docking
+
+class TestDocking:
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        L=st.sampled_from([4, 8, 16, 32]),
+        R=st.sampled_from([128, 256, 384]),
+    )
+    def test_matches_ref_across_shapes(self, seed, L, R):
+        rng = np.random.default_rng(seed)
+        lx, lq = arr(rng, (L, 3), 2.0), arr(rng, (L,), 0.2)
+        rx, rq = arr(rng, (R, 3), 5.0), arr(rng, (R,), 0.2)
+        got = docking.dock_score(lx, lq, rx, rq, tile=128)
+        want = ref.dock_score_ref(lx, lq, rx, rq)
+        np.testing.assert_allclose(got, want, rtol=5e-5, atol=5e-2)
+
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_tile_size_invariance(self, seed):
+        """Tiling is an implementation detail: result must not depend on it."""
+        rng = np.random.default_rng(seed)
+        lx, lq = arr(rng, (8, 3), 2.0), arr(rng, (8,), 0.2)
+        rx, rq = arr(rng, (256, 3), 5.0), arr(rng, (256,), 0.2)
+        a = docking.dock_score(lx, lq, rx, rq, tile=64)
+        b = docking.dock_score(lx, lq, rx, rq, tile=128)
+        c = docking.dock_score(lx, lq, rx, rq, tile=256)
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-2)
+        np.testing.assert_allclose(b, c, rtol=1e-5, atol=1e-2)
+
+    def test_artifact_geometry(self):
+        """The exact (L=16, R=256) shape the AOT artifact uses."""
+        rng = np.random.default_rng(0)
+        lx, lq = arr(rng, (16, 3), 2.0), arr(rng, (16,), 0.2)
+        rx, rq = arr(rng, (256, 3), 5.0), arr(rng, (256,), 0.2)
+        got = docking.dock_score(lx, lq, rx, rq)
+        want = ref.dock_score_ref(lx, lq, rx, rq)
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=1e-2)
+
+    def test_indivisible_tile_asserts(self):
+        rng = np.random.default_rng(0)
+        with pytest.raises(AssertionError):
+            docking.dock_score(
+                arr(rng, (8, 3)), arr(rng, (8,)),
+                arr(rng, (100, 3)), arr(rng, (100,)), tile=64,
+            )
+
+    def test_zero_charges_give_pure_lj(self):
+        rng = np.random.default_rng(2)
+        lx = arr(rng, (8, 3), 2.0)
+        rx = arr(rng, (128, 3), 5.0)
+        z8, z128 = jnp.zeros(8), jnp.zeros(128)
+        got = docking.dock_score(lx, z8, rx, z128)
+        want = ref.dock_score_ref(lx, z8, rx, z128)
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=1e-3)
+
+
+# ------------------------------------------------------------------ synapse
+
+class TestSynapse:
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        n=st.sampled_from([64, 128, 192]),
+    )
+    def test_step_matches_matmul(self, seed, n):
+        rng = np.random.default_rng(seed)
+        s = arr(rng, (n, n), 0.05)
+        got = synapse.synapse_step(s)
+        want = jnp.matmul(s, s) + s
+        np.testing.assert_allclose(got, want, rtol=5e-5, atol=1e-4)
+
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_block_shape_invariance(self, seed):
+        rng = np.random.default_rng(seed)
+        s = arr(rng, (128, 128), 0.05)
+        a = synapse.synapse_step(s, bm=32, bn=32, bk=32)
+        b = synapse.synapse_step(s, bm=64, bn=64, bk=64)
+        c = synapse.synapse_step(s, bm=128, bn=128, bk=128)
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(b, c, rtol=1e-5, atol=1e-5)
+
+    def test_zero_state_fixed_point(self):
+        z = jnp.zeros((64, 64), jnp.float32)
+        np.testing.assert_array_equal(synapse.synapse_step(z), z)
+
+    def test_identity_state(self):
+        i = jnp.eye(64, dtype=jnp.float32)
+        np.testing.assert_allclose(synapse.synapse_step(i), 2.0 * i, rtol=1e-6)
+
+
+# ------------------------------------------------------------------ mdforce
+
+class TestMdforce:
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        n=st.sampled_from([64, 128, 256]),
+    )
+    def test_matches_ref(self, seed, n):
+        rng = np.random.default_rng(seed)
+        xyz = arr(rng, (n, 3), 4.0)
+        got = mdforce.mdforce(xyz, tile=64)
+        want = ref.mdforce_ref(xyz)
+        # close-contact pairs produce O(1e7) near-cancelling terms; the
+        # tiled accumulation order differs from the oracle's, so allow a
+        # modest relative tolerance on those elements
+        np.testing.assert_allclose(got, want, rtol=1e-2, atol=5e-2)
+
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_newton_third_law(self, seed):
+        """Net force over all atoms ~ 0 (pairwise antisymmetry)."""
+        rng = np.random.default_rng(seed)
+        xyz = arr(rng, (64, 3), 4.0)
+        f = mdforce.mdforce(xyz, tile=32)
+        net = jnp.sum(f, axis=0)
+        scale = float(jnp.max(jnp.abs(f))) + 1.0
+        np.testing.assert_allclose(net / scale, jnp.zeros(3), atol=1e-4)
+
+    def test_translation_invariance(self):
+        rng = np.random.default_rng(3)
+        xyz = arr(rng, (64, 3), 4.0)
+        f0 = mdforce.mdforce(xyz, tile=32)
+        f1 = mdforce.mdforce(xyz + 100.0, tile=32)
+        np.testing.assert_allclose(f0, f1, rtol=1e-3, atol=1e-3)

@@ -1,0 +1,77 @@
+"""L2 correctness: model compositions vs oracle; shapes and dtypes."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+settings.register_profile("ci", deadline=None, max_examples=10)
+settings.load_profile("ci")
+
+
+def arr(rng, shape, scale=1.0):
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32) * scale)
+
+
+class TestDockBatch:
+    @given(seed=st.integers(0, 2**31 - 1), B=st.sampled_from([1, 4, 8]))
+    def test_matches_ref(self, seed, B):
+        rng = np.random.default_rng(seed)
+        lx, lq = arr(rng, (B, 16, 3), 2.0), arr(rng, (B, 16), 0.2)
+        rx, rq = arr(rng, (256, 3), 5.0), arr(rng, (256,), 0.2)
+        got = model.dock_batch(lx, lq, rx, rq)
+        want = ref.dock_batch_ref(lx, lq, rx, rq)
+        assert got.shape == (B,)
+        assert got.dtype == jnp.float32
+        np.testing.assert_allclose(got, want, rtol=5e-5, atol=5e-2)
+
+    def test_batch_order_independence(self):
+        """Permuting the batch permutes the scores."""
+        rng = np.random.default_rng(1)
+        lx, lq = arr(rng, (4, 16, 3), 2.0), arr(rng, (4, 16), 0.2)
+        rx, rq = arr(rng, (128, 3), 5.0), arr(rng, (128,), 0.2)
+        s = model.dock_batch(lx, lq, rx, rq)
+        perm = jnp.array([3, 1, 0, 2])
+        s_perm = model.dock_batch(lx[perm], lq[perm], rx, rq)
+        np.testing.assert_allclose(s_perm, s[perm], rtol=1e-5, atol=1e-3)
+
+
+class TestSynapseTask:
+    @given(seed=st.integers(0, 2**31 - 1), iters=st.sampled_from([1, 2, 4]))
+    def test_matches_ref(self, seed, iters):
+        rng = np.random.default_rng(seed)
+        s = arr(rng, (128, 128), 0.05)
+        got = model.synapse_task(s, iters=iters)
+        want = ref.synapse_ref(s, iters)
+        np.testing.assert_allclose(got, want, rtol=5e-5, atol=1e-5)
+
+    def test_outputs_bounded(self):
+        """Normalization keeps the state bounded over many iterations."""
+        rng = np.random.default_rng(2)
+        s = arr(rng, (64, 64), 10.0)
+        out = model.synapse_task(s, iters=16)
+        assert float(jnp.max(jnp.abs(out))) <= 1.0 + 1e-6
+
+
+class TestMdStep:
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_matches_ref(self, seed):
+        rng = np.random.default_rng(seed)
+        x, v = arr(rng, (128, 3), 4.0), arr(rng, (128, 3), 0.1)
+        x1, v1 = model.md_step(x, v)
+        xr, vr = ref.md_step_ref(x, v)
+        # close-contact atom pairs produce O(1e7) near-cancelling force
+        # terms; the Pallas tile accumulation order differs from the
+        # oracle's, so velocities can differ at the 1e-2 level
+        np.testing.assert_allclose(x1, xr, rtol=1e-3, atol=1e-3)
+        np.testing.assert_allclose(v1, vr, rtol=1e-2, atol=1e-2)
+
+    def test_zero_velocity_moves_by_force_only(self):
+        rng = np.random.default_rng(4)
+        x = arr(rng, (64, 3), 4.0)
+        v = jnp.zeros((64, 3), jnp.float32)
+        x1, _ = model.md_step(x, v)
+        f0 = ref.mdforce_ref(x)
+        np.testing.assert_allclose(x1 - x, 0.5 * f0 * 1e-6, rtol=1e-3, atol=1e-6)

@@ -1,0 +1,13 @@
+//! Ablation bench target: regenerates the four ablation studies
+//! (launcher swap, DVM size, scheduler era, partitioned metascheduler).
+//! Same content as `rp experiment ablation`, timed.
+
+use rp::experiments::ablations;
+use rp::util::bench::bench_once;
+
+fn main() {
+    bench_once("ablations (A launcher, B dvm, C era, D partitions)", || {
+        ablations::print_all(42);
+        "done".to_string()
+    });
+}

@@ -1,0 +1,43 @@
+//! DES engine throughput: the event loop underlying every experiment.
+//! exp-5 at full scale pushes ~253 M events through this heap.
+
+use rp::sim::Engine;
+use rp::util::bench::bench;
+use rp::util::rng::Rng;
+
+fn main() {
+    println!("== DES engine benchmarks ==");
+
+    // schedule+pop churn at the pending-set size of exp-5 (≈390 k events)
+    let mut e: Engine<u32> = Engine::new();
+    let mut rng = Rng::new(1);
+    for i in 0..390_000u32 {
+        e.schedule_at(rng.next_u64() % 1_000_000_000, i);
+    }
+    let mut horizon = 1_000_000_000u64;
+    bench("event churn @390k pending (exp-5 shape)", 10, 200_000, || {
+        let (t, ev) = e.next().expect("event");
+        horizon = horizon.max(t) + 34_000_000; // ~34 s "task"
+        e.schedule_at(horizon, ev);
+    });
+
+    // small-calendar churn (exp-1 shape)
+    let mut e: Engine<u32> = Engine::new();
+    for i in 0..4096u32 {
+        e.schedule_at(i as u64, i);
+    }
+    let mut horizon = 1_000_000u64;
+    bench("event churn @4k pending (exp-1 shape)", 10, 200_000, || {
+        let (t, ev) = e.next().expect("event");
+        horizon = horizon.max(t) + 1000;
+        e.schedule_at(horizon, ev);
+    });
+
+    // rng sampling cost (every launch samples 2+ distributions)
+    let mut rng = Rng::new(2);
+    let mut acc = 0.0f64;
+    bench("lognormal sample", 10, 1_000_000, || {
+        acc += rng.lognormal_ms(135.0, 107.0);
+    });
+    std::hint::black_box(acc);
+}

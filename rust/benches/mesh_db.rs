@@ -1,0 +1,68 @@
+//! Communication-substrate benchmarks: mesh queues (ZMQ stand-in) and the
+//! DB module's bulk-pull path (Fig-8 "DB Bridge Pulls").
+
+use rp::db::{Db, TaskRecord};
+use rp::mesh::{PubSub, WorkQueue};
+use rp::task::TaskState;
+use rp::util::bench::bench;
+
+fn main() {
+    println!("== mesh + db benchmarks ==");
+
+    let q: WorkQueue<u64> = WorkQueue::new(0);
+    let mut i = 0u64;
+    bench("workqueue push+pop (uncontended)", 10, 200_000, || {
+        q.push(i).unwrap();
+        i += 1;
+        q.try_pop().unwrap();
+    });
+
+    // contended: 4 producer threads + main popping
+    let q: WorkQueue<u64> = WorkQueue::new(0);
+    let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let producers: Vec<_> = (0..4)
+        .map(|t| {
+            let q = q.clone();
+            let stop = stop.clone();
+            std::thread::spawn(move || {
+                let mut k = t as u64;
+                while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                    if q.try_push(k).is_ok() {
+                        k += 4;
+                    }
+                }
+            })
+        })
+        .collect();
+    bench("workqueue pop under 4-producer load", 10, 100_000, || {
+        while q.try_pop().is_none() {}
+    });
+    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    q.close();
+    for p in producers {
+        let _ = p.join();
+    }
+
+    let bus: PubSub<u64> = PubSub::new();
+    let _subs: Vec<_> = (0..8).map(|i| bus.subscribe(if i < 4 { "state." } else { "other." })).collect();
+    let mut n = 0u64;
+    bench("pubsub publish to 4-of-8 subscribers", 10, 100_000, || {
+        bus.publish("state.task", n);
+        n += 1;
+    });
+
+    let db = Db::new();
+    let recs: Vec<TaskRecord> = (0..4096)
+        .map(|i| TaskRecord {
+            uid: format!("task.{i:06}"),
+            index: i,
+            pilot: "pilot.0000".into(),
+            state: TaskState::TmgrScheduling,
+        })
+        .collect();
+    bench("db bulk insert+pull 4096 tasks", 20, 10, || {
+        db.insert_tasks("pilot.0000", recs.clone());
+        let got = db.pull_tasks("pilot.0000", usize::MAX);
+        assert_eq!(got.len(), 4096);
+    });
+}

@@ -1,0 +1,62 @@
+//! End-to-end paper-table regeneration benchmark: runs every experiment
+//! driver once (single repeat) and times it — one entry per paper
+//! table/figure. `rp experiment all` produces the full-repeat versions.
+
+use rp::experiments::{exp12, exp34, exp5, figs};
+use rp::util::bench::bench_once;
+
+fn main() {
+    println!("== paper table/figure regeneration (1 repeat each) ==");
+
+    bench_once("Fig 4  (BPTI/NTL9 GROMACS scaling model)", || {
+        let csv = figs::fig4_csv();
+        format!("{} rows", csv.lines().count() - 1)
+    });
+
+    bench_once("Fig 5  (Synapse TTX distribution)", || {
+        let r = figs::fig5(1024, 1);
+        format!("mean {:.0}±{:.1} s (paper 828±14)", r.mean, r.std)
+    });
+
+    bench_once("Exp 1 / Fig 6-top / Fig 7 (weak scaling)", || {
+        let rep = exp12::run_exp1(1, 1);
+        let last = rep.points.last().unwrap();
+        format!("8 points; OVH@131k cores = {:.0}% (paper ~160%)", last.overhead_pct)
+    });
+
+    bench_once("Exp 2 / Fig 6-bottom (strong scaling)", || {
+        let rep = exp12::run_exp2(1, 1);
+        let p = &rep.points[0];
+        format!("TTX@16k cores = {:.0} s (paper 27,794)", p.ttx_mean)
+    });
+
+    bench_once("Fig 8  (task event timelines, 512 tasks)", || {
+        let csv = figs::fig8_csv(512, 16_384, 1);
+        format!("{} rows", csv.lines().count() - 1)
+    });
+
+    bench_once("Exp 3 (Summit weak scaling, 2 runs)", || {
+        let runs = exp34::run_exp3(1);
+        format!("RU {:.0}%/{:.0}% (paper 77/41)", runs[0].ru * 100.0, runs[1].ru * 100.0)
+    });
+
+    bench_once("Exp 4 (Summit strong scaling, 2 runs)", || {
+        let runs = exp34::run_exp4(1);
+        format!("RU {:.0}%/{:.0}% (paper 76/38)", runs[0].ru * 100.0, runs[1].ru * 100.0)
+    });
+
+    bench_once("Exp 5 / Fig 10 (RAPTOR @ scale 0.1)", || {
+        let mut cfg = exp5::Exp5Config::paper_scaled(0.1);
+        cfg.seed = 1;
+        let r = exp5::run_exp5(&cfg);
+        format!(
+            "{} calls, rate {:.0}/s on {} slots",
+            r.n_done, r.mean_rate, r.cfg_slots
+        )
+    });
+
+    bench_once("§III-D tracing overhead", || {
+        let r = figs::tracing_overhead(2);
+        format!("{:+.1}% (paper +2.5%)", r.overhead_pct)
+    });
+}

@@ -1,0 +1,56 @@
+//! PJRT hot-path benchmark: per-call latency of the AOT artifacts the
+//! coordinator executes (compile-once / execute-many). Requires
+//! `make artifacts`; skips cleanly otherwise.
+
+use rp::runtime::{load_expected, Runtime};
+use rp::util::bench::bench;
+use rp::util::json::Json;
+
+fn getv(d: &Json, k: &str) -> Vec<f32> {
+    d.get(k).as_arr().unwrap().iter().map(|v| v.as_f64().unwrap() as f32).collect()
+}
+
+fn main() {
+    let dir = std::path::Path::new("artifacts");
+    if !dir.join("expected.json").exists() {
+        println!("SKIP pjrt_runtime bench: run `make artifacts` first");
+        return;
+    }
+    println!("== PJRT runtime benchmarks ==");
+    let rt = Runtime::cpu(dir).unwrap();
+
+    let t0 = std::time::Instant::now();
+    let dock = rt.load("dock_batch").unwrap();
+    println!("compile dock_batch: {:.1} ms (once per variant)", t0.elapsed().as_secs_f64() * 1e3);
+
+    let exp = load_expected(dir).unwrap();
+    let d = exp.get("dock_batch");
+    let (b, l, r) = (d.u64_or("B", 0) as i64, d.u64_or("L", 0) as i64, d.u64_or("R", 0) as i64);
+    let (lx, lq, rx, rq) = (getv(d, "lig_xyz"), getv(d, "lig_q"), getv(d, "rec_xyz"), getv(d, "rec_q"));
+    bench("dock_batch call (8 ligands x 16x256 atoms)", 10, 50, || {
+        let out = dock
+            .call1_f32(&[(&lx, &[b, l, 3]), (&lq, &[b, l]), (&rx, &[r, 3]), (&rq, &[r])])
+            .unwrap();
+        std::hint::black_box(out);
+    });
+
+    let syn = rt.load("synapse_task").unwrap();
+    let sd = exp.get("synapse_task");
+    let n = sd.u64_or("N", 0) as usize;
+    let input: Vec<f32> = (0..n * n)
+        .map(|k| ((((k as u64 * 31 + 5 * 17) % 97) as f32 / 97.0) - 0.5) * 0.1)
+        .collect();
+    bench("synapse_task call (128x128, 4 iters)", 10, 20, || {
+        let out = syn.call1_f32(&[(&input, &[n as i64, n as i64])]).unwrap();
+        std::hint::black_box(out);
+    });
+
+    let md = rt.load("md_step").unwrap();
+    let mdd = exp.get("md_step");
+    let (x, v) = (getv(mdd, "xyz"), getv(mdd, "vel"));
+    let nn = mdd.u64_or("N", 0) as i64;
+    bench("md_step call (128 atoms)", 10, 50, || {
+        let out = md.call_f32(&[(&x, &[nn, 3]), (&v, &[nn, 3])]).unwrap();
+        std::hint::black_box(out);
+    });
+}

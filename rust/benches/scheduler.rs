@@ -1,0 +1,98 @@
+//! Scheduler benchmarks — the §Perf headline: the paper's Python scheduler
+//! ran at ~6 task/s (2018) and ~300 task/s (2021); the native Rust
+//! Continuous scheduler is benchmarked here (EXPERIMENTS.md §Perf).
+
+use rp::agent::scheduler::{Continuous, ResourceRequest, Scheduler, Tagged, Torus};
+use rp::util::bench::bench;
+use rp::util::rng::Rng;
+
+fn req(ranks: u32, cpr: u32, gpr: u32, mpi: bool) -> ResourceRequest {
+    ResourceRequest {
+        ranks,
+        cores_per_rank: cpr,
+        gpus_per_rank: gpr,
+        uses_mpi: mpi,
+        node_tag: None,
+    }
+}
+
+fn main() {
+    println!("== scheduler benchmarks (vs paper: 6 task/s era-2018, 300 task/s era-2021) ==");
+
+    // steady-state alloc/release churn on a Summit-scale pilot
+    let mut s = Continuous::new(4096, 42, 6);
+    let r = req(1, 4, 0, false);
+    let mut held = std::collections::VecDeque::new();
+    // prefill half the machine
+    for _ in 0..20_000 {
+        held.push_back(s.try_allocate(&r).unwrap());
+    }
+    bench("continuous alloc+release churn (4096 nodes)", 20, 50_000, || {
+        held.push_back(s.try_allocate(&r).expect("alloc"));
+        s.release(&held.pop_front().unwrap());
+    });
+
+    // heterogeneous mix (the exp-3 workload shape)
+    let mut s = Continuous::new(4096, 42, 6);
+    let mut rng = Rng::new(1);
+    let mut held = Vec::new();
+    bench("continuous heterogeneous mix (4096 nodes)", 10, 20_000, || {
+        if held.len() < 10_000 || rng.bool(0.5) {
+            let x = rng.below(100);
+            let rq = if x < 50 {
+                req(rng.range_u64(1, 3) as u32, 1, 1, true)
+            } else if x < 95 {
+                req(1, rng.range_u64(1, 28) as u32, 0, false)
+            } else {
+                req(84, 1, 0, true)
+            };
+            if let Some(a) = s.try_allocate(&rq) {
+                held.push(a);
+            }
+        } else {
+            let i = (rng.below(held.len() as u64)) as usize;
+            s.release(&held.swap_remove(i));
+        }
+    });
+
+    // multi-node MPI packing
+    let mut s = Continuous::new(8192, 16, 0);
+    let big = req(32, 1, 0, true); // 2 titan nodes per task
+    let mut held = std::collections::VecDeque::new();
+    for _ in 0..2048 {
+        held.push_back(s.try_allocate(&big).unwrap());
+    }
+    bench("continuous 2-node MPI churn (8192 nodes)", 20, 20_000, || {
+        held.push_back(s.try_allocate(&big).expect("alloc"));
+        s.release(&held.pop_front().unwrap());
+    });
+
+    // tagged pinning
+    let mut s = Tagged::new(1024, 42, 0);
+    let mut i = 0u32;
+    let mut held = std::collections::VecDeque::new();
+    for t in 0..1024u32 {
+        let mut rq = req(1, 2, 0, false);
+        rq.node_tag = Some(t);
+        held.push_back(s.try_allocate(&rq).unwrap());
+    }
+    bench("tagged pinned churn (1024 nodes)", 20, 50_000, || {
+        let mut rq = req(1, 2, 0, false);
+        rq.node_tag = Some(i);
+        i = (i + 1) % 1024;
+        held.push_back(s.try_allocate(&rq).expect("alloc"));
+        s.release(&held.pop_front().unwrap());
+    });
+
+    // torus segment allocation
+    let mut s = Torus::new(&[32, 32], 16);
+    let seg = req(64, 1, 0, true); // 4 nodes
+    let mut held = std::collections::VecDeque::new();
+    for _ in 0..128 {
+        held.push_back(s.try_allocate(&seg).unwrap());
+    }
+    bench("torus 4-node segment churn (1024 nodes)", 20, 20_000, || {
+        held.push_back(s.try_allocate(&seg).expect("alloc"));
+        s.release(&held.pop_front().unwrap());
+    });
+}

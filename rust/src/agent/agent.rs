@@ -1,0 +1,494 @@
+//! The real-execution-mode Agent: the same component pipeline RP runs as
+//! processes (Stager-In → Scheduler → Executors → Stager-Out), here as
+//! threads connected by the mesh, executing *actual* work on the local
+//! platform — executable tasks as spawned processes, function tasks as
+//! registered Rust closures (typically PJRT artifact calls, see
+//! `runtime::`).
+//!
+//! The DES harness (`experiments::harness`) drives the same scheduler and
+//! executor logic under virtual time; this module is the wall-clock
+//! deployment of it.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::db::Db;
+use crate::mesh::WorkQueue;
+use crate::task::{Task, TaskDescription, TaskKind, TaskState};
+use crate::tracer::{Ev, Tracer};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+use super::executor::{Executor, ExecutorConfig};
+use super::scheduler::{Allocation, Continuous, ResourceRequest, Scheduler};
+use super::stager::{Stager, StagerModel};
+
+/// A registered function implementation (RAPTOR-style function tasks).
+pub type TaskFn = Arc<dyn Fn(&Json) -> Result<f64, String> + Send + Sync>;
+
+/// Function registry: names → implementations. The real-mode equivalent
+/// of RAPTOR workers importing the user's Python module.
+#[derive(Default, Clone)]
+pub struct FunctionRegistry {
+    map: HashMap<String, TaskFn>,
+}
+
+impl FunctionRegistry {
+    pub fn new() -> FunctionRegistry {
+        FunctionRegistry {
+            map: HashMap::new(),
+        }
+    }
+
+    pub fn register<F>(&mut self, name: &str, f: F)
+    where
+        F: Fn(&Json) -> Result<f64, String> + Send + Sync + 'static,
+    {
+        self.map.insert(name.to_string(), Arc::new(f));
+    }
+
+    pub fn get(&self, name: &str) -> Option<TaskFn> {
+        self.map.get(name).cloned()
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.map.keys().map(|s| s.as_str()).collect()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct AgentConfig {
+    pub pilot_uid: String,
+    pub n_nodes: u32,
+    pub cores_per_node: u32,
+    pub gpus_per_node: u32,
+    pub launch_method: String,
+    /// executor worker threads (≈ concurrently running tasks)
+    pub n_executor_threads: usize,
+    /// DB bulk-pull size
+    pub bulk_size: usize,
+    pub trace: bool,
+}
+
+impl AgentConfig {
+    /// Local-platform agent sized to this machine.
+    pub fn local(pilot_uid: &str, cores: u32) -> AgentConfig {
+        AgentConfig {
+            pilot_uid: pilot_uid.to_string(),
+            n_nodes: 1,
+            cores_per_node: cores,
+            gpus_per_node: 0,
+            launch_method: "fork".into(),
+            n_executor_threads: cores as usize,
+            bulk_size: 1024,
+            trace: true,
+        }
+    }
+}
+
+struct WorkItem {
+    index: u32,
+    td: TaskDescription,
+    alloc: Allocation,
+}
+
+struct Completion {
+    index: u32,
+    alloc: Allocation,
+    exit_code: i32,
+    result: Option<f64>,
+    error: String,
+    /// run span, seconds since agent start (worker-measured)
+    t_run_start: f64,
+    t_run_stop: f64,
+}
+
+/// Outcome of one agent run.
+pub struct AgentResult {
+    pub tasks: Vec<Task>,
+    pub tracer: Tracer,
+    /// wall-clock workload span (first pull → last completion)
+    pub ttx: f64,
+}
+
+pub struct Agent;
+
+impl Agent {
+    /// Execute `descriptions` (already inserted into `db` under
+    /// `cfg.pilot_uid` by the TaskManager) to completion. Blocking; returns
+    /// final task states + trace.
+    pub fn run(
+        cfg: &AgentConfig,
+        db: &Db,
+        descriptions: &[TaskDescription],
+        registry: &FunctionRegistry,
+    ) -> AgentResult {
+        let expected = descriptions.len();
+        let t0 = Instant::now();
+        let now = |t0: Instant| t0.elapsed().as_secs_f64();
+
+        let mut tracer = Tracer::new(cfg.trace);
+        let mut scheduler = Continuous::new(cfg.n_nodes, cfg.cores_per_node, cfg.gpus_per_node);
+        let mut executor = Executor::new(&ExecutorConfig::simple(&cfg.launch_method, cfg.n_nodes))
+            .expect("executor config");
+        let mut stager = Stager::new(StagerModel::default());
+        let mut rng = Rng::new(0xA6E47);
+
+        let work: WorkQueue<WorkItem> = WorkQueue::new(0);
+        let completions: WorkQueue<Completion> = WorkQueue::new(0);
+        let running = Arc::new(AtomicU64::new(0));
+
+        // executor worker pool
+        let mut workers = Vec::new();
+        for _ in 0..cfg.n_executor_threads.max(1) {
+            let work = work.clone();
+            let completions = completions.clone();
+            let registry = registry.clone();
+            let running = running.clone();
+            workers.push(std::thread::spawn(move || {
+                while let Some(item) = work.pop() {
+                    running.fetch_add(1, Ordering::SeqCst);
+                    let t_start = t0.elapsed().as_secs_f64();
+                    let mut completion = execute_one(item, &registry);
+                    completion.t_run_start = t_start;
+                    completion.t_run_stop = t0.elapsed().as_secs_f64();
+                    running.fetch_sub(1, Ordering::SeqCst);
+                    if completions.push(completion).is_err() {
+                        break;
+                    }
+                }
+            }));
+        }
+
+        let mut tasks: Vec<Task> = descriptions
+            .iter()
+            .enumerate()
+            .map(|(i, td)| Task::new(format!("task.{i:06}"), i as u32, td.clone()))
+            .collect();
+
+        let mut pending: Vec<u32> = Vec::new();
+        let mut pulled = 0usize;
+        let mut done = 0usize;
+        let mut tickets: HashMap<u32, crate::agent::executor::LaunchTicket> = HashMap::new();
+
+        while done < expected {
+            // 1. pull new tasks from the DB in bulk
+            if pulled < expected {
+                let batch = db.pull_tasks(&cfg.pilot_uid, cfg.bulk_size);
+                for rec in batch {
+                    let t = now(t0);
+                    tracer.rec(t, rec.index, Ev::TaskDbPull);
+                    let task = &mut tasks[rec.index as usize];
+                    let _ = task.advance(TaskState::TmgrScheduling);
+                    // input staging (real copies if directives present)
+                    if !task.description.input_staging.is_empty() {
+                        tracer.rec(now(t0), rec.index, Ev::TaskStageInStart);
+                        let _ = task.advance(TaskState::AgentStagingInput);
+                        if let Err(e) = stager.stage_real(&task.description.input_staging) {
+                            task.fail(&format!("stage-in failed: {e}"));
+                            db.update_state(&task.uid, TaskState::Failed);
+                            done += 1;
+                            pulled += 1;
+                            continue;
+                        }
+                        tracer.rec(now(t0), rec.index, Ev::TaskStageInStop);
+                    }
+                    let _ = task.advance(TaskState::AgentSchedulingPending);
+                    tracer.rec(now(t0), rec.index, Ev::TaskSchedQueue);
+                    pending.push(rec.index);
+                    pulled += 1;
+                }
+            }
+
+            // 2. schedule as many pending tasks as fit (first-fit scan)
+            let mut i = 0;
+            while i < pending.len() {
+                let idx = pending[i];
+                let td = tasks[idx as usize].description.clone();
+                let req = ResourceRequest::from_description(&td);
+                if !scheduler.feasible(&req) {
+                    let task = &mut tasks[idx as usize];
+                    task.fail("infeasible resource request for this pilot");
+                    db.update_state(&task.uid, TaskState::Failed);
+                    done += 1;
+                    pending.swap_remove(i);
+                    continue;
+                }
+                if !executor.can_accept() {
+                    break;
+                }
+                match scheduler.try_allocate(&req) {
+                    Some(alloc) => {
+                        let task = &mut tasks[idx as usize];
+                        let _ = task.advance(TaskState::AgentScheduling);
+                        tracer.rec(now(t0), idx, Ev::TaskSchedOk);
+                        let pilot_cores = scheduler.total_cores();
+                        match executor.launch(idx, &td, &alloc, pilot_cores, &mut rng) {
+                            Ok(ticket) => {
+                                let _ = task.advance(TaskState::AgentExecutingPending);
+                                tracer.rec(now(t0), idx, Ev::TaskExecStart);
+                                tickets.insert(idx, ticket);
+                                work.push(WorkItem {
+                                    index: idx,
+                                    td: td.clone(),
+                                    alloc,
+                                })
+                                .ok();
+                            }
+                            Err(e) => {
+                                scheduler.release(&alloc);
+                                task.fail(&format!("launch failed: {e}"));
+                                db.update_state(&task.uid, TaskState::Failed);
+                                done += 1;
+                            }
+                        }
+                        pending.swap_remove(i);
+                    }
+                    None => {
+                        // keep FIFO head blocking small backfills minimal:
+                        // try the next pending task (continuous backfill)
+                        i += 1;
+                    }
+                }
+            }
+
+            // 3. absorb completions (block briefly to avoid spinning)
+            let deadline = Duration::from_millis(50);
+            if let Some(c) = completions.pop_timeout(deadline) {
+                let mut batch = vec![c];
+                batch.extend(std::iter::from_fn(|| completions.try_pop()));
+                for c in batch {
+                    let t = now(t0);
+                    scheduler.release(&c.alloc);
+                    if let Some(ticket) = tickets.remove(&c.index) {
+                        executor.complete(&ticket);
+                    }
+                    let task = &mut tasks[c.index as usize];
+                    let _ = task.advance(TaskState::AgentExecuting);
+                    tracer.rec(c.t_run_start, c.index, Ev::TaskRunStart);
+                    tracer.rec(c.t_run_stop, c.index, Ev::TaskRunStop);
+                    tracer.rec(t, c.index, Ev::TaskSpawnReturn);
+                    task.exit_code = Some(c.exit_code);
+                    task.result = c.result;
+                    if c.exit_code == 0 && c.error.is_empty() {
+                        // output staging
+                        if !task.description.output_staging.is_empty() {
+                            tracer.rec(now(t0), c.index, Ev::TaskStageOutStart);
+                            let _ = task.advance(TaskState::AgentStagingOutput);
+                            if let Err(e) = stager.stage_real(&task.description.output_staging) {
+                                task.fail(&format!("stage-out failed: {e}"));
+                                db.update_state(&task.uid, TaskState::Failed);
+                                done += 1;
+                                continue;
+                            }
+                            tracer.rec(now(t0), c.index, Ev::TaskStageOutStop);
+                        }
+                        let _ = task.advance(TaskState::Done);
+                        tracer.rec(now(t0), c.index, Ev::TaskDone);
+                        db.update_state(&task.uid, TaskState::Done);
+                    } else {
+                        task.fail(&c.error);
+                        tracer.rec(now(t0), c.index, Ev::TaskFailed);
+                        db.update_state(&task.uid, TaskState::Failed);
+                    }
+                    done += 1;
+                }
+            }
+        }
+
+        work.close();
+        for w in workers {
+            let _ = w.join();
+        }
+        completions.close();
+
+        let ttx = now(t0);
+        AgentResult {
+            tasks,
+            tracer,
+            ttx,
+        }
+    }
+}
+
+/// Execute one task for real: function tasks via the registry; executable
+/// tasks as spawned processes. Records run start/stop via the Completion.
+fn execute_one(item: WorkItem, registry: &FunctionRegistry) -> Completion {
+    match item.td.kind {
+        TaskKind::Function => match registry.get(&item.td.function) {
+            Some(f) => match f(&item.td.payload) {
+                Ok(v) => Completion {
+                    index: item.index,
+                    alloc: item.alloc,
+                    exit_code: 0,
+                    result: Some(v),
+                    error: String::new(),
+                    t_run_start: 0.0,
+                    t_run_stop: 0.0,
+                },
+                Err(e) => Completion {
+                    index: item.index,
+                    alloc: item.alloc,
+                    exit_code: 1,
+                    result: None,
+                    error: e,
+                    t_run_start: 0.0,
+                    t_run_stop: 0.0,
+                },
+            },
+            None => Completion {
+                index: item.index,
+                alloc: item.alloc,
+                exit_code: 127,
+                result: None,
+                error: format!("function '{}' not registered", item.td.function),
+                t_run_start: 0.0,
+                t_run_stop: 0.0,
+            },
+        },
+        TaskKind::Executable => {
+            let out = std::process::Command::new(&item.td.executable)
+                .args(&item.td.arguments)
+                .stdout(std::process::Stdio::null())
+                .stderr(std::process::Stdio::piped())
+                .output();
+            match out {
+                Ok(out) => Completion {
+                    index: item.index,
+                    alloc: item.alloc,
+                    exit_code: out.status.code().unwrap_or(-1),
+                    result: None,
+                    error: if out.status.success() {
+                        String::new()
+                    } else {
+                        String::from_utf8_lossy(&out.stderr).into_owned()
+                    },
+                    t_run_start: 0.0,
+                    t_run_stop: 0.0,
+                },
+                Err(e) => Completion {
+                    index: item.index,
+                    alloc: item.alloc,
+                    exit_code: 126,
+                    result: None,
+                    error: format!("spawn failed: {e}"),
+                    t_run_start: 0.0,
+                    t_run_stop: 0.0,
+                },
+            }
+        }
+    }
+}
+
+/// Shared-state wrapper so tests and examples can observe concurrency.
+pub struct AgentHandle {
+    pub result: Mutex<Option<AgentResult>>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::db::TaskRecord;
+
+    fn run_agent(descriptions: Vec<TaskDescription>, registry: FunctionRegistry) -> AgentResult {
+        let db = Db::new();
+        let records: Vec<TaskRecord> = descriptions
+            .iter()
+            .enumerate()
+            .map(|(i, _)| TaskRecord {
+                uid: format!("task.{i:06}"),
+                index: i as u32,
+                pilot: "pilot.0000".into(),
+                state: TaskState::TmgrScheduling,
+            })
+            .collect();
+        db.insert_tasks("pilot.0000", records);
+        let cfg = AgentConfig {
+            pilot_uid: "pilot.0000".into(),
+            n_nodes: 1,
+            cores_per_node: 8,
+            gpus_per_node: 0,
+            launch_method: "fork".into(),
+            n_executor_threads: 4,
+            bulk_size: 64,
+            trace: true,
+        };
+        Agent::run(&cfg, &db, &descriptions, &registry)
+    }
+
+    #[test]
+    fn executes_real_processes() {
+        let descriptions: Vec<TaskDescription> = (0..6)
+            .map(|_| TaskDescription::emulated("/bin/true", 1, 1, 0.0))
+            .collect();
+        let res = run_agent(descriptions, FunctionRegistry::new());
+        assert!(res.tasks.iter().all(|t| t.state == TaskState::Done));
+        assert!(res.tasks.iter().all(|t| t.exit_code == Some(0)));
+        assert!(res.ttx > 0.0);
+    }
+
+    #[test]
+    fn failing_executable_marked_failed() {
+        let descriptions = vec![
+            TaskDescription::emulated("/bin/false", 1, 1, 0.0),
+            TaskDescription::emulated("/bin/true", 1, 1, 0.0),
+        ];
+        let res = run_agent(descriptions, FunctionRegistry::new());
+        assert_eq!(res.tasks[0].state, TaskState::Failed);
+        assert_eq!(res.tasks[1].state, TaskState::Done);
+    }
+
+    #[test]
+    fn executes_function_tasks() {
+        let mut reg = FunctionRegistry::new();
+        reg.register("square", |p| {
+            let x = p.as_f64().ok_or("payload must be a number")?;
+            Ok(x * x)
+        });
+        let descriptions: Vec<TaskDescription> = (0..10)
+            .map(|i| TaskDescription::func("square", Json::Num(i as f64), 0.0))
+            .collect();
+        let res = run_agent(descriptions, reg);
+        for (i, t) in res.tasks.iter().enumerate() {
+            assert_eq!(t.state, TaskState::Done);
+            assert_eq!(t.result, Some((i * i) as f64));
+        }
+    }
+
+    #[test]
+    fn unregistered_function_fails_cleanly() {
+        let res = run_agent(
+            vec![TaskDescription::func("nope", Json::Null, 0.0)],
+            FunctionRegistry::new(),
+        );
+        assert_eq!(res.tasks[0].state, TaskState::Failed);
+        assert!(res.tasks[0].stderr.contains("not registered"));
+    }
+
+    #[test]
+    fn infeasible_task_fails_not_hangs() {
+        // 16 cores on an 8-core pilot, non-MPI → infeasible
+        let res = run_agent(
+            vec![TaskDescription::emulated("/bin/true", 1, 16, 0.0)],
+            FunctionRegistry::new(),
+        );
+        assert_eq!(res.tasks[0].state, TaskState::Failed);
+    }
+
+    #[test]
+    fn trace_has_full_pipeline_events() {
+        let res = run_agent(
+            vec![TaskDescription::emulated("/bin/true", 1, 1, 0.0)],
+            FunctionRegistry::new(),
+        );
+        for ev in [Ev::TaskDbPull, Ev::TaskSchedOk, Ev::TaskExecStart, Ev::TaskRunStop, Ev::TaskDone] {
+            assert!(
+                res.tracer.time_of(0, ev).is_some(),
+                "missing event {:?}",
+                ev
+            );
+        }
+    }
+}

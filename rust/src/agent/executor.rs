@@ -1,0 +1,275 @@
+//! The Agent's Executor (§III-A): derives placement + launch command for
+//! each scheduled task, spawns it via the configured launch method, tracks
+//! in-flight concurrency (incl. per-method caps and multi-DVM routing),
+//! and reports completions back to the Scheduler.
+
+use crate::launch::method::{method_for, LaunchMethod, LaunchSample, Placement};
+use crate::launch::prrte::{DvmMap, DvmPolicy, MAX_NODES_PER_DVM};
+use crate::task::TaskDescription;
+use crate::util::rng::Rng;
+
+use super::scheduler::Allocation;
+
+#[derive(Clone, Debug)]
+pub struct ExecutorConfig {
+    pub launch_method: String,
+    /// nodes of the pilot (used to build DVM partitions for prrte)
+    pub node_ids: Vec<u32>,
+    pub nodes_per_dvm: u32,
+    pub dvm_policy: DvmPolicy,
+}
+
+impl ExecutorConfig {
+    pub fn simple(launch_method: &str, n_nodes: u32) -> ExecutorConfig {
+        ExecutorConfig {
+            launch_method: launch_method.to_string(),
+            node_ids: (0..n_nodes).collect(),
+            nodes_per_dvm: MAX_NODES_PER_DVM,
+            dvm_policy: DvmPolicy::RoundRobin,
+        }
+    }
+}
+
+/// A launched (in-flight) task handle.
+#[derive(Clone, Debug)]
+pub struct LaunchTicket {
+    pub task_index: u32,
+    pub dvm: Option<u32>,
+    pub cmd: String,
+    pub sample: LaunchSample,
+}
+
+pub struct Executor {
+    method: Box<dyn LaunchMethod>,
+    dvms: Option<DvmMap>,
+    in_flight: u64,
+    launched_total: u64,
+    failed_total: u64,
+}
+
+impl Executor {
+    pub fn new(cfg: &ExecutorConfig) -> Result<Executor, String> {
+        let method = method_for(&cfg.launch_method, cfg.node_ids.len() as u32)?;
+        let dvms = if cfg.launch_method == "prrte" {
+            Some(DvmMap::partition(
+                &cfg.node_ids,
+                cfg.nodes_per_dvm,
+                cfg.dvm_policy,
+            ))
+        } else {
+            None
+        };
+        Ok(Executor {
+            method,
+            dvms,
+            in_flight: 0,
+            launched_total: 0,
+            failed_total: 0,
+        })
+    }
+
+    pub fn method_name(&self) -> &'static str {
+        self.method.name()
+    }
+
+    pub fn fs_ops_per_launch(&self) -> f64 {
+        self.method.fs_ops_per_launch()
+    }
+
+    pub fn in_flight(&self) -> u64 {
+        self.in_flight
+    }
+
+    pub fn launched_total(&self) -> u64 {
+        self.launched_total
+    }
+
+    pub fn failed_total(&self) -> u64 {
+        self.failed_total
+    }
+
+    /// Concurrency headroom (launch-method caps, e.g. jsrun ≈ 800).
+    pub fn can_accept(&self) -> bool {
+        match self.method.max_concurrent() {
+            Some(cap) => self.in_flight < cap as u64,
+            None => true,
+        }
+    }
+
+    /// Derive the placement of a task on its granted allocation.
+    pub fn place(&self, td: &TaskDescription, alloc: &Allocation) -> Placement {
+        Placement {
+            executable: td.executable.clone(),
+            arguments: td.arguments.clone(),
+            ranks: td.ranks,
+            cores_per_rank: td.cores_per_rank,
+            gpus_per_rank: td.gpus_per_rank,
+            nodes: alloc.nodes(),
+            uses_mpi: td.uses_mpi(),
+        }
+    }
+
+    /// Launch: route (possibly to a DVM), render the command, sample the
+    /// launcher overheads. The caller (DES harness or real-mode agent)
+    /// turns `sample` into delays or real spawns.
+    pub fn launch(
+        &mut self,
+        task_index: u32,
+        td: &TaskDescription,
+        alloc: &Allocation,
+        pilot_cores: u64,
+        rng: &mut Rng,
+    ) -> Result<LaunchTicket, String> {
+        if !self.can_accept() {
+            return Err(format!(
+                "{} at its concurrency cap ({} in flight)",
+                self.method.name(),
+                self.in_flight
+            ));
+        }
+        let placement = self.place(td, alloc);
+        self.method.check(&placement)?;
+        let dvm = match &mut self.dvms {
+            Some(map) => Some(map.route(td.dvm_tag)?),
+            None => None,
+        };
+        let sample = self.method.sample(rng, pilot_cores, self.in_flight);
+        let cmd = self.method.render_cmd(&placement);
+        self.in_flight += 1;
+        self.launched_total += 1;
+        if sample.failed {
+            self.failed_total += 1;
+        }
+        Ok(LaunchTicket {
+            task_index,
+            dvm,
+            cmd,
+            sample,
+        })
+    }
+
+    /// A launched task finished (successfully or not); frees the
+    /// concurrency slot.
+    pub fn complete(&mut self, _ticket: &LaunchTicket) {
+        assert!(self.in_flight > 0, "complete without launch");
+        self.in_flight -= 1;
+    }
+
+    /// Kill a DVM (fault injection / bootstrap failure). Returns the node
+    /// ids lost, so the scheduler can be drained of them.
+    pub fn fail_dvm(&mut self, dvm_id: u32) -> Vec<u32> {
+        if let Some(map) = &mut self.dvms {
+            let lost: Vec<u32> = map
+                .dvms
+                .get(dvm_id as usize)
+                .map(|d| d.nodes.clone())
+                .unwrap_or_default();
+            map.kill(dvm_id);
+            lost
+        } else {
+            Vec::new()
+        }
+    }
+
+    pub fn dvms(&self) -> Option<&DvmMap> {
+        self.dvms.as_ref()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::agent::scheduler::Slot;
+
+    fn alloc() -> Allocation {
+        Allocation {
+            slots: vec![Slot {
+                node_idx: 0,
+                cores: 4,
+                gpus: 0,
+            }],
+        }
+    }
+
+    fn td() -> TaskDescription {
+        TaskDescription::emulated("/bin/task", 1, 4, 60.0)
+    }
+
+    #[test]
+    fn launch_complete_cycle() {
+        let mut ex = Executor::new(&ExecutorConfig::simple("mpirun", 4)).unwrap();
+        let mut rng = Rng::new(1);
+        let t = ex.launch(0, &td(), &alloc(), 64, &mut rng).unwrap();
+        assert_eq!(ex.in_flight(), 1);
+        assert!(t.cmd.contains("mpirun"));
+        assert!(t.dvm.is_none());
+        ex.complete(&t);
+        assert_eq!(ex.in_flight(), 0);
+        assert_eq!(ex.launched_total(), 1);
+    }
+
+    #[test]
+    fn prrte_executor_routes_dvms() {
+        let mut ex = Executor::new(&ExecutorConfig {
+            launch_method: "prrte".into(),
+            node_ids: (0..1024).collect(),
+            nodes_per_dvm: 256,
+            dvm_policy: DvmPolicy::RoundRobin,
+        })
+        .unwrap();
+        let mut rng = Rng::new(2);
+        assert_eq!(ex.dvms().unwrap().dvms.len(), 4);
+        let dvm_seq: Vec<u32> = (0..8)
+            .map(|i| {
+                ex.launch(i, &td(), &alloc(), 43_008, &mut rng)
+                    .unwrap()
+                    .dvm
+                    .unwrap()
+            })
+            .collect();
+        assert_eq!(dvm_seq, vec![0, 1, 2, 3, 0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn dvm_failure_reroutes() {
+        let mut ex = Executor::new(&ExecutorConfig {
+            launch_method: "prrte".into(),
+            node_ids: (0..512).collect(),
+            nodes_per_dvm: 256,
+            dvm_policy: DvmPolicy::RoundRobin,
+        })
+        .unwrap();
+        let lost = ex.fail_dvm(0);
+        assert_eq!(lost.len(), 256);
+        let mut rng = Rng::new(3);
+        for i in 0..4 {
+            let t = ex.launch(i, &td(), &alloc(), 512 * 42, &mut rng).unwrap();
+            assert_eq!(t.dvm, Some(1));
+            ex.complete(&t);
+        }
+    }
+
+    #[test]
+    fn jsrun_cap_enforced() {
+        let mut ex = Executor::new(&ExecutorConfig::simple("jsrun", 4)).unwrap();
+        let mut rng = Rng::new(4);
+        let mut tickets = Vec::new();
+        for i in 0..800 {
+            tickets.push(ex.launch(i, &td(), &alloc(), 43_008, &mut rng).unwrap());
+        }
+        assert!(!ex.can_accept());
+        assert!(ex.launch(801, &td(), &alloc(), 43_008, &mut rng).is_err());
+        ex.complete(&tickets.pop().unwrap());
+        assert!(ex.can_accept());
+    }
+
+    #[test]
+    fn mpi_on_fork_rejected() {
+        let mut ex = Executor::new(&ExecutorConfig::simple("fork", 1)).unwrap();
+        let mut rng = Rng::new(5);
+        let mut mpi_task = td();
+        mpi_task.ranks = 2;
+        mpi_task.parallelism = crate::task::Parallelism::Mpi;
+        assert!(ex.launch(0, &mpi_task, &alloc(), 8, &mut rng).is_err());
+    }
+}

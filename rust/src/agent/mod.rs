@@ -1,0 +1,15 @@
+//! The Agent module (§III-A, Fig. 1): Stager-In → Scheduler → Executor →
+//! Stager-Out, connected by the mesh, executing tasks on the pilot's
+//! resources.
+
+pub mod agent;
+pub mod executor;
+pub mod partition;
+pub mod scheduler;
+pub mod stager;
+
+pub use agent::{Agent, AgentConfig};
+pub use executor::{Executor, ExecutorConfig};
+pub use partition::{MetaAllocation, MetaPolicy, MetaScheduler, Partition};
+pub use scheduler::{Allocation, ResourceRequest, Scheduler, Slot};
+pub use stager::Stager;

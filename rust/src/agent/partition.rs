@@ -1,0 +1,312 @@
+//! Partitioned Agent with a Metascheduler — the paper's stated path to
+//! exascale (§IV-D: "Resources partitioning is the way forward … We will
+//! partition RP Agent, add a Metascheduler component and deploy a
+//! Scheduler and Executor for each partition. The size and lifespan of
+//! each partition will be dynamic…"; Conclusions: "multiple levels of
+//! partitioning at the Agent, Scheduler and Executor level").
+//!
+//! Implemented here as a first-class feature: a pilot's nodes are split
+//! into partitions, each with its own `Continuous` scheduler (and, in the
+//! DES harness, its own launcher/FS lane); a `MetaScheduler` routes each
+//! task to a partition. Policies:
+//!   * `RoundRobin`  — uniform spray (the paper's multi-DVM behaviour);
+//!   * `LeastLoaded` — route to the partition with the most free cores;
+//!   * `BestFit`     — smallest partition that can host the request now
+//!     (falls back to least-loaded when none can).
+//!
+//! The ablation bench (`rust/benches/ablations.rs`, `rp experiment
+//! ablation`) quantifies the paper's prediction that "the aggregated
+//! performance of all the partitions will be higher than that of a
+//! single, machine-wide partition".
+
+use super::scheduler::{Allocation, Continuous, ResourceRequest, Scheduler};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MetaPolicy {
+    RoundRobin,
+    LeastLoaded,
+    BestFit,
+}
+
+/// One partition: a node range with its own scheduler instance.
+pub struct Partition {
+    pub id: u32,
+    /// global node id of this partition's first node
+    pub node_offset: u32,
+    pub n_nodes: u32,
+    pub scheduler: Continuous,
+    pub in_flight: u64,
+}
+
+/// An allocation tagged with the partition that granted it.
+#[derive(Clone, Debug)]
+pub struct MetaAllocation {
+    pub partition: u32,
+    /// slots with PARTITION-LOCAL node indices (offset applied in
+    /// `global_nodes`)
+    pub alloc: Allocation,
+}
+
+impl MetaAllocation {
+    /// Node ids in the pilot-global namespace.
+    pub fn global_nodes(&self, parts: &[Partition]) -> Vec<u32> {
+        let off = parts[self.partition as usize].node_offset;
+        self.alloc.slots.iter().map(|s| off + s.node_idx).collect()
+    }
+}
+
+pub struct MetaScheduler {
+    parts: Vec<Partition>,
+    policy: MetaPolicy,
+    rr_next: usize,
+}
+
+impl MetaScheduler {
+    /// Split `n_nodes` into `n_parts` near-equal partitions.
+    pub fn new(
+        n_nodes: u32,
+        n_parts: u32,
+        cores_per_node: u32,
+        gpus_per_node: u32,
+        policy: MetaPolicy,
+    ) -> MetaScheduler {
+        assert!(n_parts > 0 && n_parts <= n_nodes);
+        let base = n_nodes / n_parts;
+        let extra = n_nodes % n_parts;
+        let mut parts = Vec::with_capacity(n_parts as usize);
+        let mut offset = 0;
+        for id in 0..n_parts {
+            let size = base + if id < extra { 1 } else { 0 };
+            parts.push(Partition {
+                id,
+                node_offset: offset,
+                n_nodes: size,
+                scheduler: Continuous::new(size, cores_per_node, gpus_per_node),
+                in_flight: 0,
+            });
+            offset += size;
+        }
+        MetaScheduler {
+            parts,
+            policy,
+            rr_next: 0,
+        }
+    }
+
+    pub fn n_partitions(&self) -> usize {
+        self.parts.len()
+    }
+
+    pub fn partitions(&self) -> &[Partition] {
+        &self.parts
+    }
+
+    pub fn free_cores(&self) -> u64 {
+        self.parts.iter().map(|p| p.scheduler.free_cores()).sum()
+    }
+
+    pub fn total_cores(&self) -> u64 {
+        self.parts.iter().map(|p| p.scheduler.total_cores()).sum()
+    }
+
+    /// Can ANY partition ever host this request?
+    pub fn feasible(&self, req: &ResourceRequest) -> bool {
+        self.parts.iter().any(|p| p.scheduler.feasible(req))
+    }
+
+    /// Route + allocate. None when no partition can host it right now.
+    pub fn try_allocate(&mut self, req: &ResourceRequest) -> Option<MetaAllocation> {
+        let n = self.parts.len();
+        let order: Vec<usize> = match self.policy {
+            MetaPolicy::RoundRobin => {
+                let start = self.rr_next % n;
+                self.rr_next += 1;
+                (0..n).map(|k| (start + k) % n).collect()
+            }
+            MetaPolicy::LeastLoaded => {
+                let mut idx: Vec<usize> = (0..n).collect();
+                idx.sort_by_key(|&i| std::cmp::Reverse(self.parts[i].scheduler.free_cores()));
+                idx
+            }
+            MetaPolicy::BestFit => {
+                // smallest free pool that still fits, so big partitions
+                // stay open for big tasks
+                let mut idx: Vec<usize> = (0..n).collect();
+                idx.sort_by_key(|&i| self.parts[i].scheduler.free_cores());
+                idx
+            }
+        };
+        for i in order {
+            if let Some(alloc) = self.parts[i].scheduler.try_allocate(req) {
+                self.parts[i].in_flight += 1;
+                return Some(MetaAllocation {
+                    partition: i as u32,
+                    alloc,
+                });
+            }
+        }
+        None
+    }
+
+    pub fn release(&mut self, m: &MetaAllocation) {
+        let p = &mut self.parts[m.partition as usize];
+        p.scheduler.release(&m.alloc);
+        assert!(p.in_flight > 0, "release without allocate");
+        p.in_flight -= 1;
+    }
+
+    /// Dynamic repartitioning (the paper's "size and lifespan of each
+    /// partition will be dynamic"): an idle partition can be merged into a
+    /// neighbour. Returns true if a merge happened. Only fully-idle
+    /// partitions are merged (no live allocations to migrate).
+    pub fn merge_idle(&mut self) -> bool {
+        if self.parts.len() < 2 {
+            return false;
+        }
+        // find an idle partition adjacent (in node space) to its successor
+        for i in 0..self.parts.len() - 1 {
+            let idle_i = self.parts[i].in_flight == 0
+                && self.parts[i].scheduler.free_cores() == self.parts[i].scheduler.total_cores();
+            let idle_j = self.parts[i + 1].in_flight == 0
+                && self.parts[i + 1].scheduler.free_cores()
+                    == self.parts[i + 1].scheduler.total_cores();
+            if idle_i && idle_j {
+                let cores_per_node = self.parts[i].scheduler.cores_per_node();
+                let gpus_per_node = self.parts[i].scheduler.gpus_per_node();
+                let merged_nodes = self.parts[i].n_nodes + self.parts[i + 1].n_nodes;
+                let offset = self.parts[i].node_offset;
+                let id = self.parts[i].id;
+                self.parts[i] = Partition {
+                    id,
+                    node_offset: offset,
+                    n_nodes: merged_nodes,
+                    scheduler: Continuous::new(merged_nodes, cores_per_node, gpus_per_node),
+                    in_flight: 0,
+                };
+                self.parts.remove(i + 1);
+                return true;
+            }
+        }
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(cores: u32) -> ResourceRequest {
+        ResourceRequest {
+            ranks: 1,
+            cores_per_rank: cores,
+            gpus_per_rank: 0,
+            uses_mpi: false,
+            node_tag: None,
+        }
+    }
+
+    #[test]
+    fn partitions_cover_all_nodes_exactly() {
+        let m = MetaScheduler::new(4097, 16, 42, 6, MetaPolicy::RoundRobin);
+        assert_eq!(m.n_partitions(), 16);
+        let total: u32 = m.partitions().iter().map(|p| p.n_nodes).sum();
+        assert_eq!(total, 4097);
+        // offsets are contiguous and non-overlapping
+        let mut expect = 0;
+        for p in m.partitions() {
+            assert_eq!(p.node_offset, expect);
+            expect += p.n_nodes;
+        }
+        assert_eq!(m.total_cores(), 4097 * 42);
+    }
+
+    #[test]
+    fn round_robin_sprays_partitions() {
+        let mut m = MetaScheduler::new(8, 4, 4, 0, MetaPolicy::RoundRobin);
+        let parts: Vec<u32> = (0..4)
+            .map(|_| m.try_allocate(&req(1)).unwrap().partition)
+            .collect();
+        assert_eq!(parts, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn least_loaded_balances() {
+        let mut m = MetaScheduler::new(4, 2, 8, 0, MetaPolicy::LeastLoaded);
+        // load partition 0 heavily
+        let a = m.try_allocate(&req(8)).unwrap();
+        assert_eq!(a.partition, 0);
+        // next goes to the emptier partition 1
+        assert_eq!(m.try_allocate(&req(1)).unwrap().partition, 1);
+    }
+
+    #[test]
+    fn best_fit_preserves_big_partitions() {
+        let mut m = MetaScheduler::new(6, 2, 8, 0, MetaPolicy::BestFit);
+        // drain partition 1 a bit so free pools differ
+        let _x = m.try_allocate(&req(8));
+        // small task goes to the partition with LESS free space
+        let frees: Vec<u64> = m.partitions().iter().map(|p| p.scheduler.free_cores()).collect();
+        let a = m.try_allocate(&req(1)).unwrap();
+        let smaller = if frees[0] < frees[1] { 0 } else { 1 };
+        assert_eq!(a.partition, smaller as u32);
+    }
+
+    #[test]
+    fn global_node_translation() {
+        let mut m = MetaScheduler::new(8, 4, 4, 0, MetaPolicy::RoundRobin);
+        let a0 = m.try_allocate(&req(4)).unwrap();
+        let a1 = m.try_allocate(&req(4)).unwrap();
+        let g0 = a0.global_nodes(m.partitions());
+        let g1 = a1.global_nodes(m.partitions());
+        assert_eq!(g0, vec![0]);
+        assert_eq!(g1, vec![2]); // partition 1 starts at node 2
+    }
+
+    #[test]
+    fn release_conserves_and_tracks_inflight() {
+        let mut m = MetaScheduler::new(8, 2, 4, 0, MetaPolicy::LeastLoaded);
+        let total = m.total_cores();
+        let allocs: Vec<_> = (0..8).map(|_| m.try_allocate(&req(4)).unwrap()).collect();
+        assert_eq!(m.free_cores(), 0);
+        for a in &allocs {
+            m.release(a);
+        }
+        assert_eq!(m.free_cores(), total);
+        assert!(m.partitions().iter().all(|p| p.in_flight == 0));
+    }
+
+    #[test]
+    fn task_bigger_than_partition_is_infeasible() {
+        let m = MetaScheduler::new(8, 4, 4, 0, MetaPolicy::RoundRobin);
+        // 2 nodes per partition = 8 cores; a 12-core non-MPI task fits nowhere
+        assert!(!m.feasible(&req(12)));
+        // …but fits a 2-partition split machine
+        let m2 = MetaScheduler::new(8, 2, 4, 0, MetaPolicy::RoundRobin);
+        let r = ResourceRequest {
+            ranks: 3,
+            cores_per_rank: 4,
+            gpus_per_rank: 0,
+            uses_mpi: true,
+            node_tag: None,
+        };
+        assert!(m2.feasible(&r));
+    }
+
+    #[test]
+    fn merge_idle_partitions() {
+        let mut m = MetaScheduler::new(8, 4, 4, 0, MetaPolicy::RoundRobin);
+        assert_eq!(m.n_partitions(), 4);
+        assert!(m.merge_idle());
+        assert_eq!(m.n_partitions(), 3);
+        let total: u32 = m.partitions().iter().map(|p| p.n_nodes).sum();
+        assert_eq!(total, 8);
+        // busy partitions are never merged
+        let _hold = m.try_allocate(&req(1)).unwrap();
+        while m.merge_idle() {}
+        assert!(m.n_partitions() >= 2);
+        assert_eq!(
+            m.partitions().iter().map(|p| p.n_nodes).sum::<u32>(),
+            8
+        );
+    }
+}

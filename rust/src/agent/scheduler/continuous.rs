@@ -1,0 +1,363 @@
+//! The "Continuous" scheduler: nodes organized as a continuum.
+//!
+//! Placement rules (matching RP's semantics):
+//!  * non-MPI tasks (threads/scalar/multi-process) must fit one node;
+//!  * MPI ranks are packed rank-by-rank onto nodes with free capacity,
+//!    preferring topologically close (consecutive) nodes "to minimize
+//!    communication overheads" (§III-A);
+//!  * GPU ranks take node GPUs alongside cores.
+//!
+//! Performance: a rotating cursor makes the common homogeneous-workload
+//! case O(1) amortized per allocation; aggregate free counters give O(1)
+//! rejection when the pilot is full. See EXPERIMENTS.md §Perf.
+
+use super::{Allocation, ResourceRequest, Scheduler, Slot};
+
+#[derive(Clone, Copy, Debug)]
+struct NodeFree {
+    cores: u32,
+    gpus: u32,
+}
+
+pub struct Continuous {
+    cores_per_node: u32,
+    gpus_per_node: u32,
+    free: Vec<NodeFree>,
+    free_cores: u64,
+    free_gpus: u64,
+    cursor: usize,
+}
+
+impl Continuous {
+    pub fn new(n_nodes: u32, cores_per_node: u32, gpus_per_node: u32) -> Continuous {
+        assert!(n_nodes > 0 && cores_per_node > 0);
+        Continuous {
+            cores_per_node,
+            gpus_per_node,
+            free: vec![
+                NodeFree {
+                    cores: cores_per_node,
+                    gpus: gpus_per_node,
+                };
+                n_nodes as usize
+            ],
+            free_cores: n_nodes as u64 * cores_per_node as u64,
+            free_gpus: n_nodes as u64 * gpus_per_node as u64,
+            cursor: 0,
+        }
+    }
+
+    fn n_nodes(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn cores_per_node(&self) -> u32 {
+        self.cores_per_node
+    }
+
+    pub fn gpus_per_node(&self) -> u32 {
+        self.gpus_per_node
+    }
+
+    /// Permanently remove a node's remaining capacity (DVM failure: the
+    /// nodes are lost to the pilot; RP's fault tolerance keeps executing
+    /// on the remaining resources — §IV-D). Returns (cores, gpus) drained.
+    pub fn drain_node(&mut self, node: u32) -> (u32, u32) {
+        let nf = &mut self.free[node as usize];
+        let c = nf.cores;
+        let g = nf.gpus;
+        nf.cores = 0;
+        nf.gpus = 0;
+        self.free_cores -= c as u64;
+        self.free_gpus -= g as u64;
+        (c, g)
+    }
+
+    /// Allocate the whole request on one specific node (Tagged pinning).
+    pub fn try_allocate_on_node(
+        &mut self,
+        node: u32,
+        req: &ResourceRequest,
+    ) -> Option<Allocation> {
+        let cores = req.cores();
+        let gpus = req.gpus();
+        if cores > self.cores_per_node as u64 || gpus > self.gpus_per_node as u64 {
+            return None;
+        }
+        let nf = &mut self.free[node as usize];
+        if (nf.cores as u64) < cores || (nf.gpus as u64) < gpus {
+            return None;
+        }
+        nf.cores -= cores as u32;
+        nf.gpus -= gpus as u32;
+        self.free_cores -= cores;
+        self.free_gpus -= gpus;
+        Some(Allocation {
+            slots: vec![Slot {
+                node_idx: node,
+                cores: cores as u32,
+                gpus: gpus as u32,
+            }],
+        })
+    }
+
+    /// Grant `cores`/`gpus` on a single node with enough room, scanning
+    /// from the cursor.
+    fn alloc_single_node(&mut self, cores: u32, gpus: u32) -> Option<Slot> {
+        let n = self.n_nodes();
+        for off in 0..n {
+            let i = (self.cursor + off) % n;
+            let nf = &mut self.free[i];
+            if nf.cores >= cores && nf.gpus >= gpus {
+                nf.cores -= cores;
+                nf.gpus -= gpus;
+                self.free_cores -= cores as u64;
+                self.free_gpus -= gpus as u64;
+                self.cursor = if nf.cores == 0 { (i + 1) % n } else { i };
+                return Some(Slot {
+                    node_idx: i as u32,
+                    cores,
+                    gpus,
+                });
+            }
+        }
+        None
+    }
+
+    /// Pack `ranks` ranks of (cpr cores, gpr gpus) onto nodes, preferring
+    /// consecutive nodes starting at the cursor. All-or-nothing.
+    fn alloc_multi_node(&mut self, req: &ResourceRequest) -> Option<Allocation> {
+        let n = self.n_nodes();
+        let cpr = req.cores_per_rank;
+        let gpr = req.gpus_per_rank;
+        let mut remaining = req.ranks;
+        let mut staged: Vec<Slot> = Vec::new();
+
+        for off in 0..n {
+            if remaining == 0 {
+                break;
+            }
+            let i = (self.cursor + off) % n;
+            let nf = self.free[i];
+            let by_cores = nf.cores / cpr;
+            let by_gpus = if gpr == 0 { u32::MAX } else { nf.gpus / gpr };
+            let fit = by_cores.min(by_gpus).min(remaining);
+            if fit > 0 {
+                staged.push(Slot {
+                    node_idx: i as u32,
+                    cores: fit * cpr,
+                    gpus: fit * gpr,
+                });
+                remaining -= fit;
+            }
+        }
+
+        if remaining > 0 {
+            return None; // all-or-nothing: do not commit partial packs
+        }
+        // commit
+        for s in &staged {
+            let nf = &mut self.free[s.node_idx as usize];
+            nf.cores -= s.cores;
+            nf.gpus -= s.gpus;
+            self.free_cores -= s.cores as u64;
+            self.free_gpus -= s.gpus as u64;
+        }
+        if let Some(last) = staged.last() {
+            let i = last.node_idx as usize;
+            self.cursor = if self.free[i].cores == 0 {
+                (i + 1) % n
+            } else {
+                i
+            };
+        }
+        Some(Allocation { slots: staged })
+    }
+}
+
+impl Scheduler for Continuous {
+    fn name(&self) -> &'static str {
+        "continuous"
+    }
+
+    fn try_allocate(&mut self, req: &ResourceRequest) -> Option<Allocation> {
+        if !self.feasible(req) {
+            return None;
+        }
+        // fast reject on aggregate counters
+        if req.cores() > self.free_cores || req.gpus() > self.free_gpus {
+            return None;
+        }
+        if !req.uses_mpi || (req.cores() <= self.cores_per_node as u64 && req.gpus() <= self.gpus_per_node as u64)
+        {
+            // single-node placement (also used for small MPI tasks, which
+            // RP co-locates when possible)
+            self.alloc_single_node(req.cores() as u32, req.gpus() as u32)
+                .map(|s| Allocation { slots: vec![s] })
+        } else {
+            self.alloc_multi_node(req)
+        }
+    }
+
+    fn release(&mut self, alloc: &Allocation) {
+        for s in &alloc.slots {
+            let nf = &mut self.free[s.node_idx as usize];
+            nf.cores += s.cores;
+            nf.gpus += s.gpus;
+            assert!(
+                nf.cores <= self.cores_per_node && nf.gpus <= self.gpus_per_node,
+                "release over-fills node {} ({}c/{}g)",
+                s.node_idx,
+                nf.cores,
+                nf.gpus
+            );
+            self.free_cores += s.cores as u64;
+            self.free_gpus += s.gpus as u64;
+        }
+    }
+
+    fn free_cores(&self) -> u64 {
+        self.free_cores
+    }
+    fn free_gpus(&self) -> u64 {
+        self.free_gpus
+    }
+    fn total_cores(&self) -> u64 {
+        self.n_nodes() as u64 * self.cores_per_node as u64
+    }
+    fn total_gpus(&self) -> u64 {
+        self.n_nodes() as u64 * self.gpus_per_node as u64
+    }
+
+    fn feasible(&self, req: &ResourceRequest) -> bool {
+        if req.ranks == 0 || req.cores_per_rank == 0 {
+            return false;
+        }
+        // each rank must fit a node
+        if req.cores_per_rank > self.cores_per_node || req.gpus_per_rank > self.gpus_per_node {
+            return false;
+        }
+        // non-MPI tasks must fit one node
+        if !req.uses_mpi
+            && (req.cores() > self.cores_per_node as u64 || req.gpus() > self.gpus_per_node as u64)
+        {
+            return false;
+        }
+        // rank-packing granularity: ranks are never split across nodes, so
+        // capacity is per-node whole ranks × nodes (not raw core count)
+        let by_cores = self.cores_per_node / req.cores_per_rank;
+        let by_gpus = if req.gpus_per_rank == 0 {
+            u32::MAX
+        } else {
+            self.gpus_per_node / req.gpus_per_rank
+        };
+        let ranks_per_node = by_cores.min(by_gpus) as u64;
+        req.ranks as u64 <= ranks_per_node * self.n_nodes() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(ranks: u32, cpr: u32, gpr: u32, mpi: bool) -> ResourceRequest {
+        ResourceRequest {
+            ranks,
+            cores_per_rank: cpr,
+            gpus_per_rank: gpr,
+            uses_mpi: mpi,
+            node_tag: None,
+        }
+    }
+
+    #[test]
+    fn single_node_packing() {
+        let mut s = Continuous::new(2, 8, 0);
+        // four 4-core tasks fill both nodes
+        let allocs: Vec<_> = (0..4).map(|_| s.try_allocate(&req(1, 4, 0, false)).unwrap()).collect();
+        assert_eq!(s.free_cores(), 0);
+        assert!(s.try_allocate(&req(1, 1, 0, false)).is_none());
+        for a in &allocs {
+            s.release(a);
+        }
+        assert_eq!(s.free_cores(), 16);
+    }
+
+    #[test]
+    fn non_mpi_cannot_span_nodes() {
+        let mut s = Continuous::new(4, 8, 0);
+        assert!(!s.feasible(&req(1, 16, 0, false)));
+        assert!(s.try_allocate(&req(1, 16, 0, false)).is_none());
+        // but an MPI task of the same size can
+        let a = s.try_allocate(&req(2, 8, 0, true)).unwrap();
+        assert_eq!(a.cores(), 16);
+        assert_eq!(a.slots.len(), 2);
+    }
+
+    #[test]
+    fn mpi_prefers_consecutive_nodes() {
+        let mut s = Continuous::new(8, 4, 0);
+        let a = s.try_allocate(&req(6, 2, 0, true)).unwrap();
+        let nodes = a.nodes();
+        // 6 ranks × 2 cores = 12 cores over 3 full nodes, consecutive
+        assert_eq!(nodes, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn gpu_constrained_allocation() {
+        // summit-like nodes
+        let mut s = Continuous::new(2, 42, 6);
+        // 12 single-gpu ranks exhaust GPUs before cores
+        let a = s.try_allocate(&req(12, 1, 1, true)).unwrap();
+        assert_eq!(a.gpus(), 12);
+        assert_eq!(s.free_gpus(), 0);
+        assert!(s.try_allocate(&req(1, 1, 1, false)).is_none());
+        assert!(s.try_allocate(&req(1, 1, 0, false)).is_some());
+        s.release(&a);
+        assert_eq!(s.free_gpus(), 12);
+    }
+
+    #[test]
+    fn all_or_nothing_multinode() {
+        let mut s = Continuous::new(4, 4, 0);
+        let _hold = s.try_allocate(&req(3, 4, 0, true)).unwrap(); // 3 nodes full
+        // a 2-node task cannot fit (only 1 node free) and must not leak
+        let before = s.free_cores();
+        assert!(s.try_allocate(&req(2, 4, 0, true)).is_none());
+        assert_eq!(s.free_cores(), before);
+    }
+
+    #[test]
+    fn infeasible_oversized_rank() {
+        let s = Continuous::new(4, 8, 1);
+        assert!(!s.feasible(&req(1, 9, 0, true))); // rank > node cores
+        assert!(!s.feasible(&req(1, 1, 2, true))); // rank > node gpus
+        assert!(!s.feasible(&req(0, 1, 0, false)));
+        assert!(!s.feasible(&req(64, 8, 0, true))); // bigger than pilot
+    }
+
+    #[test]
+    fn cursor_rotates_for_throughput() {
+        let mut s = Continuous::new(1024, 16, 0);
+        // thousands of single-node tasks: should spread over nodes
+        let mut allocs = Vec::new();
+        for _ in 0..1024 {
+            allocs.push(s.try_allocate(&req(1, 16, 0, false)).unwrap());
+        }
+        assert_eq!(s.free_cores(), 0);
+        // all 1024 nodes used exactly once
+        let mut nodes: Vec<u32> = allocs.iter().map(|a| a.slots[0].node_idx).collect();
+        nodes.sort();
+        nodes.dedup();
+        assert_eq!(nodes.len(), 1024);
+    }
+
+    #[test]
+    #[should_panic(expected = "over-fills")]
+    fn double_release_detected() {
+        let mut s = Continuous::new(1, 4, 0);
+        let a = s.try_allocate(&req(1, 4, 0, false)).unwrap();
+        s.release(&a);
+        s.release(&a); // over-fill panics
+    }
+}

@@ -1,0 +1,125 @@
+//! The "Tagged" scheduler: pins task execution to specific nodes
+//! (§III-A: "'Tagged' to pin the execution of tasks on specific nodes").
+//! Tasks carrying a `node_tag` are placed on `nodes[tag % n]`; untagged
+//! tasks fall back to Continuous placement over the same free map.
+
+use super::{Allocation, Continuous, ResourceRequest, Scheduler};
+
+pub struct Tagged {
+    inner: Continuous,
+    n_nodes: u32,
+}
+
+impl Tagged {
+    pub fn new(n_nodes: u32, cores_per_node: u32, gpus_per_node: u32) -> Tagged {
+        Tagged {
+            inner: Continuous::new(n_nodes, cores_per_node, gpus_per_node),
+            n_nodes,
+        }
+    }
+
+    /// The node a tag resolves to.
+    pub fn resolve_tag(&self, tag: u32) -> u32 {
+        tag % self.n_nodes
+    }
+}
+
+impl Scheduler for Tagged {
+    fn name(&self) -> &'static str {
+        "tagged"
+    }
+
+    fn try_allocate(&mut self, req: &ResourceRequest) -> Option<Allocation> {
+        match req.node_tag {
+            None => self.inner.try_allocate(req),
+            Some(tag) => {
+                let node = self.resolve_tag(tag);
+                // pinned tasks must fit the tagged node
+                if req.cores() > u64::from(u32::MAX) {
+                    return None;
+                }
+                let alloc = self.inner.try_allocate_on_node(node, req)?;
+                Some(alloc)
+            }
+        }
+    }
+
+    fn release(&mut self, alloc: &Allocation) {
+        self.inner.release(alloc)
+    }
+
+    fn free_cores(&self) -> u64 {
+        self.inner.free_cores()
+    }
+    fn free_gpus(&self) -> u64 {
+        self.inner.free_gpus()
+    }
+    fn total_cores(&self) -> u64 {
+        self.inner.total_cores()
+    }
+    fn total_gpus(&self) -> u64 {
+        self.inner.total_gpus()
+    }
+
+    fn feasible(&self, req: &ResourceRequest) -> bool {
+        match req.node_tag {
+            None => self.inner.feasible(req),
+            // a pinned task must fit one node
+            Some(_) => {
+                req.ranks > 0
+                    && req.cores_per_rank > 0
+                    && req.cores() <= self.inner.cores_per_node() as u64
+                    && req.gpus() <= self.inner.gpus_per_node() as u64
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(tag: Option<u32>, cores: u32) -> ResourceRequest {
+        ResourceRequest {
+            ranks: 1,
+            cores_per_rank: cores,
+            gpus_per_rank: 0,
+            uses_mpi: false,
+            node_tag: tag,
+        }
+    }
+
+    #[test]
+    fn tagged_tasks_land_on_their_node() {
+        let mut s = Tagged::new(8, 4, 0);
+        for tag in [0u32, 3, 7, 11] {
+            let a = s.try_allocate(&req(Some(tag), 1)).unwrap();
+            assert_eq!(a.slots[0].node_idx, tag % 8, "tag {tag}");
+        }
+    }
+
+    #[test]
+    fn pinned_node_full_blocks_only_that_tag() {
+        let mut s = Tagged::new(2, 4, 0);
+        let _a = s.try_allocate(&req(Some(0), 4)).unwrap(); // node 0 full
+        assert!(s.try_allocate(&req(Some(0), 1)).is_none());
+        assert!(s.try_allocate(&req(Some(1), 1)).is_some());
+        assert!(s.try_allocate(&req(None, 1)).is_some()); // untagged ok
+    }
+
+    #[test]
+    fn untagged_fallback_is_continuous() {
+        let mut s = Tagged::new(4, 4, 0);
+        let a = s.try_allocate(&req(None, 4)).unwrap();
+        assert_eq!(a.cores(), 4);
+        s.release(&a);
+        assert_eq!(s.free_cores(), 16);
+    }
+
+    #[test]
+    fn oversized_pinned_task_infeasible() {
+        let s = Tagged::new(4, 4, 0);
+        assert!(!s.feasible(&req(Some(1), 5)));
+        assert!(s.feasible(&req(Some(1), 4)));
+    }
+}

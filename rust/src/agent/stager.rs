@@ -1,0 +1,131 @@
+//! Stager components (§III-A: "two Stagers, one for input and one for
+//! output data"; §III-B: transfers via (gsi)-scp/sftp/Globus/local fs).
+//!
+//! DES mode models transfer time (latency + size/bandwidth per directive);
+//! real mode performs local filesystem copies.
+
+use crate::task::StagingDirective;
+
+#[derive(Clone, Copy, Debug)]
+pub struct StagerModel {
+    /// per-directive fixed latency (protocol round trips)
+    pub latency_s: f64,
+    /// bytes per second
+    pub bandwidth: f64,
+}
+
+impl Default for StagerModel {
+    fn default() -> Self {
+        StagerModel {
+            latency_s: 0.05,
+            bandwidth: 500.0e6, // 500 MB/s shared-fs-ish
+        }
+    }
+}
+
+pub struct Stager {
+    pub model: StagerModel,
+    bytes_moved: u64,
+    directives_done: u64,
+}
+
+impl Stager {
+    pub fn new(model: StagerModel) -> Stager {
+        Stager {
+            model,
+            bytes_moved: 0,
+            directives_done: 0,
+        }
+    }
+
+    /// Modeled transfer time for a set of directives (serial per task, as
+    /// RP stages a task's files in order).
+    pub fn stage_time(&mut self, directives: &[StagingDirective]) -> f64 {
+        let mut t = 0.0;
+        for d in directives {
+            t += self.model.latency_s + d.size_bytes as f64 / self.model.bandwidth;
+            self.bytes_moved += d.size_bytes;
+            self.directives_done += 1;
+        }
+        t
+    }
+
+    /// Real-mode staging: local filesystem copy. Creates parent dirs.
+    pub fn stage_real(&mut self, directives: &[StagingDirective]) -> std::io::Result<()> {
+        for d in directives {
+            if let Some(parent) = std::path::Path::new(&d.target).parent() {
+                std::fs::create_dir_all(parent)?;
+            }
+            let n = std::fs::copy(&d.source, &d.target)?;
+            self.bytes_moved += n;
+            self.directives_done += 1;
+        }
+        Ok(())
+    }
+
+    pub fn stats(&self) -> (u64, u64) {
+        (self.bytes_moved, self.directives_done)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dir(bytes: u64) -> StagingDirective {
+        StagingDirective {
+            source: "in.dat".into(),
+            target: "out.dat".into(),
+            size_bytes: bytes,
+        }
+    }
+
+    #[test]
+    fn stage_time_scales_with_size() {
+        let mut s = Stager::new(StagerModel {
+            latency_s: 0.1,
+            bandwidth: 100.0,
+        });
+        let t = s.stage_time(&[dir(1000)]);
+        assert!((t - 10.1).abs() < 1e-9);
+        let t2 = s.stage_time(&[dir(100), dir(100)]);
+        assert!((t2 - 2.2).abs() < 1e-9);
+        assert_eq!(s.stats(), (1200, 3));
+    }
+
+    #[test]
+    fn empty_directives_are_free() {
+        let mut s = Stager::new(StagerModel::default());
+        assert_eq!(s.stage_time(&[]), 0.0);
+    }
+
+    #[test]
+    fn real_staging_copies_files() {
+        let dirp = std::env::temp_dir().join(format!("rp_stager_test_{}", std::process::id()));
+        let src = dirp.join("src.txt");
+        let dst = dirp.join("sub").join("dst.txt");
+        std::fs::create_dir_all(&dirp).unwrap();
+        std::fs::write(&src, b"payload").unwrap();
+        let mut s = Stager::new(StagerModel::default());
+        s.stage_real(&[StagingDirective {
+            source: src.to_str().unwrap().into(),
+            target: dst.to_str().unwrap().into(),
+            size_bytes: 7,
+        }])
+        .unwrap();
+        assert_eq!(std::fs::read(&dst).unwrap(), b"payload");
+        std::fs::remove_dir_all(&dirp).unwrap();
+    }
+
+    #[test]
+    fn real_staging_missing_source_errors() {
+        let mut s = Stager::new(StagerModel::default());
+        assert!(s
+            .stage_real(&[StagingDirective {
+                source: "/nonexistent/file".into(),
+                target: "/tmp/never".into(),
+                size_bytes: 0,
+            }])
+            .is_err());
+    }
+}

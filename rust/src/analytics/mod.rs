@@ -1,0 +1,58 @@
+//! RADICAL-Analytics equivalent (§III-D): turns traces into the paper's
+//! metrics — TTX (time-to-execution), RU (resource utilization) and OVH
+//! (agent overhead) — and into the series behind Figs. 7–10.
+
+pub mod session;
+pub mod timeline;
+pub mod timeseries;
+
+pub use session::{load_trace_csv, load_trace_file};
+pub use timeline::{ru_breakdown, task_phases, RuBreakdown, RuTimeline, TaskPhases, UtilState};
+pub use timeseries::TimeSeries;
+
+use crate::tracer::{Ev, Tracer};
+
+/// Workload time-to-execution: from the first task entering the agent to
+/// the last task leaving execution (the paper's TTX, measured on the
+/// Agent as in §IV-A).
+pub fn ttx(trace: &Tracer) -> Option<f64> {
+    let first = trace
+        .events()
+        .iter()
+        .filter(|e| matches!(e.ev, Ev::TaskDbPull | Ev::TaskSchedQueue))
+        .map(|e| e.t)
+        .fold(f64::INFINITY, f64::min);
+    let last = trace
+        .events()
+        .iter()
+        .filter(|e| matches!(e.ev, Ev::TaskRunStop | Ev::TaskDone | Ev::TaskFailed))
+        .map(|e| e.t)
+        .fold(f64::NEG_INFINITY, f64::max);
+    if first.is_finite() && last.is_finite() && last >= first {
+        Some(last - first)
+    } else {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tracer::Tracer;
+
+    #[test]
+    fn ttx_spans_first_pull_to_last_stop() {
+        let mut tr = Tracer::new(true);
+        tr.rec(10.0, 0, Ev::TaskDbPull);
+        tr.rec(12.0, 1, Ev::TaskDbPull);
+        tr.rec(100.0, 0, Ev::TaskRunStop);
+        tr.rec(110.0, 1, Ev::TaskRunStop);
+        assert_eq!(ttx(&tr), Some(100.0));
+    }
+
+    #[test]
+    fn ttx_none_without_events() {
+        let tr = Tracer::new(true);
+        assert_eq!(ttx(&tr), None);
+    }
+}

@@ -1,0 +1,131 @@
+//! RADICAL-Analytics "session" loading: parse a trace CSV (the format
+//! `Tracer::to_csv` emits) back into a `Tracer`, so postmortem analysis
+//! can run on dumps from any prior run — exactly how the paper's analysis
+//! pipeline consumed RP traces (§III-D).
+
+use crate::tracer::{Ev, TraceEvent, Tracer};
+
+fn ev_parse(name: &str) -> Option<Ev> {
+    use Ev::*;
+    Some(match name {
+        "pilot_submitted" => PilotSubmitted,
+        "pilot_active" => PilotActive,
+        "agent_bootstrap_done" => AgentBootstrapDone,
+        "dvm_ready" => DvmReady,
+        "dvm_failed" => DvmFailed,
+        "pilot_done" => PilotDone,
+        "task_db_pull" => TaskDbPull,
+        "task_stage_in_start" => TaskStageInStart,
+        "task_stage_in_stop" => TaskStageInStop,
+        "task_sched_queue" => TaskSchedQueue,
+        "task_sched_ok" => TaskSchedOk,
+        "task_exec_start" => TaskExecStart,
+        "task_run_start" => TaskRunStart,
+        "task_run_stop" => TaskRunStop,
+        "task_spawn_return" => TaskSpawnReturn,
+        "task_stage_out_start" => TaskStageOutStart,
+        "task_stage_out_stop" => TaskStageOutStop,
+        "task_done" => TaskDone,
+        "task_failed" => TaskFailed,
+        "master_ready" => MasterReady,
+        "worker_ready" => WorkerReady,
+        _ => return None,
+    })
+}
+
+/// Parse trace CSV text. Lines that do not parse are reported as errors
+/// with their line number; the header line is required.
+pub fn load_trace_csv(text: &str) -> Result<Tracer, String> {
+    let mut lines = text.lines();
+    match lines.next() {
+        Some(h) if h.trim() == "time,entity,event" => {}
+        other => return Err(format!("bad or missing header: {other:?}")),
+    }
+    let mut tracer = Tracer::new(true);
+    for (lineno, line) in lines.enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let mut parts = line.splitn(3, ',');
+        let (t, entity, ev) = (
+            parts.next().ok_or_else(|| format!("line {}: missing time", lineno + 2))?,
+            parts
+                .next()
+                .ok_or_else(|| format!("line {}: missing entity", lineno + 2))?,
+            parts
+                .next()
+                .ok_or_else(|| format!("line {}: missing event", lineno + 2))?,
+        );
+        let t: f64 = t
+            .parse()
+            .map_err(|_| format!("line {}: bad time '{t}'", lineno + 2))?;
+        let entity: u32 = entity
+            .parse()
+            .map_err(|_| format!("line {}: bad entity '{entity}'", lineno + 2))?;
+        let ev = ev_parse(ev.trim())
+            .ok_or_else(|| format!("line {}: unknown event '{ev}'", lineno + 2))?;
+        tracer.rec(t, entity, ev);
+    }
+    Ok(tracer)
+}
+
+/// Load a trace from a file path.
+pub fn load_trace_file(path: impl AsRef<std::path::Path>) -> Result<Tracer, String> {
+    let text = std::fs::read_to_string(&path)
+        .map_err(|e| format!("reading {}: {e}", path.as_ref().display()))?;
+    load_trace_csv(&text)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_roundtrip_preserves_events() {
+        let mut tr = Tracer::new(true);
+        tr.rec(0.5, 0, Ev::PilotActive);
+        tr.rec(10.25, 3, Ev::TaskSchedOk);
+        tr.rec(12.125, 3, Ev::TaskRunStart);
+        tr.rec(99.0, 3, Ev::TaskDone);
+        let csv = tr.to_csv();
+        let back = load_trace_csv(&csv).unwrap();
+        assert_eq!(back.len(), tr.len());
+        assert_eq!(back.events(), tr.events());
+    }
+
+    #[test]
+    fn all_event_kinds_roundtrip() {
+        use Ev::*;
+        let all = [
+            PilotSubmitted, PilotActive, AgentBootstrapDone, DvmReady, DvmFailed,
+            PilotDone, TaskDbPull, TaskStageInStart, TaskStageInStop, TaskSchedQueue,
+            TaskSchedOk, TaskExecStart, TaskRunStart, TaskRunStop, TaskSpawnReturn,
+            TaskStageOutStart, TaskStageOutStop, TaskDone, TaskFailed, MasterReady,
+            WorkerReady,
+        ];
+        let mut tr = Tracer::new(true);
+        for (i, &e) in all.iter().enumerate() {
+            tr.rec(i as f64, i as u32, e);
+        }
+        let back = load_trace_csv(&tr.to_csv()).unwrap();
+        assert_eq!(back.events(), tr.events());
+    }
+
+    #[test]
+    fn malformed_lines_reported_with_position() {
+        assert!(load_trace_csv("nope\n").is_err());
+        let err = load_trace_csv("time,entity,event\n1.0,x,task_done\n").unwrap_err();
+        assert!(err.contains("line 2"), "{err}");
+        let err = load_trace_csv("time,entity,event\n1.0,2,frobnicate\n").unwrap_err();
+        assert!(err.contains("unknown event"), "{err}");
+    }
+
+    #[test]
+    fn analytics_work_on_loaded_trace() {
+        let mut tr = Tracer::new(true);
+        tr.rec(1.0, 0, Ev::TaskDbPull);
+        tr.rec(5.0, 0, Ev::TaskRunStop);
+        let back = load_trace_csv(&tr.to_csv()).unwrap();
+        assert_eq!(crate::analytics::ttx(&back), Some(4.0));
+    }
+}

@@ -1,0 +1,294 @@
+//! Core-time accounting: the Fig-7 utilization breakdown and the Fig-9
+//! stacked utilization timeline.
+
+use crate::tracer::{Ev, Tracer};
+
+/// Per-task phase timestamps extracted from a trace.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TaskPhases {
+    pub sched_queue: Option<f64>,
+    pub sched_ok: Option<f64>,
+    pub exec_start: Option<f64>,
+    pub run_start: Option<f64>,
+    pub run_stop: Option<f64>,
+    pub spawn_return: Option<f64>,
+    pub failed: bool,
+}
+
+/// Extract per-task phases for `n_tasks` dense task indices.
+pub fn task_phases(trace: &Tracer, n_tasks: usize) -> Vec<TaskPhases> {
+    let mut out = vec![TaskPhases::default(); n_tasks];
+    for e in trace.events() {
+        let i = e.entity as usize;
+        if i >= n_tasks {
+            continue;
+        }
+        let p = &mut out[i];
+        match e.ev {
+            Ev::TaskSchedQueue => p.sched_queue = Some(e.t),
+            Ev::TaskSchedOk => p.sched_ok = Some(e.t),
+            Ev::TaskExecStart => p.exec_start = Some(e.t),
+            Ev::TaskRunStart => p.run_start = Some(e.t),
+            Ev::TaskRunStop => p.run_stop = Some(e.t),
+            Ev::TaskSpawnReturn => p.spawn_return = Some(e.t),
+            Ev::TaskFailed => p.failed = true,
+            _ => {}
+        }
+    }
+    out
+}
+
+/// Fig-7-style resource-utilization breakdown: fractions of available
+/// core-time spent per category. Categories follow the paper's legend.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct RuBreakdown {
+    /// task executables running ("Workload execution")
+    pub exec: f64,
+    /// launcher prep + ack (the "ORTE"/"PRRTE" share)
+    pub launcher: f64,
+    /// RP components: bootstrap + executor hand-off ("RP Overhead")
+    pub rp: f64,
+    /// cores idle while the pilot was active ("RP Idle")
+    pub idle: f64,
+}
+
+impl RuBreakdown {
+    pub fn total(&self) -> f64 {
+        self.exec + self.launcher + self.rp + self.idle
+    }
+}
+
+/// Compute the breakdown over a pilot holding `pilot_cores` from
+/// `t_start` (pilot active) to `t_end` (pilot released), given per-task
+/// core counts.
+pub fn ru_breakdown(
+    trace: &Tracer,
+    task_cores: &[u64],
+    pilot_cores: u64,
+    t_start: f64,
+    t_end: f64,
+    t_bootstrap_done: f64,
+) -> RuBreakdown {
+    assert!(t_end > t_start && pilot_cores > 0);
+    let phases = task_phases(trace, task_cores.len());
+    let total = pilot_cores as f64 * (t_end - t_start);
+    let mut exec = 0.0;
+    let mut launcher = 0.0;
+    let mut rp = 0.0;
+
+    // bootstrap occupies the whole pilot
+    rp += pilot_cores as f64 * (t_bootstrap_done - t_start).max(0.0);
+
+    for (i, p) in phases.iter().enumerate() {
+        let c = task_cores[i] as f64;
+        if let (Some(rs), Some(re)) = (p.run_start, p.run_stop) {
+            exec += c * (re - rs).max(0.0);
+        }
+        if let (Some(es), Some(rs)) = (p.exec_start, p.run_start) {
+            launcher += c * (rs - es).max(0.0); // prep
+        }
+        if let (Some(re), Some(sr)) = (p.run_stop, p.spawn_return) {
+            launcher += c * (sr - re).max(0.0); // ack
+        }
+        if let (Some(so), Some(es)) = (p.sched_ok, p.exec_start) {
+            rp += c * (es - so).max(0.0); // executor hand-off
+        }
+    }
+    let idle = (total - exec - launcher - rp).max(0.0);
+    RuBreakdown {
+        exec: exec / total,
+        launcher: launcher / total,
+        rp: rp / total,
+        idle: idle / total,
+    }
+}
+
+/// Utilization states for the Fig-9 stacked timeline.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum UtilState {
+    PilotStartup,
+    Warmup,
+    PrepareExec,
+    Exec,
+    Idle,
+}
+
+/// A binned stacked timeline: for each bin, cores in each state.
+#[derive(Clone, Debug)]
+pub struct RuTimeline {
+    pub bin_w: f64,
+    pub t0: f64,
+    /// per bin: [startup, warmup, prepare, exec, idle]
+    pub bins: Vec<[f64; 5]>,
+    pub pilot_cores: u64,
+}
+
+impl RuTimeline {
+    /// Build from a trace. `t_bootstrap_done` splits PilotStartup from the
+    /// rest; a task's cores are in Warmup from sched_ok to exec_start, in
+    /// PrepareExec from exec_start to run_start, Exec while running;
+    /// everything else is Idle.
+    pub fn build(
+        trace: &Tracer,
+        task_cores: &[u64],
+        pilot_cores: u64,
+        t_start: f64,
+        t_end: f64,
+        t_bootstrap_done: f64,
+        n_bins: usize,
+    ) -> RuTimeline {
+        assert!(n_bins > 0 && t_end > t_start);
+        let bin_w = (t_end - t_start) / n_bins as f64;
+        let mut bins = vec![[0.0f64; 5]; n_bins];
+        let phases = task_phases(trace, task_cores.len());
+
+        // helper: add `cores` over [a,b) into state s
+        let add = |a: f64, b: f64, cores: f64, s: usize, bins: &mut Vec<[f64; 5]>| {
+            if b <= a {
+                return;
+            }
+            let lo = ((a - t_start) / bin_w).floor().max(0.0) as usize;
+            let hi = (((b - t_start) / bin_w).ceil() as usize).min(n_bins);
+            for (k, bin) in bins.iter_mut().enumerate().take(hi).skip(lo) {
+                let bs = t_start + k as f64 * bin_w;
+                let be = bs + bin_w;
+                let overlap = (b.min(be) - a.max(bs)).max(0.0);
+                bin[s] += cores * overlap / bin_w;
+            }
+        };
+
+        // pilot startup occupies all cores
+        add(t_start, t_bootstrap_done.min(t_end), pilot_cores as f64, 0, &mut bins);
+
+        for (i, p) in phases.iter().enumerate() {
+            let c = task_cores[i] as f64;
+            if let (Some(q), Some(es)) = (p.sched_ok, p.exec_start) {
+                add(q, es, c, 1, &mut bins); // warmup / scheduling hand-off
+            }
+            if let (Some(es), Some(rs)) = (p.exec_start, p.run_start) {
+                add(es, rs, c, 2, &mut bins); // prepare exec
+            }
+            if let (Some(rs), Some(re)) = (p.run_start, p.run_stop) {
+                add(rs, re, c, 3, &mut bins); // exec
+            }
+        }
+
+        // idle = pilot cores − the rest (only after bootstrap)
+        for (k, bin) in bins.iter_mut().enumerate() {
+            let bs = t_start + k as f64 * bin_w;
+            let boot_frac = if t_bootstrap_done <= bs {
+                0.0
+            } else {
+                ((t_bootstrap_done - bs) / bin_w).min(1.0)
+            };
+            let used: f64 = bin[1] + bin[2] + bin[3];
+            let avail = pilot_cores as f64 * (1.0 - boot_frac);
+            bin[4] = (avail - used).max(0.0);
+        }
+
+        RuTimeline {
+            bin_w,
+            t0: t_start,
+            bins,
+            pilot_cores,
+        }
+    }
+
+    /// Overall utilization (exec core-time / pilot core-time).
+    pub fn utilization(&self) -> f64 {
+        let exec: f64 = self.bins.iter().map(|b| b[3]).sum();
+        exec / (self.pilot_cores as f64 * self.bins.len() as f64)
+    }
+
+    /// CSV export: t, startup, warmup, prepare, exec, idle (cores).
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from("t,startup,warmup,prepare_exec,exec,idle\n");
+        for (k, b) in self.bins.iter().enumerate() {
+            s.push_str(&format!(
+                "{:.3},{:.1},{:.1},{:.1},{:.1},{:.1}\n",
+                self.t0 + (k as f64 + 0.5) * self.bin_w,
+                b[0],
+                b[1],
+                b[2],
+                b[3],
+                b[4]
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tracer::Tracer;
+
+    /// Two 4-core tasks on an 8-core pilot, running [10,20] and [12,22];
+    /// bootstrap over [0,2].
+    fn sample_trace() -> (Tracer, Vec<u64>) {
+        let mut tr = Tracer::new(true);
+        for (i, (q, es, rs, re, sr)) in
+            [(4.0, 6.0, 10.0, 20.0, 21.0), (5.0, 7.0, 12.0, 22.0, 23.0)]
+                .iter()
+                .enumerate()
+        {
+            tr.rec(*q, i as u32, Ev::TaskSchedOk);
+            tr.rec(*es, i as u32, Ev::TaskExecStart);
+            tr.rec(*rs, i as u32, Ev::TaskRunStart);
+            tr.rec(*re, i as u32, Ev::TaskRunStop);
+            tr.rec(*sr, i as u32, Ev::TaskSpawnReturn);
+        }
+        (tr, vec![4, 4])
+    }
+
+    #[test]
+    fn breakdown_partitions_core_time() {
+        let (tr, cores) = sample_trace();
+        let b = ru_breakdown(&tr, &cores, 8, 0.0, 25.0, 2.0);
+        assert!((b.total() - 1.0).abs() < 1e-9, "partition sums to 1");
+        // exec = 4*(10)+4*(10) = 80 of 8*25=200 → 0.4
+        assert!((b.exec - 0.4).abs() < 1e-9);
+        // launcher = prep 4*4+4*5=36? prep1=10-6=4→16, prep2=12-7=5→20; ack 1+1 → 8; =44/200=0.22
+        assert!((b.launcher - 0.22).abs() < 1e-9);
+        assert!(b.rp > 0.0 && b.idle > 0.0);
+    }
+
+    #[test]
+    fn timeline_conserves_cores_per_bin() {
+        let (tr, cores) = sample_trace();
+        let tl = RuTimeline::build(&tr, &cores, 8, 0.0, 25.0, 2.0, 25);
+        for (k, b) in tl.bins.iter().enumerate() {
+            let sum: f64 = b[1] + b[2] + b[3] + b[4] + b[0];
+            assert!(
+                (sum - 8.0).abs() < 1e-6,
+                "bin {k} sums to {sum}, expected 8"
+            );
+        }
+    }
+
+    #[test]
+    fn timeline_exec_band_matches_runs() {
+        let (tr, cores) = sample_trace();
+        let tl = RuTimeline::build(&tr, &cores, 8, 0.0, 25.0, 2.0, 25);
+        // bin at t=15.5 (index 15): both tasks executing → 8 cores
+        assert!((tl.bins[15][3] - 8.0).abs() < 1e-6);
+        // bin at t=0.5: startup
+        assert!((tl.bins[0][0] - 8.0).abs() < 1e-6);
+        // bin at t=24.5: idle
+        assert!((tl.bins[24][4] - 8.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn utilization_value() {
+        let (tr, cores) = sample_trace();
+        let tl = RuTimeline::build(&tr, &cores, 8, 0.0, 25.0, 2.0, 250);
+        assert!((tl.utilization() - 0.4).abs() < 0.01);
+    }
+
+    #[test]
+    fn csv_has_all_bins() {
+        let (tr, cores) = sample_trace();
+        let tl = RuTimeline::build(&tr, &cores, 8, 0.0, 25.0, 2.0, 10);
+        assert_eq!(tl.to_csv().lines().count(), 11);
+    }
+}

@@ -1,0 +1,167 @@
+//! Binned time-series collector for extreme-scale runs (Experiment 5's
+//! 126 M tasks cannot carry per-task traces; the paper's Fig-10 panels are
+//! themselves time-binned aggregates).
+
+#[derive(Clone, Debug)]
+pub struct TimeSeries {
+    pub bin_w: f64,
+    /// tasks started per bin
+    pub started: Vec<u64>,
+    /// tasks completed per bin
+    pub completed: Vec<u64>,
+    /// busy core-seconds per bin
+    pub busy_core_s: Vec<f64>,
+}
+
+impl TimeSeries {
+    pub fn new(bin_w: f64) -> TimeSeries {
+        assert!(bin_w > 0.0);
+        TimeSeries {
+            bin_w,
+            started: Vec::new(),
+            completed: Vec::new(),
+            busy_core_s: Vec::new(),
+        }
+    }
+
+    fn bin(&mut self, t: f64) -> usize {
+        let i = (t / self.bin_w).floor().max(0.0) as usize;
+        if i >= self.started.len() {
+            self.started.resize(i + 1, 0);
+            self.completed.resize(i + 1, 0);
+            self.busy_core_s.resize(i + 1, 0.0);
+        }
+        i
+    }
+
+    /// Record one task execution [start, stop) on `cores` cores.
+    pub fn record_exec(&mut self, start: f64, stop: f64, cores: u64) {
+        if stop <= start {
+            let i = self.bin(start);
+            self.started[i] += 1;
+            self.completed[i] += 1;
+            return;
+        }
+        let i0 = self.bin(start);
+        self.started[i0] += 1;
+        let i1 = self.bin(stop);
+        self.completed[i1] += 1;
+        // spread busy core-seconds across bins
+        for i in i0..=i1 {
+            let bs = i as f64 * self.bin_w;
+            let be = bs + self.bin_w;
+            let overlap = (stop.min(be) - start.max(bs)).max(0.0);
+            self.busy_core_s[i] += overlap * cores as f64;
+        }
+    }
+
+    pub fn n_bins(&self) -> usize {
+        self.started.len()
+    }
+
+    /// Fig-10b: mean concurrent executions per bin (busy core-seconds /
+    /// bin width, divided by cores-per-task when tasks are single-core
+    /// this equals concurrent tasks).
+    pub fn concurrency(&self) -> Vec<f64> {
+        self.busy_core_s.iter().map(|b| b / self.bin_w).collect()
+    }
+
+    /// Fig-10c: completion rate (tasks/s) per bin.
+    pub fn rate(&self) -> Vec<f64> {
+        self.completed
+            .iter()
+            .map(|&c| c as f64 / self.bin_w)
+            .collect()
+    }
+
+    /// Fig-10a: utilization per bin given total cores.
+    pub fn utilization(&self, total_cores: u64) -> Vec<f64> {
+        self.busy_core_s
+            .iter()
+            .map(|b| b / (self.bin_w * total_cores as f64))
+            .collect()
+    }
+
+    /// Overall utilization over [0, t_end].
+    pub fn overall_utilization(&self, total_cores: u64, t_end: f64) -> f64 {
+        let busy: f64 = self.busy_core_s.iter().sum();
+        busy / (total_cores as f64 * t_end)
+    }
+
+    pub fn total_completed(&self) -> u64 {
+        self.completed.iter().sum()
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from("t,started,completed,concurrency,rate\n");
+        let conc = self.concurrency();
+        let rate = self.rate();
+        for i in 0..self.n_bins() {
+            s.push_str(&format!(
+                "{:.1},{},{},{:.1},{:.1}\n",
+                (i as f64 + 0.5) * self.bin_w,
+                self.started[i],
+                self.completed[i],
+                conc[i],
+                rate[i]
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exec_recording_counts() {
+        let mut ts = TimeSeries::new(10.0);
+        ts.record_exec(5.0, 25.0, 1); // bins 0..2
+        ts.record_exec(12.0, 18.0, 2); // bin 1
+        assert_eq!(ts.started, vec![1, 1, 0]);
+        assert_eq!(ts.completed, vec![0, 1, 1]);
+        assert_eq!(ts.total_completed(), 2);
+    }
+
+    #[test]
+    fn busy_core_seconds_spread() {
+        let mut ts = TimeSeries::new(10.0);
+        ts.record_exec(5.0, 25.0, 4);
+        // bin0: 5 s × 4, bin1: 10 s × 4, bin2: 5 s × 4
+        assert!((ts.busy_core_s[0] - 20.0).abs() < 1e-9);
+        assert!((ts.busy_core_s[1] - 40.0).abs() < 1e-9);
+        assert!((ts.busy_core_s[2] - 20.0).abs() < 1e-9);
+        // concurrency in bin1 = 4 cores busy
+        assert!((ts.concurrency()[1] - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn utilization_is_bounded() {
+        let mut ts = TimeSeries::new(1.0);
+        for i in 0..100 {
+            ts.record_exec(i as f64 * 0.5, i as f64 * 0.5 + 2.0, 1);
+        }
+        for u in ts.utilization(4) {
+            assert!(u <= 1.0 + 1e-9);
+        }
+    }
+
+    #[test]
+    fn rate_series() {
+        let mut ts = TimeSeries::new(2.0);
+        for _ in 0..10 {
+            ts.record_exec(0.0, 3.0, 1);
+        }
+        // all complete in bin 1 → rate 5/s
+        assert!((ts.rate()[1] - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_duration_exec() {
+        let mut ts = TimeSeries::new(1.0);
+        ts.record_exec(1.0, 1.0, 1);
+        assert_eq!(ts.started[1], 1);
+        assert_eq!(ts.completed[1], 1);
+    }
+}

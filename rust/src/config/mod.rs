@@ -1,0 +1,108 @@
+//! Embedded resource-configuration files.
+//!
+//! RADICAL-Pilot ships one JSON config per supported platform (§III-A:
+//! "configuration files are made available for the major USA NSF and DOE
+//! production HPC resources"). We embed ours the same way; users can
+//! override any field at Session creation (see `session::Session`).
+//!
+//! Calibration notes (DESIGN.md §6):
+//!  * titan.fs_ops_per_s / orte parameters reproduce the Fig-6/7/8 ORTE
+//!    overheads;
+//!  * summit.fs_ops_per_* reproduce the PRRTE "Prepare Exec" growth of
+//!    Fig 9 (the shared FS was the measured bottleneck, §IV-D);
+//!  * frontera bootstrap covers masters+workers launch < 300 s (Fig 10).
+
+use crate::util::json::Json;
+
+const TITAN: &str = r#"{
+  "name": "ornl.titan",
+  "nodes": 18688,
+  "cores_per_node": 16,
+  "gpus_per_node": 1,
+  "batch_system": "pbs",
+  "launch_methods": ["orte", "aprun", "mpirun", "ssh", "fork"],
+  "bootstrap_mean_s": 50.0,
+  "bootstrap_std_s": 10.0,
+  "fs_ops_per_s": 40000.0,
+  "fs_ops_per_launch": 12.0
+}"#;
+
+const SUMMIT: &str = r#"{
+  "name": "ornl.summit",
+  "nodes": 4608,
+  "cores_per_node": 42,
+  "gpus_per_node": 6,
+  "batch_system": "lsf",
+  "launch_methods": ["prrte", "jsrun", "mpirun", "ssh", "fork"],
+  "bootstrap_mean_s": 45.0,
+  "bootstrap_std_s": 8.0,
+  "fs_ops_per_s": 9000.0,
+  "fs_ops_per_launch": 40.0
+}"#;
+
+const FRONTERA: &str = r#"{
+  "name": "tacc.frontera",
+  "nodes": 8008,
+  "cores_per_node": 56,
+  "gpus_per_node": 0,
+  "batch_system": "slurm",
+  "launch_methods": ["raptor", "srun", "ibrun", "mpirun", "ssh", "fork"],
+  "bootstrap_mean_s": 120.0,
+  "bootstrap_std_s": 30.0,
+  "fs_ops_per_s": 150000.0,
+  "fs_ops_per_launch": 4.0
+}"#;
+
+const LOCAL: &str = r#"{
+  "name": "local.localhost",
+  "nodes": 1,
+  "gpus_per_node": 0,
+  "batch_system": "fork",
+  "launch_methods": ["fork"],
+  "bootstrap_mean_s": 0.1,
+  "bootstrap_std_s": 0.02,
+  "fs_ops_per_s": 1000000.0,
+  "fs_ops_per_launch": 1.0
+}"#;
+
+/// Look up the embedded config for a platform name; None if unknown.
+pub fn resource_config(name: &str) -> Option<Json> {
+    let text = match name {
+        "ornl.titan" | "titan" => TITAN,
+        "ornl.summit" | "summit" => SUMMIT,
+        "tacc.frontera" | "frontera" => FRONTERA,
+        "local.localhost" | "local" | "localhost" => LOCAL,
+        _ => return None,
+    };
+    Some(Json::parse(text).expect("embedded config must parse"))
+}
+
+/// All embedded platform names.
+pub fn platforms() -> Vec<&'static str> {
+    vec!["ornl.titan", "ornl.summit", "tacc.frontera", "local.localhost"]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_embedded_configs_parse() {
+        for name in platforms() {
+            let cfg = resource_config(name).unwrap();
+            assert_eq!(cfg.str_or("name", ""), name);
+            assert!(cfg.get("launch_methods").as_arr().unwrap().len() >= 1);
+        }
+    }
+
+    #[test]
+    fn unknown_platform_is_none() {
+        assert!(resource_config("anl.theta").is_none());
+    }
+
+    #[test]
+    fn aliases_resolve() {
+        assert!(resource_config("titan").is_some());
+        assert!(resource_config("localhost").is_some());
+    }
+}

@@ -1,0 +1,201 @@
+//! The RP DB module — a MongoDB substitute (§III-B: "The TaskManager
+//! schedules each task to an Agent via a queue on a MongoDB instance …
+//! Each Agent pulls tasks from the DB module").
+//!
+//! Provides the semantics the measured path depends on: bulk inserts by the
+//! TaskManager, bulk pulls by the Agent (Fig. 8 "DB Bridge Pulls"), state
+//! updates flowing back. Thread-safe; usable in-process (real mode) and as
+//! a latency-modeled store in DES mode.
+
+pub mod net;
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+
+pub use net::{DbClient, DbServer};
+
+use crate::task::TaskState;
+
+/// A task record as stored in the DB (description index + routing info —
+/// the full description lives with the TaskManager; the DB carries what the
+/// Agent needs, keeping records small as RP does to bound Mongo load).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TaskRecord {
+    pub uid: String,
+    pub index: u32,
+    pub pilot: String,
+    pub state: TaskState,
+}
+
+#[derive(Default)]
+struct Inner {
+    /// per-pilot pending queues (tasks scheduled to that pilot's agent)
+    queues: Vec<(String, VecDeque<TaskRecord>)>,
+    /// state updates flowing back to the TaskManager
+    updates: VecDeque<(String, TaskState)>,
+    closed: bool,
+}
+
+/// The DB service. In real mode, TaskManager and Agent threads share it;
+/// in DES mode the harness charges a modeled pull latency around calls.
+pub struct Db {
+    inner: Mutex<Inner>,
+    cv: Condvar,
+}
+
+impl Default for Db {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Db {
+    pub fn new() -> Db {
+        Db {
+            inner: Mutex::new(Inner::default()),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn queue_idx(inner: &mut Inner, pilot: &str) -> usize {
+        if let Some(i) = inner.queues.iter().position(|(p, _)| p == pilot) {
+            i
+        } else {
+            inner.queues.push((pilot.to_string(), VecDeque::new()));
+            inner.queues.len() - 1
+        }
+    }
+
+    /// TaskManager side: insert a bulk of task records routed to a pilot.
+    pub fn insert_tasks(&self, pilot: &str, records: Vec<TaskRecord>) {
+        let mut inner = self.inner.lock().unwrap();
+        let i = Self::queue_idx(&mut inner, pilot);
+        inner.queues[i].1.extend(records);
+        self.cv.notify_all();
+    }
+
+    /// Agent side: pull up to `max` tasks for `pilot` (bulk pull — RP's
+    /// agent pulls "individually or in bulk", §IV-A). Non-blocking.
+    pub fn pull_tasks(&self, pilot: &str, max: usize) -> Vec<TaskRecord> {
+        let mut inner = self.inner.lock().unwrap();
+        let i = Self::queue_idx(&mut inner, pilot);
+        let q = &mut inner.queues[i].1;
+        let n = max.min(q.len());
+        q.drain(..n).collect()
+    }
+
+    /// Agent side: blocking pull — waits until at least one task is
+    /// available or the DB is closed. Used by the real-mode agent thread.
+    pub fn pull_tasks_blocking(&self, pilot: &str, max: usize) -> Vec<TaskRecord> {
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            let i = Self::queue_idx(&mut inner, pilot);
+            if !inner.queues[i].1.is_empty() {
+                let q = &mut inner.queues[i].1;
+                let n = max.min(q.len());
+                return q.drain(..n).collect();
+            }
+            if inner.closed {
+                return Vec::new();
+            }
+            inner = self.cv.wait(inner).unwrap();
+        }
+    }
+
+    /// Agent side: push a task state update back.
+    pub fn update_state(&self, uid: &str, state: TaskState) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.updates.push_back((uid.to_string(), state));
+        self.cv.notify_all();
+    }
+
+    /// TaskManager side: drain pending state updates.
+    pub fn drain_updates(&self) -> Vec<(String, TaskState)> {
+        let mut inner = self.inner.lock().unwrap();
+        inner.updates.drain(..).collect()
+    }
+
+    /// Number of tasks queued for a pilot.
+    pub fn pending(&self, pilot: &str) -> usize {
+        let mut inner = self.inner.lock().unwrap();
+        let i = Self::queue_idx(&mut inner, pilot);
+        inner.queues[i].1.len()
+    }
+
+    /// Session teardown: wake all blocked pullers.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn rec(uid: &str, index: u32) -> TaskRecord {
+        TaskRecord {
+            uid: uid.into(),
+            index,
+            pilot: "pilot.0000".into(),
+            state: TaskState::TmgrScheduling,
+        }
+    }
+
+    #[test]
+    fn bulk_insert_and_pull_preserve_order() {
+        let db = Db::new();
+        db.insert_tasks("pilot.0000", (0..10).map(|i| rec(&format!("t{i}"), i)).collect());
+        assert_eq!(db.pending("pilot.0000"), 10);
+        let batch = db.pull_tasks("pilot.0000", 4);
+        assert_eq!(batch.len(), 4);
+        assert_eq!(batch[0].uid, "t0");
+        assert_eq!(batch[3].uid, "t3");
+        assert_eq!(db.pending("pilot.0000"), 6);
+        assert_eq!(db.pull_tasks("pilot.0000", 100).len(), 6);
+        assert!(db.pull_tasks("pilot.0000", 100).is_empty());
+    }
+
+    #[test]
+    fn queues_are_per_pilot() {
+        let db = Db::new();
+        db.insert_tasks("pilot.0000", vec![rec("a", 0)]);
+        db.insert_tasks("pilot.0001", vec![rec("b", 1)]);
+        assert_eq!(db.pull_tasks("pilot.0001", 10)[0].uid, "b");
+        assert_eq!(db.pull_tasks("pilot.0000", 10)[0].uid, "a");
+    }
+
+    #[test]
+    fn state_updates_flow_back() {
+        let db = Db::new();
+        db.update_state("t0", TaskState::AgentExecuting);
+        db.update_state("t0", TaskState::Done);
+        let ups = db.drain_updates();
+        assert_eq!(ups.len(), 2);
+        assert_eq!(ups[1], ("t0".to_string(), TaskState::Done));
+        assert!(db.drain_updates().is_empty());
+    }
+
+    #[test]
+    fn blocking_pull_wakes_on_insert() {
+        let db = Arc::new(Db::new());
+        let db2 = db.clone();
+        let h = std::thread::spawn(move || db2.pull_tasks_blocking("pilot.0000", 8));
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        db.insert_tasks("pilot.0000", vec![rec("late", 0)]);
+        let got = h.join().unwrap();
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].uid, "late");
+    }
+
+    #[test]
+    fn blocking_pull_returns_empty_on_close() {
+        let db = Arc::new(Db::new());
+        let db2 = db.clone();
+        let h = std::thread::spawn(move || db2.pull_tasks_blocking("pilot.0000", 8));
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        db.close();
+        assert!(h.join().unwrap().is_empty());
+    }
+}

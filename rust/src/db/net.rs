@@ -1,0 +1,375 @@
+//! TCP-served DB module: RP's deployment model puts the DB (MongoDB in
+//! the paper) on a separate host, with TaskManager and Agents talking to
+//! it over the network (§III-A: "users can run the PilotManager and
+//! TaskManager locally, and distribute the DB and … Agent[s] on remote
+//! HPC infrastructures").
+//!
+//! Wire protocol: one JSON object per line (requests and responses), over
+//! plain TCP — simple, debuggable, and sufficient for the bulk-pull
+//! access pattern the measured path uses.
+//!
+//!   {"op":"insert","pilot":P,"tasks":[{"uid":U,"index":I},…]} → {"ok":n}
+//!   {"op":"pull","pilot":P,"max":N}                           → {"tasks":[…]}
+//!   {"op":"update","uid":U,"state":S}                         → {"ok":1}
+//!   {"op":"drain"}                                            → {"updates":[[U,S],…]}
+//!   {"op":"pending","pilot":P}                                → {"pending":n}
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+
+use crate::task::TaskState;
+use crate::util::json::Json;
+
+use super::{Db, TaskRecord};
+
+fn state_name(s: TaskState) -> &'static str {
+    s.name()
+}
+
+fn state_parse(s: &str) -> TaskState {
+    use TaskState::*;
+    match s {
+        "NEW" => New,
+        "TMGR_SCHEDULING" => TmgrScheduling,
+        "AGENT_STAGING_INPUT" => AgentStagingInput,
+        "AGENT_SCHEDULING_PENDING" => AgentSchedulingPending,
+        "AGENT_SCHEDULING" => AgentScheduling,
+        "AGENT_EXECUTING_PENDING" => AgentExecutingPending,
+        "AGENT_EXECUTING" => AgentExecuting,
+        "AGENT_STAGING_OUTPUT" => AgentStagingOutput,
+        "DONE" => Done,
+        "FAILED" => Failed,
+        _ => Canceled,
+    }
+}
+
+/// The server: wraps a shared `Db`, one thread per connection.
+pub struct DbServer {
+    pub addr: std::net::SocketAddr,
+    db: Arc<Db>,
+    shutdown: Arc<std::sync::atomic::AtomicBool>,
+}
+
+impl DbServer {
+    /// Bind to 127.0.0.1:0 (ephemeral port) and start serving.
+    pub fn start(db: Arc<Db>) -> std::io::Result<DbServer> {
+        let listener = TcpListener::bind("127.0.0.1:0")?;
+        let addr = listener.local_addr()?;
+        let shutdown = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let db2 = db.clone();
+        let stop = shutdown.clone();
+        std::thread::spawn(move || {
+            listener.set_nonblocking(true).ok();
+            loop {
+                if stop.load(std::sync::atomic::Ordering::Relaxed) {
+                    break;
+                }
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        let db = db2.clone();
+                        std::thread::spawn(move || serve_conn(stream, db));
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(std::time::Duration::from_millis(5));
+                    }
+                    Err(_) => break,
+                }
+            }
+        });
+        Ok(DbServer {
+            addr,
+            db,
+            shutdown,
+        })
+    }
+
+    pub fn stop(&self) {
+        self.shutdown
+            .store(true, std::sync::atomic::Ordering::Relaxed);
+        self.db.close();
+    }
+}
+
+fn serve_conn(stream: TcpStream, db: Arc<Db>) {
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let Ok(line) = line else { break };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let resp = match Json::parse(&line) {
+            Ok(req) => handle(&req, &db),
+            Err(e) => Json::obj(vec![("error", Json::Str(format!("bad request: {e}")))]),
+        };
+        if writeln!(writer, "{resp}").is_err() {
+            break;
+        }
+    }
+}
+
+fn handle(req: &Json, db: &Db) -> Json {
+    match req.str_or("op", "") {
+        "insert" => {
+            let pilot = req.str_or("pilot", "");
+            let tasks: Vec<TaskRecord> = req
+                .get("tasks")
+                .as_arr()
+                .map(|a| {
+                    a.iter()
+                        .map(|t| TaskRecord {
+                            uid: t.str_or("uid", "").to_string(),
+                            index: t.u64_or("index", 0) as u32,
+                            pilot: pilot.to_string(),
+                            state: TaskState::TmgrScheduling,
+                        })
+                        .collect()
+                })
+                .unwrap_or_default();
+            let n = tasks.len();
+            db.insert_tasks(pilot, tasks);
+            Json::obj(vec![("ok", Json::Num(n as f64))])
+        }
+        "pull" => {
+            let pilot = req.str_or("pilot", "");
+            let max = req.u64_or("max", 1024) as usize;
+            let recs = db.pull_tasks(pilot, max);
+            Json::obj(vec![(
+                "tasks",
+                Json::arr(recs.into_iter().map(|r| {
+                    Json::obj(vec![
+                        ("uid", Json::Str(r.uid)),
+                        ("index", Json::Num(r.index as f64)),
+                    ])
+                })),
+            )])
+        }
+        "update" => {
+            db.update_state(req.str_or("uid", ""), state_parse(req.str_or("state", "")));
+            Json::obj(vec![("ok", Json::Num(1.0))])
+        }
+        "drain" => {
+            let ups = db.drain_updates();
+            Json::obj(vec![(
+                "updates",
+                Json::arr(ups.into_iter().map(|(uid, st)| {
+                    Json::arr(vec![Json::Str(uid), Json::Str(state_name(st).to_string())])
+                })),
+            )])
+        }
+        "pending" => {
+            let n = db.pending(req.str_or("pilot", ""));
+            Json::obj(vec![("pending", Json::Num(n as f64))])
+        }
+        other => Json::obj(vec![("error", Json::Str(format!("unknown op '{other}'")))]),
+    }
+}
+
+/// The client side: what a remote Agent / TaskManager holds.
+pub struct DbClient {
+    writer: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl DbClient {
+    pub fn connect(addr: std::net::SocketAddr) -> std::io::Result<DbClient> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true).ok();
+        let reader = BufReader::new(stream.try_clone()?);
+        Ok(DbClient {
+            writer: stream,
+            reader,
+        })
+    }
+
+    fn call(&mut self, req: Json) -> std::io::Result<Json> {
+        writeln!(self.writer, "{req}")?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        Json::parse(&line).map_err(|e| {
+            std::io::Error::new(std::io::ErrorKind::InvalidData, format!("bad response: {e}"))
+        })
+    }
+
+    pub fn insert_tasks(&mut self, pilot: &str, recs: &[TaskRecord]) -> std::io::Result<usize> {
+        let req = Json::obj(vec![
+            ("op", Json::Str("insert".into())),
+            ("pilot", Json::Str(pilot.into())),
+            (
+                "tasks",
+                Json::arr(recs.iter().map(|r| {
+                    Json::obj(vec![
+                        ("uid", Json::Str(r.uid.clone())),
+                        ("index", Json::Num(r.index as f64)),
+                    ])
+                })),
+            ),
+        ]);
+        Ok(self.call(req)?.u64_or("ok", 0) as usize)
+    }
+
+    pub fn pull_tasks(&mut self, pilot: &str, max: usize) -> std::io::Result<Vec<(String, u32)>> {
+        let req = Json::obj(vec![
+            ("op", Json::Str("pull".into())),
+            ("pilot", Json::Str(pilot.into())),
+            ("max", Json::Num(max as f64)),
+        ]);
+        let resp = self.call(req)?;
+        Ok(resp
+            .get("tasks")
+            .as_arr()
+            .map(|a| {
+                a.iter()
+                    .map(|t| (t.str_or("uid", "").to_string(), t.u64_or("index", 0) as u32))
+                    .collect()
+            })
+            .unwrap_or_default())
+    }
+
+    pub fn update_state(&mut self, uid: &str, state: TaskState) -> std::io::Result<()> {
+        let req = Json::obj(vec![
+            ("op", Json::Str("update".into())),
+            ("uid", Json::Str(uid.into())),
+            ("state", Json::Str(state_name(state).into())),
+        ]);
+        self.call(req).map(|_| ())
+    }
+
+    pub fn drain_updates(&mut self) -> std::io::Result<Vec<(String, TaskState)>> {
+        let resp = self.call(Json::obj(vec![("op", Json::Str("drain".into()))]))?;
+        Ok(resp
+            .get("updates")
+            .as_arr()
+            .map(|a| {
+                a.iter()
+                    .filter_map(|u| {
+                        let pair = u.as_arr()?;
+                        Some((
+                            pair.first()?.as_str()?.to_string(),
+                            state_parse(pair.get(1)?.as_str()?),
+                        ))
+                    })
+                    .collect()
+            })
+            .unwrap_or_default())
+    }
+
+    pub fn pending(&mut self, pilot: &str) -> std::io::Result<usize> {
+        let req = Json::obj(vec![
+            ("op", Json::Str("pending".into())),
+            ("pilot", Json::Str(pilot.into())),
+        ]);
+        Ok(self.call(req)?.u64_or("pending", 0) as usize)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(i: u32) -> TaskRecord {
+        TaskRecord {
+            uid: format!("task.{i:06}"),
+            index: i,
+            pilot: "pilot.0000".into(),
+            state: TaskState::TmgrScheduling,
+        }
+    }
+
+    #[test]
+    fn tcp_roundtrip_insert_pull_update_drain() {
+        let db = Arc::new(Db::new());
+        let server = DbServer::start(db.clone()).unwrap();
+        let mut client = DbClient::connect(server.addr).unwrap();
+
+        let recs: Vec<TaskRecord> = (0..10).map(rec).collect();
+        assert_eq!(client.insert_tasks("pilot.0000", &recs).unwrap(), 10);
+        assert_eq!(client.pending("pilot.0000").unwrap(), 10);
+
+        let got = client.pull_tasks("pilot.0000", 4).unwrap();
+        assert_eq!(got.len(), 4);
+        assert_eq!(got[0], ("task.000000".to_string(), 0));
+        assert_eq!(client.pending("pilot.0000").unwrap(), 6);
+
+        client.update_state("task.000000", TaskState::Done).unwrap();
+        client.update_state("task.000001", TaskState::Failed).unwrap();
+        let ups = client.drain_updates().unwrap();
+        assert_eq!(ups.len(), 2);
+        assert_eq!(ups[0], ("task.000000".to_string(), TaskState::Done));
+        assert_eq!(ups[1].1, TaskState::Failed);
+
+        server.stop();
+    }
+
+    #[test]
+    fn multiple_clients_share_the_store() {
+        let db = Arc::new(Db::new());
+        let server = DbServer::start(db.clone()).unwrap();
+        let mut tmgr_side = DbClient::connect(server.addr).unwrap();
+        let mut agent_side = DbClient::connect(server.addr).unwrap();
+
+        tmgr_side
+            .insert_tasks("pilot.0000", &(0..5).map(rec).collect::<Vec<_>>())
+            .unwrap();
+        let got = agent_side.pull_tasks("pilot.0000", 100).unwrap();
+        assert_eq!(got.len(), 5);
+        // competing pulls never duplicate
+        assert!(agent_side.pull_tasks("pilot.0000", 100).unwrap().is_empty());
+        server.stop();
+    }
+
+    #[test]
+    fn malformed_request_gets_error_not_crash() {
+        let db = Arc::new(Db::new());
+        let server = DbServer::start(db).unwrap();
+        let mut stream = TcpStream::connect(server.addr).unwrap();
+        writeln!(stream, "{{not json").unwrap();
+        let mut line = String::new();
+        BufReader::new(stream.try_clone().unwrap())
+            .read_line(&mut line)
+            .unwrap();
+        assert!(line.contains("error"));
+        // the server is still alive for well-formed requests
+        let mut client = DbClient::connect(server.addr).unwrap();
+        assert_eq!(client.pending("p").unwrap(), 0);
+        server.stop();
+    }
+
+    #[test]
+    fn unknown_op_reported() {
+        let db = Arc::new(Db::new());
+        let server = DbServer::start(db).unwrap();
+        let mut stream = TcpStream::connect(server.addr).unwrap();
+        writeln!(stream, r#"{{"op":"frobnicate"}}"#).unwrap();
+        let mut line = String::new();
+        BufReader::new(stream.try_clone().unwrap())
+            .read_line(&mut line)
+            .unwrap();
+        assert!(line.contains("unknown op"));
+        server.stop();
+    }
+
+    #[test]
+    fn state_name_parse_roundtrip() {
+        use TaskState::*;
+        for s in [
+            New,
+            TmgrScheduling,
+            AgentStagingInput,
+            AgentSchedulingPending,
+            AgentScheduling,
+            AgentExecutingPending,
+            AgentExecuting,
+            AgentStagingOutput,
+            Done,
+            Failed,
+            Canceled,
+        ] {
+            assert_eq!(state_parse(state_name(s)), s);
+        }
+    }
+}

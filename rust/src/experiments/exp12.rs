@@ -1,0 +1,220 @@
+//! Experiments 1–2 (§IV-B, Fig. 6 + Fig. 7 + Table I rows 1–2): weak and
+//! strong scaling of the Agent with homogeneous Synapse/BPTI tasks on
+//! Titan under ORTE.
+
+use crate::analytics::{ru_breakdown, RuBreakdown};
+use crate::platform::PlatformKind;
+use crate::util::rng::Rng;
+use crate::util::stats;
+
+use super::harness::{AgentSim, SimConfig};
+use super::workloads::{bpti_emulated, BPTI_CORES, BPTI_MEAN_S};
+
+#[derive(Clone, Debug)]
+pub struct ScalingPoint {
+    pub n_tasks: usize,
+    pub pilot_cores: u64,
+    pub generations: usize,
+    pub ttx_mean: f64,
+    pub ttx_std: f64,
+    pub ideal_ttx: f64,
+    pub overhead_pct: f64,
+    pub ru: RuBreakdown,
+}
+
+/// Run one (tasks, cores) point `repeats` times; titan nodes = cores/16.
+pub fn run_point(
+    n_tasks: usize,
+    pilot_cores: u64,
+    sched_rate: f64,
+    repeats: usize,
+    seed: u64,
+) -> ScalingPoint {
+    let nodes = (pilot_cores / 16) as u32;
+    let mut ttxs = Vec::new();
+    let mut ru = RuBreakdown::default();
+    let mut generations = 1;
+    for r in 0..repeats {
+        let mut rng = Rng::new(seed ^ (r as u64) << 32);
+        let tasks = bpti_emulated(n_tasks, &mut rng);
+        let mut cfg = SimConfig::new(PlatformKind::Titan, nodes);
+        cfg.sched_rate = sched_rate;
+        cfg.launch_method = Some("orte".into());
+        cfg.seed = seed.wrapping_add(r as u64 * 7919);
+        let out = AgentSim::new(cfg).run(&tasks);
+        ttxs.push(out.ttx);
+        let b = ru_breakdown(
+            &out.tracer,
+            &out.task_cores,
+            out.pilot_cores,
+            out.t_start,
+            out.t_end,
+            out.t_bootstrap_done,
+        );
+        ru.exec += b.exec;
+        ru.launcher += b.launcher;
+        ru.rp += b.rp;
+        ru.idle += b.idle;
+        generations =
+            (n_tasks as u64 * BPTI_CORES as u64).div_ceil(pilot_cores) as usize;
+    }
+    let k = repeats as f64;
+    ru.exec /= k;
+    ru.launcher /= k;
+    ru.rp /= k;
+    ru.idle /= k;
+    ScalingPoint {
+        n_tasks,
+        pilot_cores,
+        generations,
+        ttx_mean: stats::mean(&ttxs),
+        ttx_std: stats::std(&ttxs),
+        ideal_ttx: BPTI_MEAN_S * generations as f64,
+        overhead_pct: (stats::mean(&ttxs) / (BPTI_MEAN_S * generations as f64) - 1.0) * 100.0,
+        ru,
+    }
+}
+
+/// Experiment 1: weak scaling — constant 32 cores/task, tasks:cores ratio
+/// fixed; the paper's 8 runs (32…4096 tasks on 1024…131,072 cores).
+pub fn exp1_points() -> Vec<(usize, u64)> {
+    (0..8)
+        .map(|i| {
+            let n_tasks = 32usize << i;
+            (n_tasks, n_tasks as u64 * 32)
+        })
+        .collect()
+}
+
+/// Experiment 2: strong scaling — 16,384 tasks on 16,384 / 32,768 /
+/// 65,536 cores (32 / 16 / 8 generations).
+pub fn exp2_points() -> Vec<(usize, u64)> {
+    vec![
+        (16_384, 16_384),
+        (16_384, 32_768),
+        (16_384, 65_536),
+    ]
+}
+
+pub struct Exp12Report {
+    pub points: Vec<ScalingPoint>,
+}
+
+pub fn run_exp1(repeats: usize, seed: u64) -> Exp12Report {
+    let points = exp1_points()
+        .into_iter()
+        .map(|(n, c)| run_point(n, c, 6.0, repeats, seed))
+        .collect();
+    Exp12Report { points }
+}
+
+pub fn run_exp2(repeats: usize, seed: u64) -> Exp12Report {
+    let points = exp2_points()
+        .into_iter()
+        .map(|(n, c)| run_point(n, c, 6.0, repeats, seed))
+        .collect();
+    Exp12Report { points }
+}
+
+impl Exp12Report {
+    /// Fig-6-style rows.
+    pub fn table(&self) -> String {
+        let mut s = String::from(
+            "tasks,cores,generations,ttx_mean_s,ttx_std_s,ideal_ttx_s,overhead_pct,\
+             ru_exec,ru_launcher,ru_rp,ru_idle\n",
+        );
+        for p in &self.points {
+            s.push_str(&format!(
+                "{},{},{},{:.1},{:.1},{:.1},{:.1},{:.3},{:.3},{:.3},{:.3}\n",
+                p.n_tasks,
+                p.pilot_cores,
+                p.generations,
+                p.ttx_mean,
+                p.ttx_std,
+                p.ideal_ttx,
+                p.overhead_pct,
+                p.ru.exec,
+                p.ru.launcher,
+                p.ru.rp,
+                p.ru.idle
+            ));
+        }
+        s
+    }
+
+    pub fn print(&self, title: &str) {
+        println!("== {title} ==");
+        println!(
+            "{:>7} {:>9} {:>5} {:>12} {:>10} {:>8}  {:>6} {:>6} {:>6} {:>6}",
+            "tasks", "cores", "gens", "TTX (s)", "ideal", "OVH%", "exec", "orte", "rp", "idle"
+        );
+        for p in &self.points {
+            println!(
+                "{:>7} {:>9} {:>5} {:>7.0}±{:<4.0} {:>10.0} {:>8.1}  {:>6.2} {:>6.2} {:>6.2} {:>6.2}",
+                p.n_tasks,
+                p.pilot_cores,
+                p.generations,
+                p.ttx_mean,
+                p.ttx_std,
+                p.ideal_ttx,
+                p.overhead_pct,
+                p.ru.exec,
+                p.ru.launcher,
+                p.ru.rp,
+                p.ru.idle
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exp1_point_layout_matches_paper() {
+        let pts = exp1_points();
+        assert_eq!(pts.len(), 8);
+        assert_eq!(pts[0], (32, 1024));
+        assert_eq!(pts[7], (4096, 131_072));
+        // constant ratio
+        for (n, c) in pts {
+            assert_eq!(c / n as u64, 32);
+        }
+    }
+
+    #[test]
+    fn exp2_generations() {
+        let p = run_point(256, 2048, 6.0, 1, 1);
+        // 256 tasks × 32 cores / 2048 cores = 4 generations
+        assert_eq!(p.generations, 4);
+        assert!(p.ttx_mean > p.ideal_ttx);
+    }
+
+    #[test]
+    fn small_scale_overhead_in_paper_band() {
+        // paper: 922 ± 14 s at ≤4097 cores → ~11 % overhead
+        let p = run_point(32, 1024, 6.0, 3, 11);
+        assert!(
+            p.overhead_pct > 3.0 && p.overhead_pct < 20.0,
+            "overhead {}%",
+            p.overhead_pct
+        );
+        assert!((p.ttx_mean - 920.0).abs() < 80.0, "ttx {}", p.ttx_mean);
+    }
+
+    #[test]
+    fn weak_scaling_overhead_grows_with_cores() {
+        // shape check on a reduced ladder (full ladder in the bench)
+        let small = run_point(32, 1024, 6.0, 1, 3);
+        let big = run_point(1024, 32_768, 6.0, 1, 3);
+        assert!(
+            big.overhead_pct > small.overhead_pct + 5.0,
+            "small={}% big={}%",
+            small.overhead_pct,
+            big.overhead_pct
+        );
+        // utilization degrades correspondingly (Fig 7)
+        assert!(big.ru.exec < small.ru.exec);
+    }
+}

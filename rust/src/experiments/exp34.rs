@@ -1,0 +1,154 @@
+//! Experiments 3–4 (§IV-D, Fig. 9 + Table I rows 3–4): weak and strong
+//! scaling with heterogeneous tasks on Summit under PRRTE with multiple
+//! DVMs, the improved (300 task/s) scheduler, shared-FS launch pressure,
+//! and DVM/task fault tolerance.
+
+use crate::analytics::RuTimeline;
+use crate::platform::PlatformKind;
+use crate::util::rng::Rng;
+
+use super::harness::{AgentSim, SimConfig};
+use super::workloads::heterogeneous_summit;
+
+#[derive(Clone, Debug)]
+pub struct SummitRun {
+    pub label: String,
+    pub n_tasks: usize,
+    pub nodes: u32,
+    pub pilot_cores: u64,
+    pub pilot_gpus: u64,
+    pub ttx: f64,
+    /// time the scheduler took to place the workload (Fig-9 yellow)
+    pub sched_span: f64,
+    /// resource utilization (exec core-time / pilot core-time)
+    pub ru: f64,
+    /// agent overhead: bootstrap + scheduling + teardown seconds
+    pub ovh: f64,
+    pub n_done: usize,
+    pub n_failed: usize,
+    pub timeline_csv: String,
+}
+
+/// One Summit run. `rt_lo..rt_hi` is the task-duration band of Table I.
+pub fn run_summit(
+    label: &str,
+    n_tasks: usize,
+    nodes: u32,
+    rt_lo: f64,
+    rt_hi: f64,
+    failures: bool,
+    seed: u64,
+) -> SummitRun {
+    let mut rng = Rng::new(seed);
+    let tasks = heterogeneous_summit(n_tasks, rt_lo, rt_hi, &mut rng);
+    let mut cfg = SimConfig::new(PlatformKind::Summit, nodes);
+    cfg.sched_rate = 300.0; // the improved scheduler (§IV-C)
+    cfg.launch_method = Some("prrte".into());
+    cfg.nodes_per_dvm = 256;
+    cfg.agent_nodes = if nodes > 1024 { 1 } else { 0 };
+    cfg.task_failures = failures;
+    cfg.dvm_failures = failures && nodes > 1024;
+    cfg.seed = seed;
+    let out = AgentSim::new(cfg).run(&tasks);
+
+    let tl = RuTimeline::build(
+        &out.tracer,
+        &out.task_cores,
+        out.pilot_cores,
+        out.t_start,
+        out.t_end.max(out.t_start + 1.0),
+        out.t_bootstrap_done,
+        200,
+    );
+    let ru = tl.utilization();
+    // OVH: agent bootstrap + scheduling span (the non-execution RP time;
+    // teardown is folded into the final ack gap)
+    let ovh = out.t_bootstrap_done + out.sched_span;
+
+    SummitRun {
+        label: label.to_string(),
+        n_tasks,
+        nodes,
+        pilot_cores: out.pilot_cores,
+        pilot_gpus: out.pilot_gpus,
+        ttx: out.ttx,
+        sched_span: out.sched_span,
+        ru,
+        ovh,
+        n_done: out.n_done,
+        n_failed: out.n_failed,
+        timeline_csv: tl.to_csv(),
+    }
+}
+
+/// Experiment 3 (weak): 3098 tasks / 1024 nodes and 12,276 / 4097.
+pub fn run_exp3(seed: u64) -> Vec<SummitRun> {
+    vec![
+        run_summit("exp3a", 3_098, 1024, 600.0, 900.0, false, seed),
+        run_summit("exp3b", 12_276, 4097, 600.0, 900.0, true, seed ^ 0xBEEF),
+    ]
+}
+
+/// Experiment 4 (strong): 24,784 / 1024 nodes (~8 generations) and
+/// 24,552 / 4097 nodes (~2 generations).
+pub fn run_exp4(seed: u64) -> Vec<SummitRun> {
+    vec![
+        run_summit("exp4a", 24_784, 1024, 500.0, 600.0, false, seed),
+        run_summit("exp4b", 24_552, 4097, 500.0, 600.0, true, seed ^ 0xFACE),
+    ]
+}
+
+pub fn print_runs(title: &str, runs: &[SummitRun]) {
+    println!("== {title} ==");
+    println!(
+        "{:>6} {:>7} {:>6} {:>9} {:>7} {:>9} {:>10} {:>7} {:>7} {:>7}",
+        "run", "tasks", "nodes", "cores", "gpus", "TTX(s)", "sched(s)", "RU%", "OVH(s)", "failed"
+    );
+    for r in runs {
+        println!(
+            "{:>6} {:>7} {:>6} {:>9} {:>7} {:>9.0} {:>10.1} {:>7.0} {:>7.0} {:>7}",
+            r.label,
+            r.n_tasks,
+            r.nodes,
+            r.pilot_cores,
+            r.pilot_gpus,
+            r.ttx,
+            r.sched_span,
+            r.ru * 100.0,
+            r.ovh,
+            r.n_failed
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exp3_small_run_shape() {
+        let r = run_summit("t", 3_098, 1024, 600.0, 900.0, false, 5);
+        assert_eq!(r.pilot_cores, 43_008);
+        assert_eq!(r.pilot_gpus, 6_144);
+        assert_eq!(r.n_failed, 0);
+        // paper: scheduled in ~10 s; RU 77 %
+        assert!(r.sched_span < 30.0, "sched_span={}", r.sched_span);
+        assert!(r.ru > 0.5 && r.ru < 0.95, "ru={}", r.ru);
+    }
+
+    #[test]
+    fn sched_span_scales_linearly_with_tasks() {
+        let a = run_summit("a", 1_000, 1024, 600.0, 900.0, false, 6);
+        let b = run_summit("b", 3_098, 1024, 600.0, 900.0, false, 6);
+        // 300 task/s → span ratio ≈ task ratio
+        assert!(b.sched_span > 2.0 * a.sched_span, "a={} b={}", a.sched_span, b.sched_span);
+    }
+
+    #[test]
+    fn failures_only_at_scale() {
+        // small run with failures enabled should see none (concurrency
+        // below the onset threshold)
+        let r = run_summit("t", 2_000, 512, 600.0, 900.0, true, 7);
+        assert_eq!(r.n_failed, 0);
+    }
+}

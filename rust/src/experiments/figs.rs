@@ -1,0 +1,333 @@
+//! Figure drivers outside the main scaling experiments:
+//!   * Fig. 4 — GROMACS BPTI/NTL9 strong scaling on Titan (the workload
+//!     motivation for 32-core tasks);
+//!   * Fig. 5 — Synapse TTX distribution (mean 828 ± 14 s);
+//!   * Fig. 8 — per-task component-event timelines for exp-1 runs;
+//!   * §III-D — tracing overhead (~2.5 %).
+
+use crate::platform::PlatformKind;
+use crate::tracer::Ev;
+use crate::util::rng::Rng;
+use crate::util::stats;
+
+use super::harness::{AgentSim, SimConfig};
+use super::workloads::{bpti_emulated, BPTI_MEAN_S, BPTI_STD_S};
+
+// ---------------------------------------------------------------- Fig 4 --
+
+/// GROMACS MD strong-scaling model, calibrated to the Fig-4 shape: near-
+/// linear to 8 cores, sublinear after, best wall time around 32 cores for
+/// BPTI-sized systems. We model per-step time as compute (Amdahl) +
+/// communication (halo exchange growing with ranks):
+///   t(p) = t1 · (f/p + (1−f)) + c·p  (linear beyond one 16-core Titan node: network halo exchange)
+/// with f (parallel fraction) and c calibrated per protein size.
+/// (Substitution note: the paper measured real GROMACS; DESIGN.md §2.)
+#[derive(Clone, Copy, Debug)]
+pub struct MdSystem {
+    pub name: &'static str,
+    pub atoms: u64,
+    /// single-core time for the benchmark trajectory (s)
+    pub t1: f64,
+    pub parallel_fraction: f64,
+    pub comm_coeff: f64,
+}
+
+pub const BPTI: MdSystem = MdSystem {
+    name: "BPTI",
+    atoms: 20_521,
+    t1: 19_000.0,
+    parallel_fraction: 0.985,
+    comm_coeff: 14.0,
+};
+
+pub const NTL9: MdSystem = MdSystem {
+    name: "NTL9",
+    atoms: 14_100,
+    t1: 13_000.0,
+    parallel_fraction: 0.982,
+    comm_coeff: 12.0,
+};
+
+impl MdSystem {
+    pub fn time_at(&self, cores: u32) -> f64 {
+        let p = cores as f64;
+        self.t1 * (self.parallel_fraction / p + (1.0 - self.parallel_fraction))
+            + self.comm_coeff * p
+    }
+
+    /// The core count with the best wall time in 1..=max.
+    pub fn best_cores(&self, max: u32) -> u32 {
+        (1..=max)
+            .filter(|c| c.is_power_of_two() || *c == 1)
+            .min_by(|a, b| self.time_at(*a).partial_cmp(&self.time_at(*b)).unwrap())
+            .unwrap()
+    }
+}
+
+pub fn fig4_csv() -> String {
+    let mut s = String::from("cores,bpti_time_s,ntl9_time_s,bpti_speedup,ntl9_speedup\n");
+    for k in 0..9 {
+        let c = 1u32 << k; // 1..256
+        s.push_str(&format!(
+            "{},{:.1},{:.1},{:.2},{:.2}\n",
+            c,
+            BPTI.time_at(c),
+            NTL9.time_at(c),
+            BPTI.t1 / BPTI.time_at(c),
+            NTL9.t1 / NTL9.time_at(c)
+        ));
+    }
+    s
+}
+
+pub fn fig4_print() {
+    println!("== Fig 4: BPTI/NTL9 GROMACS scaling on Titan (emulated model) ==");
+    println!("{:>6} {:>12} {:>12} {:>9} {:>9}", "cores", "BPTI (s)", "NTL9 (s)", "BPTI sx", "NTL9 sx");
+    for k in 0..9 {
+        let c = 1u32 << k;
+        println!(
+            "{:>6} {:>12.0} {:>12.0} {:>9.1} {:>9.1}",
+            c,
+            BPTI.time_at(c),
+            NTL9.time_at(c),
+            BPTI.t1 / BPTI.time_at(c),
+            NTL9.t1 / NTL9.time_at(c)
+        );
+    }
+    println!(
+        "best relative performance: BPTI @ {} cores, NTL9 @ {} cores (paper: 32)",
+        BPTI.best_cores(256),
+        NTL9.best_cores(256)
+    );
+}
+
+// ---------------------------------------------------------------- Fig 5 --
+
+pub struct Fig5Report {
+    pub mean: f64,
+    pub std: f64,
+    pub hist_edges: Vec<f64>,
+    pub hist_counts: Vec<usize>,
+}
+
+pub fn fig5(n: usize, seed: u64) -> Fig5Report {
+    let mut rng = Rng::new(seed);
+    let samples: Vec<f64> = bpti_emulated(n, &mut rng)
+        .iter()
+        .map(|t| t.runtime_s)
+        .collect();
+    let (hist_edges, hist_counts) = stats::histogram(&samples, 780.0, 880.0, 25);
+    Fig5Report {
+        mean: stats::mean(&samples),
+        std: stats::std(&samples),
+        hist_edges,
+        hist_counts,
+    }
+}
+
+impl Fig5Report {
+    pub fn print(&self) {
+        println!("== Fig 5: Synapse BPTI TTX distribution ==");
+        println!(
+            "mean {:.0} s, std {:.1} s (paper: {} ± {})",
+            self.mean, self.std, BPTI_MEAN_S, BPTI_STD_S
+        );
+        let max = *self.hist_counts.iter().max().unwrap_or(&1) as f64;
+        for (e, c) in self.hist_edges.iter().zip(&self.hist_counts) {
+            let bar = "#".repeat((48.0 * *c as f64 / max).round() as usize);
+            println!("{:>6.0}s |{}", e, bar);
+        }
+    }
+
+    pub fn csv(&self) -> String {
+        let mut s = String::from("bin_left_s,count\n");
+        for (e, c) in self.hist_edges.iter().zip(&self.hist_counts) {
+            s.push_str(&format!("{:.1},{}\n", e, c));
+        }
+        s
+    }
+}
+
+// ---------------------------------------------------------------- Fig 8 --
+
+/// Per-task event times for one exp-1-style run: the six Fig-8 series.
+pub fn fig8_csv(n_tasks: usize, pilot_cores: u64, seed: u64) -> String {
+    let nodes = (pilot_cores / 16) as u32;
+    let mut rng = Rng::new(seed);
+    let tasks = bpti_emulated(n_tasks, &mut rng);
+    let mut cfg = SimConfig::new(PlatformKind::Titan, nodes);
+    cfg.sched_rate = 6.0;
+    cfg.launch_method = Some("orte".into());
+    cfg.seed = seed;
+    let out = AgentSim::new(cfg).run(&tasks);
+
+    let mut s = String::from(
+        "task,db_pull,sched_queue_task,executor_start,executable_start,executable_stop,spawn_return\n",
+    );
+    for i in 0..n_tasks as u32 {
+        let g = |ev| out.tracer.time_of(i, ev).unwrap_or(f64::NAN);
+        s.push_str(&format!(
+            "{},{:.2},{:.2},{:.2},{:.2},{:.2},{:.2}\n",
+            i,
+            g(Ev::TaskDbPull),
+            g(Ev::TaskSchedOk),
+            g(Ev::TaskExecStart),
+            g(Ev::TaskRunStart),
+            g(Ev::TaskRunStop),
+            g(Ev::TaskSpawnReturn),
+        ));
+    }
+    s
+}
+
+/// Summarize the two ORTE overheads of §IV-C for a ladder of scales:
+/// prep ("Executor Starts"→"Executable Starts") stays ~37 s; ack
+/// ("Executable Stops"→"Task Spawn Returns") grows with pilot size.
+pub fn fig8_print(seed: u64) {
+    println!("== Fig 8: task event analysis (ORTE prep/ack at scale) ==");
+    println!(
+        "{:>7} {:>9} {:>16} {:>16}",
+        "tasks", "cores", "prep mean±std", "ack mean±std"
+    );
+    for (n, cores) in [(512usize, 16_384u64), (1024, 32_768), (2048, 65_536), (4096, 131_072)] {
+        let nodes = (cores / 16) as u32;
+        let mut rng = Rng::new(seed ^ n as u64);
+        let tasks = bpti_emulated(n, &mut rng);
+        let mut cfg = SimConfig::new(PlatformKind::Titan, nodes);
+        cfg.sched_rate = 6.0;
+        cfg.launch_method = Some("orte".into());
+        cfg.seed = seed ^ (n as u64) << 8;
+        let out = AgentSim::new(cfg).run(&tasks);
+        let mut preps = Vec::new();
+        let mut acks = Vec::new();
+        for i in 0..n as u32 {
+            if let (Some(es), Some(rs)) = (
+                out.tracer.time_of(i, Ev::TaskExecStart),
+                out.tracer.time_of(i, Ev::TaskRunStart),
+            ) {
+                preps.push(rs - es);
+            }
+            if let (Some(re), Some(sr)) = (
+                out.tracer.time_of(i, Ev::TaskRunStop),
+                out.tracer.time_of(i, Ev::TaskSpawnReturn),
+            ) {
+                acks.push(sr - re);
+            }
+        }
+        println!(
+            "{:>7} {:>9} {:>16} {:>16}",
+            n,
+            cores,
+            stats::mean_std_str(&preps),
+            stats::mean_std_str(&acks)
+        );
+    }
+    println!("(paper: prep 37±9/37±6/35±8/41±30; ack 29±16/34±28/59±46/135±107)");
+}
+
+// -------------------------------------------------- tracing overhead §III-D
+
+pub struct TracingOverheadReport {
+    pub with_tracing_s: f64,
+    pub without_tracing_s: f64,
+    pub overhead_pct: f64,
+    pub events_recorded: usize,
+}
+
+/// Wall-clock cost of the tracer, measured like the paper measured it: on
+/// a REAL workload execution (the paper compared a 1045.5 s run against a
+/// 1069.2 s traced run, ≈ +2.5 %). We run real processes through the
+/// real-mode Agent with tracing on/off. (Measuring it on the DES instead
+/// would be misleading: there the trace Vec-push is a constant fraction of
+/// the — entirely bookkeeping — work, ~70 % on a 3 ms run.)
+pub fn tracing_overhead(repeats: usize) -> TracingOverheadReport {
+    use crate::agent::agent::{Agent, AgentConfig, FunctionRegistry};
+    use crate::db::{Db, TaskRecord};
+    use crate::task::{TaskDescription, TaskState};
+
+    let n_tasks = 200;
+    let run = |trace: bool, rep: usize| -> (f64, usize) {
+        let db = Db::new();
+        let descriptions: Vec<TaskDescription> = (0..n_tasks)
+            .map(|_| TaskDescription::emulated("/bin/true", 1, 1, 0.0))
+            .collect();
+        db.insert_tasks(
+            "pilot.0000",
+            (0..n_tasks)
+                .map(|i| TaskRecord {
+                    uid: format!("task.{i:06}"),
+                    index: i as u32,
+                    pilot: "pilot.0000".into(),
+                    state: TaskState::TmgrScheduling,
+                })
+                .collect(),
+        );
+        let mut cfg = AgentConfig::local("pilot.0000", 4);
+        cfg.trace = trace;
+        cfg.n_executor_threads = 4;
+        let _ = rep;
+        let t0 = std::time::Instant::now();
+        let res = Agent::run(&cfg, &db, &descriptions, &FunctionRegistry::new());
+        (t0.elapsed().as_secs_f64(), res.tracer.len())
+    };
+    let mut with_t = 0.0;
+    let mut without_t = 0.0;
+    let mut events = 0;
+    for r in 0..repeats {
+        let (t, e) = run(true, r);
+        with_t += t;
+        events += e;
+        without_t += run(false, r).0;
+    }
+    TracingOverheadReport {
+        with_tracing_s: with_t,
+        without_tracing_s: without_t,
+        overhead_pct: (with_t / without_t - 1.0) * 100.0,
+        events_recorded: events,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig4_best_at_32_cores() {
+        // the paper's headline: "32 cores offer the best relative
+        // performance" for both proteins
+        assert_eq!(BPTI.best_cores(256), 32);
+        assert_eq!(NTL9.best_cores(256), 32);
+    }
+
+    #[test]
+    fn fig4_sublinear_after_8() {
+        // near-linear to 8 cores (>85 % efficiency), clearly sublinear at 64
+        let eff8 = BPTI.t1 / BPTI.time_at(8) / 8.0;
+        let eff64 = BPTI.t1 / BPTI.time_at(64) / 64.0;
+        assert!(eff8 > 0.85, "eff8={eff8}");
+        assert!(eff64 < 0.5, "eff64={eff64}");
+    }
+
+    #[test]
+    fn fig5_distribution_matches() {
+        let r = fig5(2000, 3);
+        assert!((r.mean - 828.0).abs() < 2.0);
+        assert!((r.std - 14.0).abs() < 1.5);
+        assert_eq!(r.hist_counts.iter().sum::<usize>(), 2000);
+    }
+
+    #[test]
+    fn fig8_csv_has_all_tasks_and_ordering() {
+        let csv = fig8_csv(16, 1024, 4);
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines.len(), 17);
+        // events in pipeline order on a sample row
+        let row: Vec<f64> = lines[1]
+            .split(',')
+            .skip(1)
+            .map(|v| v.parse().unwrap())
+            .collect();
+        assert!(row[0] <= row[1] && row[1] <= row[2] && row[2] <= row[3]);
+        assert!(row[3] < row[4] && row[4] <= row[5]);
+    }
+}

@@ -1,0 +1,28 @@
+//! Paper-experiment drivers: one module per experiment/figure of §IV,
+//! each regenerating the corresponding table rows / figure series.
+//! See DESIGN.md §5 for the experiment index and expected shapes.
+
+pub mod ablations;
+pub mod exp12;
+pub mod exp34;
+pub mod exp5;
+pub mod figs;
+pub mod harness;
+pub mod workloads;
+
+pub use harness::{AgentSim, SimConfig, SimOutcome};
+
+/// Where experiment CSVs get written.
+pub fn results_dir() -> std::path::PathBuf {
+    let d = std::path::PathBuf::from("results");
+    let _ = std::fs::create_dir_all(&d);
+    d
+}
+
+pub fn write_csv(name: &str, content: &str) -> std::path::PathBuf {
+    let path = results_dir().join(name);
+    if let Err(e) = std::fs::write(&path, content) {
+        eprintln!("warning: could not write {}: {e}", path.display());
+    }
+    path
+}

@@ -1,0 +1,144 @@
+//! Workload generators for the paper's experiments.
+
+use crate::task::TaskDescription;
+use crate::util::rng::Rng;
+
+/// Experiments 1–2: Synapse-emulated GROMACS/BPTI tasks — 32-core MPI
+/// executables whose runtime distribution is the Fig-5 measurement
+/// (mean 828 s, σ 14 s).
+pub const BPTI_MEAN_S: f64 = 828.0;
+pub const BPTI_STD_S: f64 = 14.0;
+pub const BPTI_CORES: u32 = 32;
+
+pub fn bpti_emulated(n: usize, rng: &mut Rng) -> Vec<TaskDescription> {
+    (0..n)
+        .map(|_| {
+            let rt = rng.normal_min(BPTI_MEAN_S, BPTI_STD_S, 1.0);
+            let mut td = TaskDescription::emulated("synapse_bpti", BPTI_CORES, 1, rt);
+            td.name = "bpti".into();
+            td
+        })
+        .collect()
+}
+
+/// Experiments 3–4: heterogeneous tasks — "heterogeneous for duration,
+/// number of CPUs/GPUs, number of threads/processes, and use of MPI"
+/// (Fig. 9 caption), durations 500–900 s (Table I).
+///
+/// The generator draws a mix calibrated so that `n` tasks roughly fill the
+/// target node count for the weak-scaling runs in ONE generation (the
+/// paper sized 3098 tasks to 1024 Summit nodes — 43,008 cores / 6144 GPUs
+/// — and 12,276 to 4097; both scheduled fully concurrently):
+///   * 50 % GPU tasks: 1–3 GPUs, 1 core per GPU rank          (~1.0 c, 1.0 g /task avg)
+///   * 45 % single-node CPU tasks: 1–28 cores                 (~6.5 c /task avg)
+///   * 5 %  multi-node MPI tasks: 2 full nodes of 42 ranks    (~4.2 c /task avg)
+/// → ≈ 11.7 cores + 1.0 GPUs per task ⇒ 3098 tasks ≈ 84 % core and 50 %
+/// GPU fill of 1024 nodes — enough packing headroom that the whole
+/// workload places concurrently, as the paper's did (all 3098 tasks were
+/// scheduled in one ~10 s ramp, Fig. 9a).
+pub fn heterogeneous_summit(
+    n: usize,
+    rt_lo: f64,
+    rt_hi: f64,
+    rng: &mut Rng,
+) -> Vec<TaskDescription> {
+    (0..n)
+        .map(|_| {
+            let rt = rng.range_f64(rt_lo, rt_hi);
+            let roll = rng.f64();
+            let mut td = if roll < 0.50 {
+                // GPU task
+                let gpus = rng.range_u64(1, 3) as u32;
+                let mut t = TaskDescription::emulated("synth_gpu", gpus, 1, rt);
+                t.gpus_per_rank = 1;
+                t.name = "gpu".into();
+                t
+            } else if roll < 0.95 {
+                // single-node CPU task
+                let cores = rng.range_u64(1, 28) as u32;
+                let mut t = TaskDescription::emulated("synth_cpu", 1, cores, rt);
+                t.parallelism = if rng.bool(0.5) {
+                    crate::task::Parallelism::Threads
+                } else {
+                    crate::task::Parallelism::MultiProcess
+                };
+                t.name = "cpu".into();
+                t
+            } else {
+                // multi-node MPI task: 2 full nodes of 42 ranks
+                let mut t = TaskDescription::emulated("synth_mpi", 2 * 42, 1, rt);
+                t.name = "mpi".into();
+                t
+            };
+            td.runtime_s = rt;
+            td
+        })
+        .collect()
+}
+
+/// Experiment 5: OpenEye-docking-like function calls, range 1–120 s
+/// (Table I).
+///
+/// Calibration note (EXPERIMENTS.md §Exp5): the paper quotes an "average
+/// task execution time of 34 s", but that is arithmetically inconsistent
+/// with its own Fig-10 panels — 37k tasks/s × 34 s would need ≈1.26 M
+/// busy cores, 3.2× the 392 k available. The numbers that DO cohere
+/// (126.47 M calls, ≈3600 s runtime, 37–40 k/s rate, 90 % RU, 390 k
+/// concurrency) imply a ≈10 s mean; we calibrate to the figure.
+pub fn docking_runtime(rng: &mut Rng) -> f64 {
+    rng.lognormal_ms(10.0, 9.0).clamp(1.0, 120.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats;
+
+    #[test]
+    fn bpti_matches_fig5_distribution() {
+        let mut rng = Rng::new(1);
+        let tasks = bpti_emulated(4096, &mut rng);
+        let rts: Vec<f64> = tasks.iter().map(|t| t.runtime_s).collect();
+        assert!((stats::mean(&rts) - 828.0).abs() < 1.5);
+        assert!((stats::std(&rts) - 14.0).abs() < 1.0);
+        assert!(tasks.iter().all(|t| t.cores() == 32 && t.uses_mpi()));
+    }
+
+    #[test]
+    fn heterogeneous_mix_covers_all_axes() {
+        let mut rng = Rng::new(2);
+        let tasks = heterogeneous_summit(3098, 600.0, 900.0, &mut rng);
+        assert_eq!(tasks.len(), 3098);
+        let gpu = tasks.iter().filter(|t| t.gpus() > 0).count();
+        let mpi = tasks.iter().filter(|t| t.uses_mpi() && t.cores() > 42).count();
+        let cpu = tasks.len() - gpu - mpi;
+        assert!(gpu > 1000, "gpu={gpu}");
+        assert!(mpi > 80, "mpi={mpi}");
+        assert!(cpu > 700, "cpu={cpu}");
+        assert!(tasks.iter().all(|t| (500.0..=900.0).contains(&t.runtime_s)));
+        assert!(tasks.iter().all(|t| t.cores() <= 2 * 42));
+    }
+
+    #[test]
+    fn weak_scaling_fills_summit_capacity() {
+        // the 3098-task workload should roughly fill 1024 nodes
+        let mut rng = Rng::new(3);
+        let tasks = heterogeneous_summit(3098, 600.0, 900.0, &mut rng);
+        let cores: u64 = tasks.iter().map(|t| t.cores()).sum();
+        let gpus: u64 = tasks.iter().map(|t| t.gpus()).sum();
+        // capacity: 43,008 cores / 6,144 GPUs; the mix must fit ONE
+        // generation (the paper scheduled all 3098 concurrently) while
+        // covering a substantial part of both resource types
+        assert!(cores > 28_000 && cores < 43_008, "cores={cores}");
+        assert!(gpus > 2_500 && gpus < 6_144, "gpus={gpus}");
+    }
+
+    #[test]
+    fn docking_runtimes_in_range() {
+        let mut rng = Rng::new(4);
+        let xs: Vec<f64> = (0..20_000).map(|_| docking_runtime(&mut rng)).collect();
+        assert!(xs.iter().all(|&x| (1.0..=120.0).contains(&x)));
+        let m = stats::mean(&xs);
+        assert!((m - 10.0).abs() < 1.0, "mean={m}");
+    }
+}

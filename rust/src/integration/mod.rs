@@ -1,0 +1,257 @@
+//! Third-party integration (§III-C, Fig. 3c): RP is a *building block* —
+//! user-facing workflow systems (Parsl) submit tasks through RP, and
+//! resource-facing runtimes (Flux) can replace RP's placement/launching
+//! while RP keeps resource acquisition and task management.
+//!
+//! * `WorkflowSource` — the Parsl-style upstream interface: anything that
+//!   yields task descriptions can drive an RP session (`drive_session`).
+//! * `ExternalScheduler` — the Flux-style downstream interface: the
+//!   Agent's staging component queues tasks to the external scheduler,
+//!   which places and launches them on the pilot's resources (Fig. 3c:
+//!   "tasks are described in Parsl, scheduled by RP and placed and
+//!   launched by Flux").
+//! * `FluxLike` — a reference ExternalScheduler implementation: FCFS with
+//!   its own free-core accounting, standing in for the Flux broker.
+
+use crate::task::TaskDescription;
+
+/// Parsl-style task source: an app graph flattened to ready tasks.
+pub trait WorkflowSource {
+    /// Pull up to `max` ready tasks (empty when exhausted).
+    fn ready_tasks(&mut self, max: usize) -> Vec<TaskDescription>;
+    /// Report a completion back to the workflow layer.
+    fn completed(&mut self, name: &str, ok: bool);
+    fn is_done(&self) -> bool;
+}
+
+/// A simple DAG-free source over a task list (what Parsl's bulk submit
+/// looks like from RP's side).
+pub struct ListSource {
+    tasks: std::collections::VecDeque<TaskDescription>,
+    outstanding: usize,
+    pub n_ok: usize,
+    pub n_failed: usize,
+}
+
+impl ListSource {
+    pub fn new(tasks: Vec<TaskDescription>) -> ListSource {
+        ListSource {
+            tasks: tasks.into(),
+            outstanding: 0,
+            n_ok: 0,
+            n_failed: 0,
+        }
+    }
+}
+
+impl WorkflowSource for ListSource {
+    fn ready_tasks(&mut self, max: usize) -> Vec<TaskDescription> {
+        let n = max.min(self.tasks.len());
+        self.outstanding += n;
+        self.tasks.drain(..n).collect()
+    }
+    fn completed(&mut self, _name: &str, ok: bool) {
+        self.outstanding -= 1;
+        if ok {
+            self.n_ok += 1;
+        } else {
+            self.n_failed += 1;
+        }
+    }
+    fn is_done(&self) -> bool {
+        self.tasks.is_empty() && self.outstanding == 0
+    }
+}
+
+/// Flux-style external scheduler: RP hands tasks over and gets
+/// completions back; placement/launching is the external system's job.
+pub trait ExternalScheduler {
+    /// Offer a task; Err(task) when the external queue is full.
+    fn submit(&mut self, task: TaskDescription) -> Result<u64, TaskDescription>;
+    /// Advance the external runtime by `dt` seconds of virtual time;
+    /// returns (job_id, ok) completions.
+    fn advance(&mut self, dt: f64) -> Vec<(u64, bool)>;
+    fn in_flight(&self) -> usize;
+}
+
+/// Reference ExternalScheduler: FCFS over `total_cores`, fixed per-task
+/// runtime taken from the description (a stand-in Flux broker).
+pub struct FluxLike {
+    total_cores: u64,
+    free_cores: u64,
+    queue: std::collections::VecDeque<(u64, TaskDescription)>,
+    running: Vec<(u64, f64, u64)>, // (job_id, remaining_s, cores)
+    next_id: u64,
+    queue_cap: usize,
+}
+
+impl FluxLike {
+    pub fn new(total_cores: u64, queue_cap: usize) -> FluxLike {
+        FluxLike {
+            total_cores,
+            free_cores: total_cores,
+            queue: Default::default(),
+            running: Vec::new(),
+            next_id: 0,
+            queue_cap,
+        }
+    }
+
+    fn try_start(&mut self) {
+        while let Some((id, td)) = self.queue.front() {
+            let cores = td.cores();
+            if cores > self.free_cores {
+                break;
+            }
+            let (id, td) = (*id, td.clone());
+            self.queue.pop_front();
+            self.free_cores -= cores;
+            self.running.push((id, td.runtime_s.max(0.0), cores));
+        }
+    }
+}
+
+impl ExternalScheduler for FluxLike {
+    fn submit(&mut self, task: TaskDescription) -> Result<u64, TaskDescription> {
+        if task.cores() > self.total_cores {
+            return Err(task); // can never run
+        }
+        if self.queue.len() >= self.queue_cap {
+            return Err(task);
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        self.queue.push_back((id, task));
+        self.try_start();
+        Ok(id)
+    }
+
+    fn advance(&mut self, dt: f64) -> Vec<(u64, bool)> {
+        let mut done = Vec::new();
+        for r in &mut self.running {
+            r.1 -= dt;
+        }
+        let mut i = 0;
+        while i < self.running.len() {
+            if self.running[i].1 <= 1e-12 {
+                let (id, _, cores) = self.running.swap_remove(i);
+                self.free_cores += cores;
+                done.push((id, true));
+            } else {
+                i += 1;
+            }
+        }
+        self.try_start();
+        done
+    }
+
+    fn in_flight(&self) -> usize {
+        self.running.len() + self.queue.len()
+    }
+}
+
+/// The Fig-3c composition: pull tasks from a workflow source (Parsl) and
+/// execute them through an external scheduler (Flux), with RP in the
+/// middle doing task management. Virtual-time loop; returns (ok, failed).
+pub fn drive_external(
+    source: &mut dyn WorkflowSource,
+    sched: &mut dyn ExternalScheduler,
+    tick_s: f64,
+    max_ticks: u64,
+) -> Result<(usize, usize), String> {
+    let mut names: std::collections::HashMap<u64, String> = Default::default();
+    let mut backlog: Vec<TaskDescription> = Vec::new();
+    let mut n_ok = 0;
+    let mut n_failed = 0;
+    for _ in 0..max_ticks {
+        // feed as much as the external queue accepts
+        if backlog.is_empty() {
+            backlog = source.ready_tasks(64);
+        }
+        while let Some(td) = backlog.pop() {
+            let name = td.name.clone();
+            match sched.submit(td) {
+                Ok(id) => {
+                    names.insert(id, name);
+                }
+                Err(td) => {
+                    backlog.push(td);
+                    break; // external queue full → backpressure
+                }
+            }
+        }
+        for (id, ok) in sched.advance(tick_s) {
+            let name = names.remove(&id).unwrap_or_default();
+            source.completed(&name, ok);
+            if ok {
+                n_ok += 1;
+            } else {
+                n_failed += 1;
+            }
+        }
+        if source.is_done() && backlog.is_empty() && sched.in_flight() == 0 {
+            return Ok((n_ok, n_failed));
+        }
+    }
+    Err("external execution did not converge within max_ticks".into())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tasks(n: usize, cores: u32, rt: f64) -> Vec<TaskDescription> {
+        (0..n)
+            .map(|i| {
+                let mut t = TaskDescription::emulated("x", 1, cores, rt);
+                t.name = format!("t{i}");
+                t
+            })
+            .collect()
+    }
+
+    #[test]
+    fn flux_like_fcfs_and_core_accounting() {
+        let mut f = FluxLike::new(8, 100);
+        let a = f.submit(tasks(1, 4, 10.0).pop().unwrap()).unwrap();
+        let _b = f.submit(tasks(1, 4, 20.0).pop().unwrap()).unwrap();
+        let _c = f.submit(tasks(1, 4, 5.0).pop().unwrap()).unwrap(); // queued
+        assert_eq!(f.in_flight(), 3);
+        let done = f.advance(10.0);
+        assert_eq!(done, vec![(a, true)]);
+        // c starts only after a freed cores
+        assert_eq!(f.in_flight(), 2);
+    }
+
+    #[test]
+    fn oversized_task_rejected() {
+        let mut f = FluxLike::new(4, 10);
+        assert!(f.submit(tasks(1, 8, 1.0).pop().unwrap()).is_err());
+    }
+
+    #[test]
+    fn fig3c_composition_runs_workflow_through_external_scheduler() {
+        let mut src = ListSource::new(tasks(200, 2, 3.0));
+        let mut flux = FluxLike::new(16, 32);
+        let (ok, failed) = drive_external(&mut src, &mut flux, 1.0, 10_000).unwrap();
+        assert_eq!(ok, 200);
+        assert_eq!(failed, 0);
+        assert_eq!(src.n_ok, 200);
+        assert!(src.is_done());
+    }
+
+    #[test]
+    fn backpressure_from_small_external_queue() {
+        let mut src = ListSource::new(tasks(50, 1, 1.0));
+        let mut flux = FluxLike::new(2, 2); // tiny queue forces backpressure
+        let (ok, _) = drive_external(&mut src, &mut flux, 0.5, 100_000).unwrap();
+        assert_eq!(ok, 50);
+    }
+
+    #[test]
+    fn nonconvergence_reported() {
+        let mut src = ListSource::new(tasks(10, 1, 1e9)); // effectively endless
+        let mut flux = FluxLike::new(16, 32);
+        assert!(drive_external(&mut src, &mut flux, 1.0, 10).is_err());
+    }
+}

@@ -1,0 +1,152 @@
+//! The `LaunchMethod` trait: placement command rendering + overhead model.
+
+use crate::util::rng::Rng;
+
+/// Where/how one task is placed (derived by the Executor from the task
+/// description and the scheduler's allocation).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Placement {
+    pub executable: String,
+    pub arguments: Vec<String>,
+    /// MPI ranks (1 for scalar tasks)
+    pub ranks: u32,
+    /// cores per rank (threads)
+    pub cores_per_rank: u32,
+    pub gpus_per_rank: u32,
+    /// node ids spanned by the allocation
+    pub nodes: Vec<u32>,
+    pub uses_mpi: bool,
+}
+
+impl Placement {
+    pub fn total_cores(&self) -> u64 {
+        self.ranks as u64 * self.cores_per_rank as u64
+    }
+}
+
+/// Per-launch sampled costs (the quantities Fig. 8 plots per task).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LaunchSample {
+    /// `Executor Starts` → `Executable Starts`: time the launcher spends
+    /// preparing/spawning before application processes run.
+    pub prep_s: f64,
+    /// `Executable Stops` → `Task Spawn Returns`: time until the launcher
+    /// notifies the executor of completion.
+    pub ack_s: f64,
+    /// launcher-induced task failure (PRRTE "mishandling processes under
+    /// the pressure of concurrency", §IV-D)
+    pub failed: bool,
+}
+
+pub trait LaunchMethod: Send {
+    fn name(&self) -> &'static str;
+
+    fn supports_mpi(&self) -> bool {
+        true
+    }
+
+    /// Hard cap on concurrently managed tasks (None = unbounded).
+    /// jsrun ≈ 800 (ref [47]).
+    fn max_concurrent(&self) -> Option<u32> {
+        None
+    }
+
+    /// Shared-filesystem operations incurred per launch (PRRTE reads its
+    /// install tree on each task start; the experiment driver charges
+    /// these against `platform::SharedFs`).
+    fn fs_ops_per_launch(&self) -> f64 {
+        0.0
+    }
+
+    /// Sample the launcher overheads for one task on a pilot of
+    /// `pilot_cores`, with `concurrent` tasks currently in flight.
+    fn sample(&self, rng: &mut Rng, pilot_cores: u64, concurrent: u64) -> LaunchSample;
+
+    /// Render the command line a real deployment would execute.
+    fn render_cmd(&self, p: &Placement) -> String;
+
+    /// Validate that this method can launch the placement.
+    fn check(&self, p: &Placement) -> Result<(), String> {
+        if p.uses_mpi && !self.supports_mpi() {
+            return Err(format!("{} cannot launch MPI tasks", self.name()));
+        }
+        if p.ranks == 0 || p.cores_per_rank == 0 {
+            return Err("placement with zero ranks/cores".into());
+        }
+        Ok(())
+    }
+}
+
+/// Factory keyed on the resource-config launch-method names.
+pub fn method_for(name: &str, seed_nodes: u32) -> Result<Box<dyn LaunchMethod>, String> {
+    use super::{Aprun, Fork, Jsrun, Mpirun, Orte, Prrte, Srun, Ssh};
+    match name {
+        "orte" => Ok(Box::new(Orte::new())),
+        "prrte" => Ok(Box::new(Prrte::new(seed_nodes))),
+        "jsrun" => Ok(Box::new(Jsrun)),
+        "aprun" => Ok(Box::new(Aprun)),
+        "srun" | "ibrun" => Ok(Box::new(Srun)),
+        "mpirun" | "mpiexec" | "mpirun_rsh" | "mpirun_mpt" => Ok(Box::new(Mpirun)),
+        "poe" => Ok(Box::new(super::simple::Poe)),
+        "runjob" => Ok(Box::new(super::simple::Runjob)),
+        "ccmrun" | "mpirun_ccmrun" | "dplace" | "mpirun_dplace" => {
+            Ok(Box::new(super::simple::Ccmrun))
+        }
+        "ssh" | "rsh" => Ok(Box::new(Ssh)),
+        "fork" => Ok(Box::new(Fork)),
+        other => Err(format!("unknown launch method '{other}'")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    pub fn placement(ranks: u32, mpi: bool) -> Placement {
+        Placement {
+            executable: "/bin/task".into(),
+            arguments: vec!["--x".into(), "1".into()],
+            ranks,
+            cores_per_rank: 2,
+            gpus_per_rank: 0,
+            nodes: vec![0, 1],
+            uses_mpi: mpi,
+        }
+    }
+
+    #[test]
+    fn factory_resolves_all_names() {
+        for n in [
+            "orte", "prrte", "jsrun", "aprun", "srun", "ibrun", "mpirun", "mpiexec",
+            "mpirun_rsh", "mpirun_mpt", "ssh", "rsh", "fork",
+        ] {
+            assert!(method_for(n, 16).is_ok(), "{n}");
+        }
+        for n in ["poe", "runjob", "ccmrun", "mpirun_ccmrun", "dplace"] {
+            assert!(method_for(n, 16).is_ok(), "{n}");
+        }
+        assert!(method_for("warpdrive", 16).is_err());
+    }
+
+    #[test]
+    fn check_rejects_mpi_on_nonmpi_method() {
+        let fork = method_for("fork", 1).unwrap();
+        assert!(fork.check(&placement(4, true)).is_err());
+        assert!(fork.check(&placement(1, false)).is_ok());
+    }
+
+    #[test]
+    fn check_rejects_empty_placement() {
+        let m = method_for("mpirun", 1).unwrap();
+        let mut p = placement(0, true);
+        assert!(m.check(&p).is_err());
+        p.ranks = 1;
+        p.cores_per_rank = 0;
+        assert!(m.check(&p).is_err());
+    }
+
+    #[test]
+    fn placement_core_accounting() {
+        assert_eq!(placement(4, true).total_cores(), 8);
+    }
+}

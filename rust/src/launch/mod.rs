@@ -1,0 +1,23 @@
+//! Task placement + launching methods (§III: RP supports fifteen; we
+//! implement the ones the paper's experiments exercise plus the common
+//! fallbacks, each with the overhead model the paper measured for it).
+//!
+//! * `orte`  — OpenMPI Runtime Environment: dominated exp 1–2 on Titan
+//!   (prep ≈ 37 s scale-invariant; completion-ack long-tailed, growing
+//!   with pilot size — §IV-C).
+//! * `prrte` — PMIx Reference RunTime Environment with multiple DVMs:
+//!   exp 3–4 on Summit (negligible ack; launch limited by shared-FS
+//!   pressure; occasional DVM/task failures at scale — §IV-D).
+//! * `jsrun` — Summit's native launcher (concurrency limit ≈ 800, per
+//!   ref [47] — the reason RP chose PRRTE).
+//! * `aprun`, `srun`, `mpirun`, `ssh`, `fork` — classic methods.
+
+pub mod method;
+pub mod orte;
+pub mod prrte;
+pub mod simple;
+
+pub use method::{method_for, LaunchMethod, LaunchSample, Placement};
+pub use orte::Orte;
+pub use prrte::{DvmMap, DvmPolicy, Prrte};
+pub use simple::{Aprun, Fork, Jsrun, Mpirun, Srun, Ssh};

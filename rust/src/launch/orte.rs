@@ -1,0 +1,181 @@
+//! ORTE (OpenMPI Runtime Environment) overhead model — the launcher that
+//! dominated experiments 1–2 on Titan.
+//!
+//! Calibration (paper §IV-C, Fig. 8):
+//!  * prep ("Executor Starts" → "Executable Starts"): mean ≈ 37 s,
+//!    essentially invariant across scales (37±9, 37±6, 35±8, 41±30 for
+//!    512…4096 tasks) — modeled N(37, 9) truncated at 2 s.
+//!  * ack ("Executable Stops" → "Task Spawn Returns"): "broad and
+//!    long-tailed", mean growing with pilot size — measured means/stds:
+//!      16,384 cores: 29±16   32,768: 34±28   65,536: 59±46   131,072: 135±107
+//!    modeled lognormal with mean/std interpolated from that table
+//!    (clamped outside).
+
+use super::method::{LaunchMethod, LaunchSample, Placement};
+use crate::util::rng::Rng;
+use crate::util::stats::interp;
+
+pub struct Orte {
+    prep_mean: f64,
+    prep_std: f64,
+    ack_mean_table: Vec<(f64, f64)>,
+    ack_std_table: Vec<(f64, f64)>,
+}
+
+impl Default for Orte {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Orte {
+    pub fn new() -> Orte {
+        Orte {
+            prep_mean: 37.0,
+            prep_std: 9.0,
+            ack_mean_table: vec![
+                (16_384.0, 29.0),
+                (32_768.0, 34.0),
+                (65_536.0, 59.0),
+                (131_072.0, 135.0),
+            ],
+            ack_std_table: vec![
+                (16_384.0, 16.0),
+                (32_768.0, 28.0),
+                (65_536.0, 46.0),
+                (131_072.0, 107.0),
+            ],
+        }
+    }
+
+    /// The calibrated mean ack latency for a pilot size (exposed for
+    /// analytics assertions and the ablation bench).
+    pub fn ack_mean(&self, pilot_cores: u64) -> f64 {
+        // Below the measured range the ack shrinks roughly linearly with
+        // size; extrapolate through (1024, 8) to keep small-pilot runs
+        // (exp-1's 1024…8192-core points) realistic.
+        if (pilot_cores as f64) < self.ack_mean_table[0].0 {
+            let t = [(1024.0, 8.0), (16_384.0, 29.0)];
+            return interp(&t, pilot_cores as f64);
+        }
+        interp(&self.ack_mean_table, pilot_cores as f64)
+    }
+
+    pub fn ack_std(&self, pilot_cores: u64) -> f64 {
+        if (pilot_cores as f64) < self.ack_std_table[0].0 {
+            let t = [(1024.0, 5.0), (16_384.0, 16.0)];
+            return interp(&t, pilot_cores as f64);
+        }
+        interp(&self.ack_std_table, pilot_cores as f64)
+    }
+}
+
+impl LaunchMethod for Orte {
+    fn name(&self) -> &'static str {
+        "orte"
+    }
+
+    fn sample(&self, rng: &mut Rng, pilot_cores: u64, _concurrent: u64) -> LaunchSample {
+        let prep = rng.normal_min(self.prep_mean, self.prep_std, 2.0);
+        let (m, s) = (self.ack_mean(pilot_cores), self.ack_std(pilot_cores));
+        // lognormal reproduces the "broad and long-tailed" Fig-8 ack
+        // distribution; clamped at mean+4σ — the paper's measured spread
+        // is bounded (its own Fig-8 spawn-return band), and an unbounded
+        // tail over thousands of draws would overstate the TTX ceiling.
+        let ack = rng.lognormal_ms(m, s).min(m + 4.0 * s);
+        LaunchSample {
+            prep_s: prep,
+            ack_s: ack,
+            failed: false,
+        }
+    }
+
+    fn render_cmd(&self, p: &Placement) -> String {
+        format!(
+            "orte-submit --hnp file:$RP_ORTE_URI -np {} --bind-to core {} {}",
+            p.ranks,
+            p.executable,
+            p.arguments.join(" ")
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn placement() -> Placement {
+        Placement {
+            executable: "synapse".into(),
+            arguments: vec!["--flops".into(), "1e12".into()],
+            ranks: 32,
+            cores_per_rank: 1,
+            gpus_per_rank: 0,
+            nodes: vec![0, 1],
+            uses_mpi: true,
+        }
+    }
+
+    #[test]
+    fn prep_mean_matches_paper_invariance() {
+        let o = Orte::new();
+        let mut rng = Rng::new(1);
+        for cores in [16_384u64, 131_072] {
+            let n = 5000;
+            let m: f64 = (0..n)
+                .map(|_| o.sample(&mut rng, cores, 0).prep_s)
+                .sum::<f64>()
+                / n as f64;
+            assert!((m - 37.0).abs() < 1.5, "prep mean at {cores}: {m}");
+        }
+    }
+
+    #[test]
+    fn ack_mean_tracks_calibration_table() {
+        let o = Orte::new();
+        assert!((o.ack_mean(16_384) - 29.0).abs() < 1e-9);
+        assert!((o.ack_mean(131_072) - 135.0).abs() < 1e-9);
+        assert!(o.ack_mean(65_536) > o.ack_mean(32_768));
+        // below-range extrapolation is small but positive
+        assert!(o.ack_mean(1024) > 0.0 && o.ack_mean(1024) < 29.0);
+    }
+
+    #[test]
+    fn sampled_ack_mean_close_to_table() {
+        let o = Orte::new();
+        let mut rng = Rng::new(2);
+        let n = 40_000;
+        let m: f64 = (0..n)
+            .map(|_| o.sample(&mut rng, 131_072, 0).ack_s)
+            .sum::<f64>()
+            / n as f64;
+        assert!((m - 135.0).abs() / 135.0 < 0.05, "ack mean {m}");
+    }
+
+    #[test]
+    fn ack_is_long_tailed() {
+        let o = Orte::new();
+        let mut rng = Rng::new(3);
+        let xs: Vec<f64> = (0..20_000)
+            .map(|_| o.sample(&mut rng, 131_072, 0).ack_s)
+            .collect();
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let max = xs.iter().cloned().fold(0.0f64, f64::max);
+        assert!(max > 3.0 * mean, "lognormal tail expected: max={max} mean={mean}");
+    }
+
+    #[test]
+    fn cmd_rendering() {
+        let o = Orte::new();
+        let cmd = o.render_cmd(&placement());
+        assert!(cmd.contains("-np 32"));
+        assert!(cmd.contains("synapse"));
+    }
+
+    #[test]
+    fn never_fails_tasks() {
+        let o = Orte::new();
+        let mut rng = Rng::new(4);
+        assert!((0..1000).all(|_| !o.sample(&mut rng, 16_384, 0).failed));
+    }
+}

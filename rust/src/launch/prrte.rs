@@ -1,0 +1,278 @@
+//! PRRTE (PMIx Reference RunTime Environment) with multiple DVMs — the
+//! launcher of experiments 3–4 on Summit (§III-C, Fig. 3b; §IV-D).
+//!
+//! Behaviour reproduced:
+//!  * resources are partitioned across Distributed Virtual Machines of at
+//!    most 256 nodes each (the paper used 4 DVMs on 1024 nodes, 16 on
+//!    4097, one node reserved for the Agent);
+//!  * tasks are routed to DVMs round-robin or by tag;
+//!  * completion acknowledgment is fast ("negligible overhead", unlike
+//!    ORTE) — modeled N(0.5, 0.2) s;
+//!  * per-launch cost is dominated by shared-filesystem reads of the PRRTE
+//!    install tree (`fs_ops_per_launch` charged to `platform::SharedFs` by
+//!    the executor) — the Fig-9 "Prepare Exec" purple areas;
+//!  * at scale, DVMs can fail (2 of 16 failed in the 4097-node run) and
+//!    PRRTE can fail tasks under concurrency pressure (1148 of 12,276).
+
+use super::method::{LaunchMethod, LaunchSample, Placement};
+use crate::util::rng::Rng;
+
+pub const MAX_NODES_PER_DVM: u32 = 256;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DvmPolicy {
+    RoundRobin,
+    Tagged,
+}
+
+#[derive(Clone, Debug)]
+pub struct Dvm {
+    pub id: u32,
+    /// node ids spanned
+    pub nodes: Vec<u32>,
+    pub alive: bool,
+}
+
+/// The DVM partition map an Executor routes across (Fig. 3b).
+#[derive(Clone, Debug)]
+pub struct DvmMap {
+    pub dvms: Vec<Dvm>,
+    pub policy: DvmPolicy,
+    next_rr: usize,
+}
+
+impl DvmMap {
+    /// Partition `node_ids` into DVMs of at most `max_per_dvm` nodes.
+    pub fn partition(node_ids: &[u32], max_per_dvm: u32, policy: DvmPolicy) -> DvmMap {
+        assert!(max_per_dvm > 0);
+        let dvms = node_ids
+            .chunks(max_per_dvm as usize)
+            .enumerate()
+            .map(|(i, chunk)| Dvm {
+                id: i as u32,
+                nodes: chunk.to_vec(),
+                alive: true,
+            })
+            .collect();
+        DvmMap {
+            dvms,
+            policy,
+            next_rr: 0,
+        }
+    }
+
+    pub fn n_alive(&self) -> usize {
+        self.dvms.iter().filter(|d| d.alive).count()
+    }
+
+    /// Route a task to a DVM id. `tag` pins to a specific DVM (Tagged
+    /// policy); RoundRobin skips dead DVMs (the paper's fault-tolerance:
+    /// "due to RP fault-tolerance, all the tasks were executed on the
+    /// remaining DVMs").
+    pub fn route(&mut self, tag: Option<u32>) -> Result<u32, String> {
+        if self.n_alive() == 0 {
+            return Err("all DVMs have failed".into());
+        }
+        match (self.policy, tag) {
+            (DvmPolicy::Tagged, Some(t)) => {
+                let dvm = self
+                    .dvms
+                    .get(t as usize)
+                    .ok_or_else(|| format!("tag {t} out of range"))?;
+                if dvm.alive {
+                    Ok(t)
+                } else {
+                    Err(format!("tagged DVM {t} is dead"))
+                }
+            }
+            _ => {
+                // round-robin over alive DVMs
+                for _ in 0..self.dvms.len() {
+                    let i = self.next_rr % self.dvms.len();
+                    self.next_rr += 1;
+                    if self.dvms[i].alive {
+                        return Ok(self.dvms[i].id);
+                    }
+                }
+                unreachable!("n_alive checked above")
+            }
+        }
+    }
+
+    pub fn kill(&mut self, dvm_id: u32) {
+        if let Some(d) = self.dvms.get_mut(dvm_id as usize) {
+            d.alive = false;
+        }
+    }
+
+    /// Nodes currently usable (alive DVMs only).
+    pub fn alive_nodes(&self) -> Vec<u32> {
+        self.dvms
+            .iter()
+            .filter(|d| d.alive)
+            .flat_map(|d| d.nodes.iter().copied())
+            .collect()
+    }
+}
+
+pub struct Prrte {
+    /// probability a DVM dies during bootstrap at large scale, calibrated
+    /// from the paper's 2-of-16 observation at 4097 nodes
+    pub dvm_failure_p: f64,
+    /// per-task failure probability under high concurrency ("PRRTE
+    /// mishandling processes under the pressure of concurrency") —
+    /// 1148 / 12,276 ≈ 0.094 at ~12k concurrent tasks
+    pub task_failure_p_at_full_scale: f64,
+    /// concurrency above which task failures start appearing
+    pub failure_onset_concurrency: u64,
+    /// pilot nodes this PRRTE instance manages
+    pub nodes: u32,
+}
+
+impl Prrte {
+    pub fn new(nodes: u32) -> Prrte {
+        Prrte {
+            dvm_failure_p: 2.0 / 16.0,
+            task_failure_p_at_full_scale: 1148.0 / 12_276.0,
+            failure_onset_concurrency: 4_000,
+            nodes,
+        }
+    }
+
+    /// Task failure probability at a given in-flight concurrency: zero
+    /// below the onset, ramping to the calibrated full-scale rate.
+    pub fn task_failure_p(&self, concurrent: u64) -> f64 {
+        if concurrent <= self.failure_onset_concurrency {
+            return 0.0;
+        }
+        let full = 12_276.0 - self.failure_onset_concurrency as f64;
+        let frac = ((concurrent - self.failure_onset_concurrency) as f64 / full).min(1.0);
+        self.task_failure_p_at_full_scale * frac
+    }
+}
+
+impl LaunchMethod for Prrte {
+    fn name(&self) -> &'static str {
+        "prrte"
+    }
+
+    fn fs_ops_per_launch(&self) -> f64 {
+        // PRRTE reads its install tree from the shared FS on every task
+        // start; the concrete count is taken from the platform config by
+        // the executor — this is the method-level default.
+        40.0
+    }
+
+    fn sample(&self, rng: &mut Rng, _pilot_cores: u64, concurrent: u64) -> LaunchSample {
+        // prep here covers only PRRTE's own process management; the
+        // dominant FS queueing is charged separately via SharedFs.
+        let prep = rng.normal_min(1.0, 0.3, 0.05);
+        let ack = rng.normal_min(0.5, 0.2, 0.01);
+        let failed = rng.bool(self.task_failure_p(concurrent));
+        LaunchSample {
+            prep_s: prep,
+            ack_s: ack,
+            failed,
+        }
+    }
+
+    fn render_cmd(&self, p: &Placement) -> String {
+        format!(
+            "prun --dvm-uri file:$RP_DVM_URI --np {} --map-by node {} {}",
+            p.ranks,
+            p.executable,
+            p.arguments.join(" ")
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn partition_sizes_match_paper() {
+        // 1024 nodes → 4 DVMs; 4096 → 16 (paper: 4097 incl. agent node)
+        let nodes: Vec<u32> = (0..1024).collect();
+        let m = DvmMap::partition(&nodes, MAX_NODES_PER_DVM, DvmPolicy::RoundRobin);
+        assert_eq!(m.dvms.len(), 4);
+        let nodes: Vec<u32> = (0..4096).collect();
+        let m = DvmMap::partition(&nodes, MAX_NODES_PER_DVM, DvmPolicy::RoundRobin);
+        assert_eq!(m.dvms.len(), 16);
+        assert!(m.dvms.iter().all(|d| d.nodes.len() <= 256));
+    }
+
+    #[test]
+    fn round_robin_cycles_alive_dvms() {
+        let nodes: Vec<u32> = (0..512).collect();
+        let mut m = DvmMap::partition(&nodes, 256, DvmPolicy::RoundRobin);
+        assert_eq!(m.route(None).unwrap(), 0);
+        assert_eq!(m.route(None).unwrap(), 1);
+        assert_eq!(m.route(None).unwrap(), 0);
+    }
+
+    #[test]
+    fn dead_dvms_are_skipped() {
+        let nodes: Vec<u32> = (0..1024).collect();
+        let mut m = DvmMap::partition(&nodes, 256, DvmPolicy::RoundRobin);
+        m.kill(1);
+        m.kill(3);
+        for _ in 0..16 {
+            let id = m.route(None).unwrap();
+            assert!(id == 0 || id == 2, "routed to dead DVM {id}");
+        }
+        assert_eq!(m.n_alive(), 2);
+        assert_eq!(m.alive_nodes().len(), 512);
+    }
+
+    #[test]
+    fn all_dead_is_an_error() {
+        let nodes: Vec<u32> = (0..256).collect();
+        let mut m = DvmMap::partition(&nodes, 256, DvmPolicy::RoundRobin);
+        m.kill(0);
+        assert!(m.route(None).is_err());
+    }
+
+    #[test]
+    fn tagged_routing_pins_and_checks() {
+        let nodes: Vec<u32> = (0..512).collect();
+        let mut m = DvmMap::partition(&nodes, 256, DvmPolicy::Tagged);
+        assert_eq!(m.route(Some(1)).unwrap(), 1);
+        m.kill(1);
+        assert!(m.route(Some(1)).is_err());
+        assert!(m.route(Some(9)).is_err());
+    }
+
+    #[test]
+    fn ack_is_negligible_vs_orte() {
+        let p = Prrte::new(1024);
+        let mut rng = Rng::new(7);
+        let mean: f64 = (0..5000)
+            .map(|_| p.sample(&mut rng, 43_008, 100).ack_s)
+            .sum::<f64>()
+            / 5000.0;
+        assert!(mean < 1.0, "PRRTE ack should be sub-second, got {mean}");
+    }
+
+    #[test]
+    fn failure_rate_ramps_with_concurrency() {
+        let p = Prrte::new(4096);
+        assert_eq!(p.task_failure_p(1000), 0.0);
+        assert_eq!(p.task_failure_p(4000), 0.0);
+        let full = p.task_failure_p(12_276);
+        assert!((full - 1148.0 / 12_276.0).abs() < 1e-9);
+        assert!(p.task_failure_p(8000) > 0.0 && p.task_failure_p(8000) < full);
+    }
+
+    #[test]
+    fn sampled_failures_near_calibration() {
+        let p = Prrte::new(4096);
+        let mut rng = Rng::new(8);
+        let n = 20_000;
+        let fails = (0..n)
+            .filter(|_| p.sample(&mut rng, 172_074, 12_276).failed)
+            .count();
+        let rate = fails as f64 / n as f64;
+        assert!((rate - 0.0935).abs() < 0.01, "failure rate {rate}");
+    }
+}

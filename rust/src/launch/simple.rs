@@ -1,0 +1,265 @@
+//! The simpler launch methods: jsrun, aprun, srun, mpirun, ssh, fork.
+//! Each renders its real command line and carries a light overhead model;
+//! `jsrun` additionally carries Summit's measured ~800-concurrent-task cap
+//! (ref [47] via §IV-D) — the ablation bench uses it to show why the paper
+//! moved to PRRTE.
+
+use super::method::{LaunchMethod, LaunchSample, Placement};
+use crate::util::rng::Rng;
+
+fn light_sample(rng: &mut Rng, prep_mean: f64, ack_mean: f64) -> LaunchSample {
+    LaunchSample {
+        prep_s: rng.normal_min(prep_mean, prep_mean * 0.3, prep_mean * 0.1),
+        ack_s: rng.normal_min(ack_mean, ack_mean * 0.3, ack_mean * 0.1),
+        failed: false,
+    }
+}
+
+/// Summit's native LSF launcher.
+pub struct Jsrun;
+
+impl LaunchMethod for Jsrun {
+    fn name(&self) -> &'static str {
+        "jsrun"
+    }
+    fn max_concurrent(&self) -> Option<u32> {
+        Some(800) // scalability limit reported in [47]
+    }
+    fn sample(&self, rng: &mut Rng, _cores: u64, _conc: u64) -> LaunchSample {
+        light_sample(rng, 2.0, 1.0)
+    }
+    fn render_cmd(&self, p: &Placement) -> String {
+        format!(
+            "jsrun --np {} --cpu_per_rs {} --gpu_per_rs {} {} {}",
+            p.ranks,
+            p.cores_per_rank,
+            p.gpus_per_rank,
+            p.executable,
+            p.arguments.join(" ")
+        )
+    }
+}
+
+/// Cray ALPS launcher (Titan's native method).
+pub struct Aprun;
+
+impl LaunchMethod for Aprun {
+    fn name(&self) -> &'static str {
+        "aprun"
+    }
+    fn sample(&self, rng: &mut Rng, _cores: u64, _conc: u64) -> LaunchSample {
+        light_sample(rng, 3.0, 1.5)
+    }
+    fn render_cmd(&self, p: &Placement) -> String {
+        format!(
+            "aprun -n {} -d {} {} {}",
+            p.ranks,
+            p.cores_per_rank,
+            p.executable,
+            p.arguments.join(" ")
+        )
+    }
+}
+
+/// Slurm's srun (also covers TACC ibrun semantics).
+pub struct Srun;
+
+impl LaunchMethod for Srun {
+    fn name(&self) -> &'static str {
+        "srun"
+    }
+    fn sample(&self, rng: &mut Rng, _cores: u64, _conc: u64) -> LaunchSample {
+        light_sample(rng, 1.5, 0.8)
+    }
+    fn render_cmd(&self, p: &Placement) -> String {
+        format!(
+            "srun --ntasks {} --cpus-per-task {} {} {}",
+            p.ranks,
+            p.cores_per_rank,
+            p.executable,
+            p.arguments.join(" ")
+        )
+    }
+}
+
+/// Plain mpirun/mpiexec.
+pub struct Mpirun;
+
+impl LaunchMethod for Mpirun {
+    fn name(&self) -> &'static str {
+        "mpirun"
+    }
+    fn sample(&self, rng: &mut Rng, _cores: u64, _conc: u64) -> LaunchSample {
+        light_sample(rng, 1.0, 0.5)
+    }
+    fn render_cmd(&self, p: &Placement) -> String {
+        let hosts: Vec<String> = p.nodes.iter().map(|n| format!("node{n:05}")).collect();
+        format!(
+            "mpirun -np {} -host {} {} {}",
+            p.ranks,
+            hosts.join(","),
+            p.executable,
+            p.arguments.join(" ")
+        )
+    }
+}
+
+/// ssh-based remote spawn — non-MPI only.
+pub struct Ssh;
+
+impl LaunchMethod for Ssh {
+    fn name(&self) -> &'static str {
+        "ssh"
+    }
+    fn supports_mpi(&self) -> bool {
+        false
+    }
+    fn sample(&self, rng: &mut Rng, _cores: u64, _conc: u64) -> LaunchSample {
+        light_sample(rng, 0.5, 0.2)
+    }
+    fn render_cmd(&self, p: &Placement) -> String {
+        format!(
+            "ssh node{:05} {} {}",
+            p.nodes.first().copied().unwrap_or(0),
+            p.executable,
+            p.arguments.join(" ")
+        )
+    }
+}
+
+/// IBM Parallel Operating Environment (POE).
+pub struct Poe;
+
+impl LaunchMethod for Poe {
+    fn name(&self) -> &'static str {
+        "poe"
+    }
+    fn sample(&self, rng: &mut Rng, _cores: u64, _conc: u64) -> LaunchSample {
+        light_sample(rng, 4.0, 2.0)
+    }
+    fn render_cmd(&self, p: &Placement) -> String {
+        format!(
+            "poe {} {} -procs {} -tasks_per_node {}",
+            p.executable,
+            p.arguments.join(" "),
+            p.ranks,
+            p.cores_per_rank
+        )
+    }
+}
+
+/// IBM BG/Q runjob (pairs with the Torus scheduler).
+pub struct Runjob;
+
+impl LaunchMethod for Runjob {
+    fn name(&self) -> &'static str {
+        "runjob"
+    }
+    fn sample(&self, rng: &mut Rng, _cores: u64, _conc: u64) -> LaunchSample {
+        light_sample(rng, 5.0, 2.5)
+    }
+    fn render_cmd(&self, p: &Placement) -> String {
+        format!(
+            "runjob --np {} --ranks-per-node {} : {} {}",
+            p.ranks,
+            p.cores_per_rank,
+            p.executable,
+            p.arguments.join(" ")
+        )
+    }
+}
+
+/// Cray Cluster-Compatibility-Mode launcher.
+pub struct Ccmrun;
+
+impl LaunchMethod for Ccmrun {
+    fn name(&self) -> &'static str {
+        "ccmrun"
+    }
+    fn sample(&self, rng: &mut Rng, _cores: u64, _conc: u64) -> LaunchSample {
+        light_sample(rng, 3.5, 1.5)
+    }
+    fn render_cmd(&self, p: &Placement) -> String {
+        format!("ccmrun mpirun -np {} {} {}", p.ranks, p.executable, p.arguments.join(" "))
+    }
+}
+
+/// Local fork/exec — non-MPI only; this is also the method the real
+/// execution mode uses to spawn actual processes on `local`.
+pub struct Fork;
+
+impl LaunchMethod for Fork {
+    fn name(&self) -> &'static str {
+        "fork"
+    }
+    fn supports_mpi(&self) -> bool {
+        false
+    }
+    fn sample(&self, rng: &mut Rng, _cores: u64, _conc: u64) -> LaunchSample {
+        light_sample(rng, 0.01, 0.005)
+    }
+    fn render_cmd(&self, p: &Placement) -> String {
+        format!("{} {}", p.executable, p.arguments.join(" "))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p() -> Placement {
+        Placement {
+            executable: "/bin/echo".into(),
+            arguments: vec!["hi".into()],
+            ranks: 6,
+            cores_per_rank: 7,
+            gpus_per_rank: 1,
+            nodes: vec![3, 4],
+            uses_mpi: true,
+        }
+    }
+
+    #[test]
+    fn jsrun_concurrency_cap() {
+        assert_eq!(Jsrun.max_concurrent(), Some(800));
+        assert_eq!(Mpirun.max_concurrent(), None);
+    }
+
+    #[test]
+    fn command_lines_contain_geometry() {
+        assert!(Jsrun.render_cmd(&p()).contains("--np 6"));
+        assert!(Jsrun.render_cmd(&p()).contains("--gpu_per_rs 1"));
+        assert!(Aprun.render_cmd(&p()).contains("-n 6 -d 7"));
+        assert!(Srun.render_cmd(&p()).contains("--ntasks 6"));
+        assert!(Mpirun.render_cmd(&p()).contains("node00003,node00004"));
+        assert!(Ssh.render_cmd(&p()).starts_with("ssh node00003"));
+        assert_eq!(Fork.render_cmd(&p()), "/bin/echo hi");
+    }
+
+    #[test]
+    fn ibm_cray_methods_render() {
+        assert!(Poe.render_cmd(&p()).contains("-procs 6"));
+        assert!(Runjob.render_cmd(&p()).contains("--np 6"));
+        assert!(Ccmrun.render_cmd(&p()).starts_with("ccmrun mpirun"));
+        assert!(Poe.supports_mpi() && Runjob.supports_mpi() && Ccmrun.supports_mpi());
+    }
+
+    #[test]
+    fn ssh_and_fork_reject_mpi() {
+        assert!(!Ssh.supports_mpi());
+        assert!(!Fork.supports_mpi());
+        assert!(Aprun.supports_mpi());
+    }
+
+    #[test]
+    fn samples_are_positive_and_light() {
+        let mut rng = Rng::new(5);
+        for _ in 0..100 {
+            let s = Fork.sample(&mut rng, 64, 0);
+            assert!(s.prep_s > 0.0 && s.prep_s < 0.1);
+            assert!(!s.failed);
+            let s = Jsrun.sample(&mut rng, 43_008, 100);
+            assert!(s.prep_s > 0.0 && s.prep_s < 10.0);
+        }
+    }
+}

@@ -1,0 +1,23 @@
+//! `rp-rs` — a Rust reproduction of RADICAL-Pilot (Merzky et al., 2021).
+//!
+//! See DESIGN.md for the module map and experiment index.
+
+pub mod util;
+pub mod sim;
+pub mod platform;
+pub mod saga;
+pub mod launch;
+pub mod db;
+pub mod integration;
+pub mod mesh;
+pub mod task;
+pub mod pilot;
+pub mod tmgr;
+pub mod agent;
+pub mod raptor;
+pub mod runtime;
+pub mod session;
+pub mod config;
+pub mod tracer;
+pub mod analytics;
+pub mod experiments;

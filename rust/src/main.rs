@@ -1,0 +1,169 @@
+//! `rp` — the CLI entry point: runs the paper-experiment harness, inspects
+//! platforms/artifacts, and serves as the leader process for examples.
+//!
+//! Usage:
+//!   rp experiment <exp1|exp2|exp3|exp4|exp5|fig4|fig5|fig8|tracing|all>
+//!        [--seed N] [--repeats N] [--scale F] [--full]
+//!   rp platforms
+//!   rp artifacts [--dir PATH]
+
+use rp::experiments::{exp12, exp34, exp5, figs, write_csv};
+use rp::util::args::Args;
+
+fn main() {
+    let args = Args::from_env();
+    match args.positionals.first().map(|s| s.as_str()) {
+        Some("experiment") => experiment(&args),
+        Some("platforms") => platforms(),
+        Some("artifacts") => artifacts(&args),
+        _ => usage(),
+    }
+}
+
+fn usage() {
+    eprintln!(
+        "rp — RADICAL-Pilot reproduction (Merzky et al., 2021)\n\
+         \n\
+         commands:\n\
+           experiment <id>   regenerate a paper table/figure\n\
+                             ids: exp1 exp2 exp3 exp4 exp5 fig4 fig5 fig8 tracing ablation all\n\
+                             options: --seed N --repeats N --scale F --full\n\
+           platforms         list embedded platform configs\n\
+           artifacts         list compiled PJRT artifacts (--dir PATH)\n"
+    );
+    std::process::exit(2);
+}
+
+fn experiment(args: &Args) {
+    let id = args.positionals.get(1).map(|s| s.as_str()).unwrap_or("all");
+    let seed = args.u64_or("seed", 42);
+    let repeats = args.usize_or("repeats", 3);
+    let run_all = id == "all";
+
+    if run_all || id == "fig4" {
+        figs::fig4_print();
+        let p = write_csv("fig4_md_scaling.csv", &figs::fig4_csv());
+        println!("wrote {}\n", p.display());
+    }
+    if run_all || id == "fig5" {
+        let r = figs::fig5(1024, seed);
+        r.print();
+        let p = write_csv("fig5_synapse_dist.csv", &r.csv());
+        println!("wrote {}\n", p.display());
+    }
+    if run_all || id == "exp1" {
+        let rep = exp12::run_exp1(repeats, seed);
+        rep.print("Experiment 1: weak scaling, Titan/ORTE (Fig 6 top, Fig 7, Table I)");
+        let p = write_csv("exp1_weak_scaling.csv", &rep.table());
+        println!("wrote {}\n", p.display());
+    }
+    if run_all || id == "exp2" {
+        let rep = exp12::run_exp2(repeats, seed);
+        rep.print("Experiment 2: strong scaling, Titan/ORTE (Fig 6 bottom, Fig 7, Table I)");
+        let p = write_csv("exp2_strong_scaling.csv", &rep.table());
+        println!("wrote {}\n", p.display());
+    }
+    if run_all || id == "fig8" {
+        figs::fig8_print(seed);
+        let p = write_csv("fig8_task_events.csv", &figs::fig8_csv(512, 16_384, seed));
+        println!("wrote {} (512 tasks / 16,384 cores run)\n", p.display());
+    }
+    if run_all || id == "exp3" {
+        let runs = exp34::run_exp3(seed);
+        exp34::print_runs(
+            "Experiment 3: weak scaling, Summit/PRRTE multi-DVM (Fig 9a-b, Table I)",
+            &runs,
+        );
+        for r in &runs {
+            let p = write_csv(&format!("exp3_{}_timeline.csv", r.label), &r.timeline_csv);
+            println!("wrote {}", p.display());
+        }
+        println!("(paper: sched ~10 s / ~100 s; RU 77 % / 41 %; OVH 61 s / 131 s)\n");
+    }
+    if run_all || id == "exp4" {
+        let runs = exp34::run_exp4(seed);
+        exp34::print_runs(
+            "Experiment 4: strong scaling, Summit/PRRTE multi-DVM (Fig 9c-d, Table I)",
+            &runs,
+        );
+        for r in &runs {
+            let p = write_csv(&format!("exp4_{}_timeline.csv", r.label), &r.timeline_csv);
+            println!("wrote {}", p.display());
+        }
+        println!("(paper: RU 76 % / 38 %; OVH 115 s / 251 s)\n");
+    }
+    if run_all || id == "exp5" {
+        let scale = args.f64_or("scale", if args.flag("full") { 1.0 } else { 0.1 });
+        let mut cfg = exp5::Exp5Config::paper_scaled(scale);
+        cfg.seed = seed;
+        println!(
+            "running exp5 at scale {scale} ({} masters, {} calls)…",
+            cfg.n_masters, cfg.n_calls
+        );
+        let r = exp5::run_exp5(&cfg);
+        r.print();
+        let p = write_csv("exp5_timeseries.csv", &r.series.to_csv());
+        println!("wrote {}\n", p.display());
+    }
+    if run_all || id == "ablation" {
+        rp::experiments::ablations::print_all(seed);
+    }
+    if run_all || id == "tracing" {
+        let r = figs::tracing_overhead(3);
+        println!("== Tracing overhead (§III-D) ==");
+        println!(
+            "harness wall time: {:.3} s traced / {:.3} s untraced → {:+.1} % ({} events)",
+            r.with_tracing_s, r.without_tracing_s, r.overhead_pct, r.events_recorded
+        );
+        println!("(paper: +2.5 % on a 1045 s run)\n");
+    }
+    if !run_all
+        && ![
+            "exp1", "exp2", "exp3", "exp4", "exp5", "fig4", "fig5", "fig8", "tracing", "ablation",
+        ]
+        .contains(&id)
+    {
+        eprintln!("unknown experiment id '{id}'");
+        usage();
+    }
+}
+
+fn platforms() {
+    println!("embedded platform configs:");
+    for name in rp::config::platforms() {
+        let cfg = rp::config::resource_config(name).unwrap();
+        println!(
+            "  {:<18} nodes={:<6} cores/node={:<3} gpus/node={:<2} batch={} launch={:?}",
+            name,
+            cfg.u64_or("nodes", 0),
+            cfg.u64_or("cores_per_node", 0),
+            cfg.u64_or("gpus_per_node", 0),
+            cfg.str_or("batch_system", "?"),
+            cfg.get("launch_methods")
+                .as_arr()
+                .map(|a| a.iter().filter_map(|v| v.as_str()).collect::<Vec<_>>())
+                .unwrap_or_default()
+        );
+    }
+}
+
+fn artifacts(args: &Args) {
+    let dir = args.get_or("dir", "artifacts");
+    match rp::runtime::Runtime::cpu(dir) {
+        Ok(rt) => {
+            println!("PJRT platform: {}", rt.platform_name());
+            let names = rt.available();
+            if names.is_empty() {
+                println!("no artifacts in {dir}/ — run `make artifacts`");
+            } else {
+                for n in names {
+                    println!("  {n}");
+                }
+            }
+        }
+        Err(e) => {
+            eprintln!("PJRT client error: {e}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -1,0 +1,17 @@
+//! ZeroMQ-substitute communication mesh (§III-A: "Components are
+//! coordinated via a dedicated ZeroMQ-based communication mesh … chosen …
+//! for its communication patterns Publish/Subscriber and Router/Dealer").
+//!
+//! Two bridges, mirroring RP's `zmq.PubSub` and `zmq.Queue`:
+//!  * `PubSub` — topic-filtered fan-out (state notifications, heartbeats);
+//!  * `WorkQueue` — router/dealer work distribution (task hand-offs between
+//!    Agent components; competing consumers).
+//!
+//! Built on std mutex/condvar channels so the real-mode agent can run its
+//! components on threads exactly as RP runs them as processes.
+
+pub mod pubsub;
+pub mod queue;
+
+pub use pubsub::{PubSub, Subscription};
+pub use queue::WorkQueue;

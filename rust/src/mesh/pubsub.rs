@@ -1,0 +1,175 @@
+//! Publish/Subscribe bridge with topic prefix filtering (ZMQ-style).
+//! Carries state notifications and heartbeats between RP components.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+
+struct SubInner<T> {
+    q: VecDeque<(String, T)>,
+    closed: bool,
+}
+
+struct Sub<T> {
+    topic_prefix: String,
+    inner: Arc<(Mutex<SubInner<T>>, Condvar)>,
+}
+
+/// A subscription handle: receive messages matching the topic prefix.
+pub struct Subscription<T> {
+    inner: Arc<(Mutex<SubInner<T>>, Condvar)>,
+}
+
+impl<T> Subscription<T> {
+    /// Blocking receive; None once the bus is closed and drained.
+    pub fn recv(&self) -> Option<(String, T)> {
+        let (m, cv) = &*self.inner;
+        let mut g = m.lock().unwrap();
+        loop {
+            if let Some(msg) = g.q.pop_front() {
+                return Some(msg);
+            }
+            if g.closed {
+                return None;
+            }
+            g = cv.wait(g).unwrap();
+        }
+    }
+
+    pub fn try_recv(&self) -> Option<(String, T)> {
+        self.inner.0.lock().unwrap().q.pop_front()
+    }
+
+    /// Drain everything currently queued.
+    pub fn drain(&self) -> Vec<(String, T)> {
+        self.inner.0.lock().unwrap().q.drain(..).collect()
+    }
+
+    pub fn pending(&self) -> usize {
+        self.inner.0.lock().unwrap().q.len()
+    }
+}
+
+/// The bus. Publishers clone it; `subscribe(prefix)` creates filtered
+/// subscriptions.
+pub struct PubSub<T: Clone> {
+    subs: Arc<Mutex<Vec<Sub<T>>>>,
+}
+
+impl<T: Clone> Clone for PubSub<T> {
+    fn clone(&self) -> Self {
+        PubSub {
+            subs: self.subs.clone(),
+        }
+    }
+}
+
+impl<T: Clone> Default for PubSub<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T: Clone> PubSub<T> {
+    pub fn new() -> PubSub<T> {
+        PubSub {
+            subs: Arc::new(Mutex::new(Vec::new())),
+        }
+    }
+
+    pub fn subscribe(&self, topic_prefix: &str) -> Subscription<T> {
+        let inner = Arc::new((
+            Mutex::new(SubInner {
+                q: VecDeque::new(),
+                closed: false,
+            }),
+            Condvar::new(),
+        ));
+        self.subs.lock().unwrap().push(Sub {
+            topic_prefix: topic_prefix.to_string(),
+            inner: inner.clone(),
+        });
+        Subscription { inner }
+    }
+
+    /// Publish to all subscriptions whose prefix matches `topic`.
+    pub fn publish(&self, topic: &str, msg: T) {
+        let subs = self.subs.lock().unwrap();
+        for s in subs.iter() {
+            if topic.starts_with(&s.topic_prefix) {
+                let (m, cv) = &*s.inner;
+                let mut g = m.lock().unwrap();
+                if !g.closed {
+                    g.q.push_back((topic.to_string(), msg.clone()));
+                    cv.notify_one();
+                }
+            }
+        }
+    }
+
+    /// Close the bus: all subscribers drain then see None.
+    pub fn close(&self) {
+        let subs = self.subs.lock().unwrap();
+        for s in subs.iter() {
+            let (m, cv) = &*s.inner;
+            m.lock().unwrap().closed = true;
+            cv.notify_all();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    #[test]
+    fn topic_prefix_filtering() {
+        let bus: PubSub<u32> = PubSub::new();
+        let all = bus.subscribe("");
+        let states = bus.subscribe("state.");
+        let tasks = bus.subscribe("state.task");
+        bus.publish("state.task", 1);
+        bus.publish("state.pilot", 2);
+        bus.publish("heartbeat", 3);
+        assert_eq!(all.pending(), 3);
+        assert_eq!(states.pending(), 2);
+        assert_eq!(tasks.pending(), 1);
+        assert_eq!(tasks.try_recv().unwrap(), ("state.task".to_string(), 1));
+    }
+
+    #[test]
+    fn fanout_clones_to_each_subscriber() {
+        let bus: PubSub<String> = PubSub::new();
+        let a = bus.subscribe("x");
+        let b = bus.subscribe("x");
+        bus.publish("x", "m".to_string());
+        assert_eq!(a.pending(), 1);
+        assert_eq!(b.pending(), 1);
+    }
+
+    #[test]
+    fn blocking_recv_and_close() {
+        let bus: PubSub<u32> = PubSub::new();
+        let sub = bus.subscribe("t");
+        let bus2 = bus.clone();
+        let h = thread::spawn(move || {
+            thread::sleep(std::time::Duration::from_millis(20));
+            bus2.publish("t", 9);
+            bus2.close();
+        });
+        assert_eq!(sub.recv().unwrap().1, 9);
+        assert!(sub.recv().is_none()); // closed
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn drain_empties_queue() {
+        let bus: PubSub<u32> = PubSub::new();
+        let sub = bus.subscribe("");
+        for i in 0..5 {
+            bus.publish("t", i);
+        }
+        assert_eq!(sub.drain().len(), 5);
+        assert_eq!(sub.pending(), 0);
+    }
+}

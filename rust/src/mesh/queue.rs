@@ -1,0 +1,257 @@
+//! Router/Dealer-style work queue: many producers, many competing
+//! consumers, FIFO, bounded (providing the backpressure RP gets from ZMQ
+//! high-water marks).
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+
+struct Inner<T> {
+    q: VecDeque<T>,
+    capacity: usize,
+    closed: bool,
+    /// consumers currently blocked in pop()/pop_timeout()
+    waiting_consumers: usize,
+    /// producers currently blocked in push()
+    waiting_producers: usize,
+}
+
+pub struct WorkQueue<T> {
+    inner: Arc<(Mutex<Inner<T>>, Condvar, Condvar)>,
+}
+
+impl<T> Clone for WorkQueue<T> {
+    fn clone(&self) -> Self {
+        WorkQueue {
+            inner: self.inner.clone(),
+        }
+    }
+}
+
+impl<T> WorkQueue<T> {
+    /// `capacity` 0 = unbounded.
+    pub fn new(capacity: usize) -> WorkQueue<T> {
+        WorkQueue {
+            inner: Arc::new((
+                Mutex::new(Inner {
+                    q: VecDeque::new(),
+                    capacity,
+                    closed: false,
+                    waiting_consumers: 0,
+                    waiting_producers: 0,
+                }),
+                Condvar::new(), // not-empty
+                Condvar::new(), // not-full
+            )),
+        }
+    }
+
+    /// Blocking push (backpressure). Err if the queue is closed.
+    pub fn push(&self, item: T) -> Result<(), T> {
+        let (m, not_empty, not_full) = &*self.inner;
+        let mut g = m.lock().unwrap();
+        while g.capacity > 0 && g.q.len() >= g.capacity && !g.closed {
+            g.waiting_producers += 1;
+            g = not_full.wait(g).unwrap();
+            g.waiting_producers -= 1;
+        }
+        if g.closed {
+            return Err(item);
+        }
+        g.q.push_back(item);
+        // §Perf: notify costs a futex syscall; skip it when no consumer
+        // can be asleep (EXPERIMENTS.md §Perf: 13.3 µs → sub-µs push+pop)
+        if g.waiting_consumers > 0 {
+            not_empty.notify_one();
+        }
+        Ok(())
+    }
+
+    /// Non-blocking push; Err(item) when full or closed.
+    pub fn try_push(&self, item: T) -> Result<(), T> {
+        let (m, not_empty, _) = &*self.inner;
+        let mut g = m.lock().unwrap();
+        if g.closed || (g.capacity > 0 && g.q.len() >= g.capacity) {
+            return Err(item);
+        }
+        g.q.push_back(item);
+        if g.waiting_consumers > 0 {
+            not_empty.notify_one();
+        }
+        Ok(())
+    }
+
+    /// Blocking pop; None when closed and drained.
+    pub fn pop(&self) -> Option<T> {
+        let (m, not_empty, not_full) = &*self.inner;
+        let mut g = m.lock().unwrap();
+        loop {
+            if let Some(item) = g.q.pop_front() {
+                if g.waiting_producers > 0 {
+                    not_full.notify_one();
+                }
+                // chained wakeup: more items + more sleepers → pass it on
+                if !g.q.is_empty() && g.waiting_consumers > 0 {
+                    not_empty.notify_one();
+                }
+                return Some(item);
+            }
+            if g.closed {
+                return None;
+            }
+            g.waiting_consumers += 1;
+            g = not_empty.wait(g).unwrap();
+            g.waiting_consumers -= 1;
+        }
+    }
+
+    /// Blocking pop with a timeout; None on timeout or when closed+empty.
+    pub fn pop_timeout(&self, timeout: std::time::Duration) -> Option<T> {
+        let (m, not_empty, not_full) = &*self.inner;
+        let deadline = std::time::Instant::now() + timeout;
+        let mut g = m.lock().unwrap();
+        loop {
+            if let Some(item) = g.q.pop_front() {
+                if g.waiting_producers > 0 {
+                    not_full.notify_one();
+                }
+                if !g.q.is_empty() && g.waiting_consumers > 0 {
+                    not_empty.notify_one();
+                }
+                return Some(item);
+            }
+            if g.closed {
+                return None;
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            g.waiting_consumers += 1;
+            let (guard, res) = not_empty.wait_timeout(g, deadline - now).unwrap();
+            g = guard;
+            g.waiting_consumers -= 1;
+            if res.timed_out() && g.q.is_empty() {
+                return None;
+            }
+        }
+    }
+
+    /// Non-blocking pop.
+    pub fn try_pop(&self) -> Option<T> {
+        let (m, _, not_full) = &*self.inner;
+        let mut g = m.lock().unwrap();
+        let item = g.q.pop_front();
+        if item.is_some() && g.waiting_producers > 0 {
+            not_full.notify_one();
+        }
+        item
+    }
+
+    /// Bulk pop of up to `max` items (agent components consume in bulk).
+    pub fn pop_bulk(&self, max: usize) -> Vec<T> {
+        let (m, _, not_full) = &*self.inner;
+        let mut g = m.lock().unwrap();
+        let n = max.min(g.q.len());
+        let out: Vec<T> = g.q.drain(..n).collect();
+        if !out.is_empty() && g.waiting_producers > 0 {
+            not_full.notify_all();
+        }
+        out
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.0.lock().unwrap().q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Close: producers fail, consumers drain then get None.
+    pub fn close(&self) {
+        let (m, not_empty, not_full) = &*self.inner;
+        m.lock().unwrap().closed = true;
+        not_empty.notify_all();
+        not_full.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    #[test]
+    fn fifo_single_thread() {
+        let q = WorkQueue::new(0);
+        for i in 0..5 {
+            q.push(i).unwrap();
+        }
+        assert_eq!(q.len(), 5);
+        assert_eq!((0..5).map(|_| q.try_pop().unwrap()).collect::<Vec<_>>(), vec![0, 1, 2, 3, 4]);
+        assert!(q.try_pop().is_none());
+    }
+
+    #[test]
+    fn competing_consumers_partition_work() {
+        let q: WorkQueue<u32> = WorkQueue::new(0);
+        let total = 10_000u32;
+        let consumers: Vec<_> = (0..4)
+            .map(|_| {
+                let q = q.clone();
+                thread::spawn(move || {
+                    let mut got = Vec::new();
+                    while let Some(v) = q.pop() {
+                        got.push(v);
+                    }
+                    got
+                })
+            })
+            .collect();
+        for i in 0..total {
+            q.push(i).unwrap();
+        }
+        q.close();
+        let mut all: Vec<u32> = consumers
+            .into_iter()
+            .flat_map(|h| h.join().unwrap())
+            .collect();
+        all.sort();
+        assert_eq!(all, (0..total).collect::<Vec<_>>()); // exactly-once
+    }
+
+    #[test]
+    fn bounded_queue_backpressures() {
+        let q = WorkQueue::new(2);
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        assert!(q.try_push(3).is_err()); // full
+        let q2 = q.clone();
+        let producer = thread::spawn(move || q2.push(3)); // blocks
+        thread::sleep(std::time::Duration::from_millis(20));
+        assert_eq!(q.try_pop(), Some(1)); // frees a slot
+        producer.join().unwrap().unwrap();
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn close_drains_then_stops() {
+        let q = WorkQueue::new(0);
+        q.push("a").unwrap();
+        q.close();
+        assert!(q.push("b").is_err());
+        assert_eq!(q.pop(), Some("a"));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn bulk_pop() {
+        let q = WorkQueue::new(0);
+        for i in 0..10 {
+            q.push(i).unwrap();
+        }
+        assert_eq!(q.pop_bulk(4), vec![0, 1, 2, 3]);
+        assert_eq!(q.pop_bulk(100).len(), 6);
+        assert!(q.pop_bulk(4).is_empty());
+    }
+}

@@ -1,0 +1,154 @@
+//! PilotDescription + Pilot state model (mirrors
+//! `radical.pilot.PilotDescription` / `radical.pilot.Pilot`).
+
+use crate::platform::{NodeMap, Platform, PlatformKind};
+
+#[derive(Clone, Debug)]
+pub struct PilotDescription {
+    /// platform name, e.g. "ornl.summit"
+    pub resource: String,
+    /// nodes requested (0 → derive from `cores`)
+    pub nodes: u32,
+    /// cores requested (used when nodes == 0)
+    pub cores: u64,
+    /// gpus requested (informational; nodes carry fixed GPU counts)
+    pub gpus: u64,
+    pub runtime_s: f64,
+    pub queue: String,
+    pub project: String,
+    /// nodes per PRRTE DVM partition (0 → launcher default of 256)
+    pub nodes_per_dvm: u32,
+}
+
+impl Default for PilotDescription {
+    fn default() -> Self {
+        PilotDescription {
+            resource: "local.localhost".into(),
+            nodes: 0,
+            cores: 0,
+            gpus: 0,
+            runtime_s: 3600.0,
+            queue: "batch".into(),
+            project: String::new(),
+            nodes_per_dvm: 0,
+        }
+    }
+}
+
+impl PilotDescription {
+    pub fn new(resource: &str, nodes: u32, runtime_s: f64) -> Self {
+        PilotDescription {
+            resource: resource.to_string(),
+            nodes,
+            runtime_s,
+            ..Default::default()
+        }
+    }
+
+    /// Resolve the node count against a platform (cores → nodes rounding
+    /// up, as RP does).
+    pub fn resolve_nodes(&self, platform: &Platform) -> Result<u32, String> {
+        let nodes = if self.nodes > 0 {
+            self.nodes
+        } else if self.cores > 0 {
+            self.cores.div_ceil(platform.cores_per_node as u64) as u32
+        } else {
+            return Err("pilot description has neither nodes nor cores".into());
+        };
+        if nodes > platform.nodes {
+            return Err(format!(
+                "pilot requests {} nodes; {} has {}",
+                nodes, platform.name, platform.nodes
+            ));
+        }
+        Ok(nodes)
+    }
+
+    pub fn verify(&self) -> Result<(), String> {
+        if PlatformKind::parse(&self.resource).is_none() {
+            return Err(format!("unknown resource '{}'", self.resource));
+        }
+        if self.nodes == 0 && self.cores == 0 {
+            return Err("pilot description has neither nodes nor cores".into());
+        }
+        if self.runtime_s <= 0.0 {
+            return Err("pilot runtime must be positive".into());
+        }
+        Ok(())
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PilotState {
+    New,
+    Launching,
+    Active,
+    Done,
+    Canceled,
+    Failed,
+}
+
+impl PilotState {
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, PilotState::Done | PilotState::Canceled | PilotState::Failed)
+    }
+}
+
+/// A live pilot: the placeholder job and, once active, the node map the
+/// Agent schedules on.
+#[derive(Clone, Debug)]
+pub struct Pilot {
+    pub uid: String,
+    pub description: PilotDescription,
+    pub state: PilotState,
+    pub platform: PlatformKind,
+    pub nodes: u32,
+    pub node_map: Option<NodeMap>,
+    pub batch_job_id: Option<u64>,
+}
+
+impl Pilot {
+    pub fn cores(&self, platform: &Platform) -> u64 {
+        self.nodes as u64 * platform.cores_per_node as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resolve_nodes_from_cores_rounds_up() {
+        let p = Platform::load(PlatformKind::Summit);
+        let pd = PilotDescription {
+            resource: "ornl.summit".into(),
+            cores: 43_008, // exactly 1024 nodes
+            ..Default::default()
+        };
+        assert_eq!(pd.resolve_nodes(&p).unwrap(), 1024);
+        let pd2 = PilotDescription {
+            cores: 43_009,
+            ..pd.clone()
+        };
+        assert_eq!(pd2.resolve_nodes(&p).unwrap(), 1025);
+    }
+
+    #[test]
+    fn oversized_pilot_rejected() {
+        let p = Platform::load(PlatformKind::Summit);
+        let pd = PilotDescription::new("ornl.summit", 5000, 3600.0);
+        assert!(pd.resolve_nodes(&p).is_err());
+    }
+
+    #[test]
+    fn verify_checks_fields() {
+        assert!(PilotDescription::default().verify().is_err()); // no size
+        let mut pd = PilotDescription::new("ornl.titan", 64, 3600.0);
+        assert!(pd.verify().is_ok());
+        pd.resource = "unknown.machine".into();
+        assert!(pd.verify().is_err());
+        let mut pd2 = PilotDescription::new("ornl.titan", 64, 0.0);
+        pd2.runtime_s = -1.0;
+        assert!(pd2.verify().is_err());
+    }
+}

@@ -1,0 +1,255 @@
+//! PilotManager + Launcher (§III-A, Fig. 1): submits pilots through SAGA,
+//! tracks their lifecycle, and derives the Agent layout (DVM partitioning,
+//! scheduler/executor configuration) from the resource config.
+
+use super::description::{Pilot, PilotDescription, PilotState};
+use crate::launch::prrte::MAX_NODES_PER_DVM;
+use crate::platform::{BatchSystem, NodeMap, Platform, PlatformKind};
+use crate::saga::{adapter_for, JobDescription};
+use crate::sim::SimTime;
+use crate::util::ids::Counter;
+
+/// The Agent layout the Launcher derives for a pilot (how many DVMs, which
+/// launch method, how many executors — §III-A "configuration files define
+/// the number, placement and properties of the Agent's components").
+#[derive(Clone, Debug, PartialEq)]
+pub struct AgentLayout {
+    pub launch_method: String,
+    pub n_dvms: u32,
+    pub nodes_per_dvm: u32,
+    pub n_executors: u32,
+    /// nodes reserved for RP's own Agent components (the paper reserved
+    /// one node on the 4097-node Summit runs)
+    pub agent_nodes: u32,
+}
+
+pub struct PilotManager {
+    pub uid: String,
+    pilots: Vec<Pilot>,
+    counter: Counter,
+}
+
+impl Default for PilotManager {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl PilotManager {
+    pub fn new() -> PilotManager {
+        PilotManager {
+            uid: "pmgr.0000".into(),
+            pilots: Vec::new(),
+            counter: Counter::new(),
+        }
+    }
+
+    /// Validate + register a pilot (state New).
+    pub fn submit(&mut self, pd: PilotDescription) -> Result<usize, String> {
+        pd.verify()?;
+        let platform_kind = PlatformKind::parse(&pd.resource)
+            .ok_or_else(|| format!("unknown resource '{}'", pd.resource))?;
+        let platform = Platform::load(platform_kind);
+        let nodes = pd.resolve_nodes(&platform)?;
+        let uid = self.counter.next("pilot", 4);
+        self.pilots.push(Pilot {
+            uid,
+            description: pd,
+            state: PilotState::New,
+            platform: platform_kind,
+            nodes,
+            node_map: None,
+            batch_job_id: None,
+        });
+        Ok(self.pilots.len() - 1)
+    }
+
+    /// Launch a registered pilot through SAGA against the platform's batch
+    /// system. Returns the activation time the driver should schedule.
+    pub fn launch(
+        &mut self,
+        idx: usize,
+        batch: &mut BatchSystem,
+        now: SimTime,
+    ) -> Result<SimTime, String> {
+        let pilot = &mut self.pilots[idx];
+        assert_eq!(pilot.state, PilotState::New, "pilot already launched");
+        let platform = Platform::load(pilot.platform);
+        let adapter = adapter_for(&platform.batch_system)?;
+        let jd = JobDescription {
+            project: pilot.description.project.clone(),
+            queue: pilot.description.queue.clone(),
+            nodes: pilot.nodes,
+            walltime_s: pilot.description.runtime_s,
+            job_name: pilot.uid.clone(),
+        };
+        let handle = adapter.submit(batch, now, &jd)?;
+        pilot.batch_job_id = Some(handle.job_id);
+        pilot.state = PilotState::Launching;
+        Ok(handle.activation_time)
+    }
+
+    /// The batch job started: the pilot becomes Active and owns its nodes.
+    pub fn activate(&mut self, idx: usize, batch: &mut BatchSystem, now: SimTime) {
+        let pilot = &mut self.pilots[idx];
+        assert_eq!(pilot.state, PilotState::Launching);
+        let job_id = pilot.batch_job_id.expect("launched pilot has a job");
+        batch.activate(job_id, now);
+        let platform = Platform::load(pilot.platform);
+        pilot.node_map = Some(NodeMap::contiguous(
+            pilot.nodes,
+            platform.cores_per_node,
+            platform.gpus_per_node,
+        ));
+        pilot.state = PilotState::Active;
+    }
+
+    pub fn complete(&mut self, idx: usize, batch: &mut BatchSystem, now: SimTime) {
+        let pilot = &mut self.pilots[idx];
+        if pilot.state == PilotState::Active {
+            batch.complete(pilot.batch_job_id.unwrap(), now);
+            pilot.state = PilotState::Done;
+        }
+    }
+
+    pub fn cancel(&mut self, idx: usize, batch: &mut BatchSystem, now: SimTime) {
+        let pilot = &mut self.pilots[idx];
+        if !pilot.state.is_terminal() {
+            if let Some(job) = pilot.batch_job_id {
+                batch.cancel(job, now);
+            }
+            pilot.state = PilotState::Canceled;
+        }
+    }
+
+    /// Derive the Agent layout for a pilot (Launcher's resource-config
+    /// logic). `nodes_per_dvm` from the description overrides the default.
+    pub fn agent_layout(&self, idx: usize) -> AgentLayout {
+        let pilot = &self.pilots[idx];
+        let platform = Platform::load(pilot.platform);
+        let launch_method = platform
+            .launch_methods
+            .first()
+            .cloned()
+            .unwrap_or_else(|| "fork".into());
+        if launch_method == "prrte" {
+            let per_dvm = if pilot.description.nodes_per_dvm > 0 {
+                pilot.description.nodes_per_dvm
+            } else {
+                MAX_NODES_PER_DVM
+            };
+            // reserve one node for the agent on large pilots (paper §IV-A)
+            let agent_nodes = if pilot.nodes > 256 { 1 } else { 0 };
+            let usable = pilot.nodes - agent_nodes;
+            let n_dvms = usable.div_ceil(per_dvm);
+            AgentLayout {
+                launch_method,
+                n_dvms,
+                nodes_per_dvm: per_dvm,
+                n_executors: n_dvms, // one executor per DVM (Fig. 3b)
+                agent_nodes,
+            }
+        } else {
+            AgentLayout {
+                launch_method,
+                n_dvms: 0,
+                nodes_per_dvm: 0,
+                n_executors: 1,
+                agent_nodes: 0,
+            }
+        }
+    }
+
+    pub fn pilot(&self, idx: usize) -> &Pilot {
+        &self.pilots[idx]
+    }
+
+    pub fn pilots(&self) -> &[Pilot] {
+        &self.pilots
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::secs;
+
+    #[test]
+    fn full_pilot_lifecycle() {
+        let mut pm = PilotManager::new();
+        let mut batch = BatchSystem::new("lsf", 4608, 30.0, 1);
+        let idx = pm
+            .submit(PilotDescription::new("ornl.summit", 1024, 7200.0))
+            .unwrap();
+        assert_eq!(pm.pilot(idx).state, PilotState::New);
+        let t_active = pm.launch(idx, &mut batch, 0).unwrap();
+        assert_eq!(pm.pilot(idx).state, PilotState::Launching);
+        pm.activate(idx, &mut batch, t_active);
+        let p = pm.pilot(idx);
+        assert_eq!(p.state, PilotState::Active);
+        let nm = p.node_map.as_ref().unwrap();
+        assert_eq!(nm.total_cores(), 43_008);
+        assert_eq!(nm.total_gpus(), 6_144);
+        pm.complete(idx, &mut batch, t_active + secs(100.0));
+        assert_eq!(pm.pilot(idx).state, PilotState::Done);
+        assert_eq!(batch.free_nodes(), 4608);
+    }
+
+    #[test]
+    fn summit_layout_partitions_dvms_like_the_paper() {
+        let mut pm = PilotManager::new();
+        // 1024 nodes → 4 DVMs (≤256 nodes each), small enough: no agent node
+        let idx = pm
+            .submit(PilotDescription::new("ornl.summit", 1024, 3600.0))
+            .unwrap();
+        let l = pm.agent_layout(idx);
+        assert_eq!(l.launch_method, "prrte");
+        assert_eq!(l.n_dvms, 4);
+        assert_eq!(l.n_executors, 4);
+        // 4097 nodes → 1 agent node + 4096/256 = 16 DVMs (paper exp-3b)
+        let idx = pm
+            .submit(PilotDescription::new("ornl.summit", 4097, 3600.0))
+            .unwrap();
+        let l = pm.agent_layout(idx);
+        assert_eq!(l.agent_nodes, 1);
+        assert_eq!(l.n_dvms, 16);
+    }
+
+    #[test]
+    fn titan_layout_uses_orte_single_executor() {
+        let mut pm = PilotManager::new();
+        let idx = pm
+            .submit(PilotDescription::new("ornl.titan", 8192, 3600.0))
+            .unwrap();
+        let l = pm.agent_layout(idx);
+        assert_eq!(l.launch_method, "orte");
+        assert_eq!(l.n_dvms, 0);
+        assert_eq!(l.n_executors, 1);
+    }
+
+    #[test]
+    fn invalid_descriptions_rejected() {
+        let mut pm = PilotManager::new();
+        assert!(pm.submit(PilotDescription::default()).is_err()); // sizeless
+        assert!(pm
+            .submit(PilotDescription::new("nonesuch", 2, 60.0))
+            .is_err());
+        assert!(pm
+            .submit(PilotDescription::new("ornl.summit", 99_999, 60.0))
+            .is_err());
+    }
+
+    #[test]
+    fn cancel_releases_resources() {
+        let mut pm = PilotManager::new();
+        let mut batch = BatchSystem::new("pbs", 18_688, 30.0, 2);
+        let idx = pm
+            .submit(PilotDescription::new("ornl.titan", 4096, 3600.0))
+            .unwrap();
+        let t = pm.launch(idx, &mut batch, 0).unwrap();
+        pm.activate(idx, &mut batch, t);
+        pm.cancel(idx, &mut batch, t + 1);
+        assert_eq!(pm.pilot(idx).state, PilotState::Canceled);
+        assert_eq!(batch.free_nodes(), 18_688);
+    }
+}

@@ -1,0 +1,8 @@
+//! The Pilot abstraction (§III-A): a placeholder for computing resources,
+//! managed by the PilotManager's Launcher component.
+
+pub mod description;
+pub mod manager;
+
+pub use description::{Pilot, PilotDescription, PilotState};
+pub use manager::PilotManager;

@@ -1,0 +1,238 @@
+//! Batch-system substrate: the machine-side job queue a pilot is submitted
+//! to (PBS on Titan, LSF on Summit, Slurm on Frontera).
+//!
+//! A pilot system's defining move (§I) is to submit ONE batch job (the
+//! placeholder) and then schedule application tasks inside it. This module
+//! provides the placeholder half: submission, queue wait, activation,
+//! walltime enforcement, cancellation.
+
+use crate::sim::{secs, SimTime};
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobState {
+    Pending,
+    Running,
+    Done,
+    Cancelled,
+    TimedOut,
+}
+
+#[derive(Clone, Debug)]
+pub struct BatchJob {
+    pub job_id: u64,
+    pub nodes: u32,
+    pub walltime_s: f64,
+    pub state: JobState,
+    pub submitted_at: SimTime,
+    pub started_at: Option<SimTime>,
+    pub ended_at: Option<SimTime>,
+}
+
+/// A (simulated) batch scheduler for one platform. Jobs wait a sampled
+/// queue time (scaled by the fraction of the machine requested — bigger
+/// requests wait longer, as on real leadership-class systems), then run
+/// until completed, cancelled, or out of walltime.
+#[derive(Debug)]
+pub struct BatchSystem {
+    pub flavour: String,
+    total_nodes: u32,
+    free_nodes: u32,
+    base_queue_wait_s: f64,
+    jobs: Vec<BatchJob>,
+    rng: Rng,
+}
+
+impl BatchSystem {
+    pub fn new(flavour: &str, total_nodes: u32, base_queue_wait_s: f64, seed: u64) -> Self {
+        BatchSystem {
+            flavour: flavour.to_string(),
+            total_nodes,
+            free_nodes: total_nodes,
+            base_queue_wait_s,
+            jobs: Vec::new(),
+            rng: Rng::new(seed),
+        }
+    }
+
+    /// Submit a job; returns (job_id, activation_time) or Err if the
+    /// request can never be satisfied.
+    pub fn submit(
+        &mut self,
+        now: SimTime,
+        nodes: u32,
+        walltime_s: f64,
+    ) -> Result<(u64, SimTime), String> {
+        if nodes == 0 {
+            return Err("job requests zero nodes".into());
+        }
+        if nodes > self.total_nodes {
+            return Err(format!(
+                "job requests {nodes} nodes but {} ({}) has only {}",
+                self.flavour, "platform", self.total_nodes
+            ));
+        }
+        let job_id = self.jobs.len() as u64;
+        // queue wait grows with machine fraction requested
+        let frac = nodes as f64 / self.total_nodes as f64;
+        let wait = self
+            .rng
+            .normal_min(self.base_queue_wait_s * (1.0 + 3.0 * frac), self.base_queue_wait_s * 0.2, 0.0);
+        let start = now + secs(wait);
+        self.jobs.push(BatchJob {
+            job_id,
+            nodes,
+            walltime_s,
+            state: JobState::Pending,
+            submitted_at: now,
+            started_at: None,
+            ended_at: None,
+        });
+        Ok((job_id, start))
+    }
+
+    /// Mark the job active (called by the driver at activation_time).
+    pub fn activate(&mut self, job_id: u64, now: SimTime) {
+        let job = &mut self.jobs[job_id as usize];
+        assert_eq!(job.state, JobState::Pending, "activate on non-pending job");
+        assert!(job.nodes <= self.free_nodes, "over-allocation");
+        self.free_nodes -= job.nodes;
+        job.state = JobState::Running;
+        job.started_at = Some(now);
+    }
+
+    /// Walltime deadline for a running job.
+    pub fn deadline(&self, job_id: u64) -> Option<SimTime> {
+        let job = &self.jobs[job_id as usize];
+        job.started_at.map(|s| s + secs(job.walltime_s))
+    }
+
+    /// Job finished (workload done) — frees nodes.
+    pub fn complete(&mut self, job_id: u64, now: SimTime) {
+        self.finish(job_id, now, JobState::Done);
+    }
+
+    /// Cancel a pending or running job.
+    pub fn cancel(&mut self, job_id: u64, now: SimTime) {
+        let state = self.jobs[job_id as usize].state;
+        match state {
+            JobState::Pending => {
+                let job = &mut self.jobs[job_id as usize];
+                job.state = JobState::Cancelled;
+                job.ended_at = Some(now);
+            }
+            JobState::Running => self.finish(job_id, now, JobState::Cancelled),
+            _ => {}
+        }
+    }
+
+    /// Enforce the walltime: called at the deadline; kills the job if it is
+    /// still running.
+    pub fn enforce_walltime(&mut self, job_id: u64, now: SimTime) -> bool {
+        if self.jobs[job_id as usize].state == JobState::Running {
+            self.finish(job_id, now, JobState::TimedOut);
+            true
+        } else {
+            false
+        }
+    }
+
+    fn finish(&mut self, job_id: u64, now: SimTime, state: JobState) {
+        let job = &mut self.jobs[job_id as usize];
+        assert_eq!(job.state, JobState::Running);
+        job.state = state;
+        job.ended_at = Some(now);
+        self.free_nodes += job.nodes;
+    }
+
+    pub fn job(&self, job_id: u64) -> &BatchJob {
+        &self.jobs[job_id as usize]
+    }
+
+    pub fn free_nodes(&self) -> u32 {
+        self.free_nodes
+    }
+
+    pub fn total_nodes(&self) -> u32 {
+        self.total_nodes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sys() -> BatchSystem {
+        BatchSystem::new("pbs", 1000, 60.0, 42)
+    }
+
+    #[test]
+    fn submit_activate_complete_cycle() {
+        let mut b = sys();
+        let (id, start) = b.submit(0, 100, 3600.0).unwrap();
+        assert!(start > 0);
+        assert_eq!(b.job(id).state, JobState::Pending);
+        b.activate(id, start);
+        assert_eq!(b.job(id).state, JobState::Running);
+        assert_eq!(b.free_nodes(), 900);
+        b.complete(id, start + secs(100.0));
+        assert_eq!(b.job(id).state, JobState::Done);
+        assert_eq!(b.free_nodes(), 1000);
+    }
+
+    #[test]
+    fn oversized_request_rejected() {
+        let mut b = sys();
+        assert!(b.submit(0, 1001, 60.0).is_err());
+        assert!(b.submit(0, 0, 60.0).is_err());
+    }
+
+    #[test]
+    fn bigger_jobs_wait_longer_on_average() {
+        let mut b = sys();
+        let mut small = 0.0;
+        let mut big = 0.0;
+        for _ in 0..50 {
+            let (_, s) = b.submit(0, 10, 60.0).unwrap();
+            small += s as f64;
+            let (_, s) = b.submit(0, 900, 60.0).unwrap();
+            big += s as f64;
+        }
+        assert!(big > small, "queue wait should grow with request size");
+    }
+
+    #[test]
+    fn walltime_enforcement() {
+        let mut b = sys();
+        let (id, start) = b.submit(0, 10, 100.0).unwrap();
+        b.activate(id, start);
+        let dl = b.deadline(id).unwrap();
+        assert_eq!(dl, start + secs(100.0));
+        assert!(b.enforce_walltime(id, dl));
+        assert_eq!(b.job(id).state, JobState::TimedOut);
+        assert_eq!(b.free_nodes(), 1000);
+    }
+
+    #[test]
+    fn cancel_pending_and_running() {
+        let mut b = sys();
+        let (id1, _) = b.submit(0, 10, 100.0).unwrap();
+        b.cancel(id1, secs(1.0));
+        assert_eq!(b.job(id1).state, JobState::Cancelled);
+
+        let (id2, start) = b.submit(0, 10, 100.0).unwrap();
+        b.activate(id2, start);
+        b.cancel(id2, start + 1);
+        assert_eq!(b.job(id2).state, JobState::Cancelled);
+        assert_eq!(b.free_nodes(), 1000);
+    }
+
+    #[test]
+    fn walltime_noop_after_completion() {
+        let mut b = sys();
+        let (id, start) = b.submit(0, 10, 100.0).unwrap();
+        b.activate(id, start);
+        b.complete(id, start + 10);
+        assert!(!b.enforce_walltime(id, start + secs(100.0)));
+    }
+}

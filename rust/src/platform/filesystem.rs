@@ -1,0 +1,119 @@
+//! Shared-filesystem contention model.
+//!
+//! §IV-D attributes the PRRTE launch-time growth on Summit ("Prepare Exec",
+//! Fig 9 purple areas) to the shared filesystem: "the distributed
+//! filesystem on which PRRTE is installed … was not designed and optimized
+//! for large amounts of (relatively) small concurrent I/O".
+//!
+//! We model the FS as a FIFO server with a finite op rate: each launcher
+//! request of `n` ops is serviced at `ops_per_s`, queued behind earlier
+//! requests. Under low concurrency the delay is ~n/ops_per_s; under a
+//! burst of thousands of concurrent launches the queue stretches — exactly
+//! the behaviour the paper measured.
+
+use crate::sim::{secs, SimTime};
+
+#[derive(Debug, Clone)]
+pub struct SharedFs {
+    /// aggregate small-I/O capacity, ops per second
+    ops_per_s: f64,
+    /// virtual time at which the server frees up
+    busy_until: SimTime,
+    /// statistics
+    total_ops: f64,
+    total_requests: u64,
+    total_queue_delay: SimTime,
+}
+
+impl SharedFs {
+    pub fn new(ops_per_s: f64) -> SharedFs {
+        assert!(ops_per_s > 0.0);
+        SharedFs {
+            ops_per_s,
+            busy_until: 0,
+            total_ops: 0.0,
+            total_requests: 0,
+            total_queue_delay: 0,
+        }
+    }
+
+    /// Issue a request of `ops` operations at virtual time `now`.
+    /// Returns the completion time.
+    pub fn request(&mut self, now: SimTime, ops: f64) -> SimTime {
+        let start = now.max(self.busy_until);
+        let service = secs(ops / self.ops_per_s);
+        let done = start + service;
+        self.total_queue_delay += start - now;
+        self.busy_until = done;
+        self.total_ops += ops;
+        self.total_requests += 1;
+        done
+    }
+
+    /// Instantaneous queue depth expressed as seconds of backlog.
+    pub fn backlog_secs(&self, now: SimTime) -> f64 {
+        if self.busy_until > now {
+            (self.busy_until - now) as f64 / 1e6
+        } else {
+            0.0
+        }
+    }
+
+    pub fn ops_per_s(&self) -> f64 {
+        self.ops_per_s
+    }
+
+    pub fn stats(&self) -> (f64, u64, f64) {
+        (
+            self.total_ops,
+            self.total_requests,
+            self.total_queue_delay as f64 / 1e6,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::to_secs;
+
+    #[test]
+    fn uncontended_request_costs_service_time() {
+        let mut fs = SharedFs::new(1000.0);
+        let done = fs.request(0, 100.0); // 100 ops @1000 ops/s = 0.1 s
+        assert!((to_secs(done) - 0.1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn concurrent_requests_queue() {
+        let mut fs = SharedFs::new(1000.0);
+        // 10 concurrent launches of 100 ops each, all at t=0
+        let mut last = 0;
+        for _ in 0..10 {
+            last = fs.request(0, 100.0);
+        }
+        // total = 1000 ops / 1000 ops/s = 1 s — the 10th finishes at 1 s
+        assert!((to_secs(last) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn idle_server_does_not_accumulate() {
+        let mut fs = SharedFs::new(1000.0);
+        fs.request(0, 100.0); // done at 0.1s
+        let done = fs.request(secs(10.0), 100.0); // server long idle
+        assert!((to_secs(done) - 10.1).abs() < 1e-9);
+        assert_eq!(fs.backlog_secs(secs(20.0)), 0.0);
+    }
+
+    #[test]
+    fn backlog_grows_under_burst() {
+        let mut fs = SharedFs::new(9000.0); // summit-calibrated
+        for _ in 0..12_276 {
+            fs.request(0, 40.0); // fs_ops_per_launch on summit
+        }
+        // 12,276 tasks × 40 ops / 9000 ops/s ≈ 54.6 s of backlog:
+        // the Fig-9b "Prepare Exec" stretch.
+        let b = fs.backlog_secs(0);
+        assert!(b > 50.0 && b < 60.0, "backlog={b}");
+    }
+}

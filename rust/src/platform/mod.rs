@@ -1,0 +1,13 @@
+//! HPC platform substrate: node topologies, batch systems and the shared
+//! filesystem contention model.
+//!
+//! These stand in for Titan, Summit and Frontera (which we cannot access);
+//! see DESIGN.md §2 for the substitution rationale.
+
+pub mod batch;
+pub mod filesystem;
+pub mod topology;
+
+pub use batch::{BatchSystem, BatchJob, JobState};
+pub use filesystem::SharedFs;
+pub use topology::{NodeMap, Platform, PlatformKind};

@@ -1,0 +1,208 @@
+//! Platform topology descriptions and the node map a pilot holds.
+//!
+//! The paper's machines:
+//!   * Titan (ORNL):    18,688 nodes × 16 cores, 1 GPU  (exp 1–2 use ≤8192 nodes)
+//!   * Summit (ORNL):    4,608 nodes × 42 cores, 6 GPUs (exp 3–4 use ≤4097)
+//!   * Frontera (TACC):  8,008 nodes × 56 cores         (exp 5 uses 7000)
+//! plus `local`, the real machine we run on (used by real-execution mode).
+
+use crate::config;
+use crate::util::json::Json;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum PlatformKind {
+    Titan,
+    Summit,
+    Frontera,
+    Local,
+}
+
+impl PlatformKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PlatformKind::Titan => "ornl.titan",
+            PlatformKind::Summit => "ornl.summit",
+            PlatformKind::Frontera => "tacc.frontera",
+            PlatformKind::Local => "local.localhost",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<PlatformKind> {
+        match s {
+            "ornl.titan" | "titan" => Some(PlatformKind::Titan),
+            "ornl.summit" | "summit" => Some(PlatformKind::Summit),
+            "tacc.frontera" | "frontera" => Some(PlatformKind::Frontera),
+            "local.localhost" | "local" | "localhost" => Some(PlatformKind::Local),
+            _ => None,
+        }
+    }
+}
+
+/// A platform description, loaded from the embedded resource-config JSON
+/// (mirroring RP's per-platform configuration files, §III-A).
+#[derive(Clone, Debug)]
+pub struct Platform {
+    pub kind: PlatformKind,
+    pub name: String,
+    pub nodes: u32,
+    pub cores_per_node: u32,
+    pub gpus_per_node: u32,
+    /// batch system flavour ("pbs", "lsf", "slurm", "fork")
+    pub batch_system: String,
+    /// launch methods available, in preference order
+    pub launch_methods: Vec<String>,
+    /// agent bootstrap time model: mean/std seconds
+    pub bootstrap_mean_s: f64,
+    pub bootstrap_std_s: f64,
+    /// shared-filesystem capacity (metadata+small-file ops per second)
+    pub fs_ops_per_s: f64,
+    /// per-task filesystem ops a launcher incurs (PRRTE reads its install
+    /// tree from the shared FS on every launch — §IV-D)
+    pub fs_ops_per_launch: f64,
+}
+
+impl Platform {
+    /// Load a platform from the embedded config store.
+    pub fn load(kind: PlatformKind) -> Platform {
+        let cfg = config::resource_config(kind.name())
+            .unwrap_or_else(|| panic!("no resource config for {}", kind.name()));
+        Platform::from_json(kind, &cfg)
+    }
+
+    pub fn from_json(kind: PlatformKind, cfg: &Json) -> Platform {
+        let nodes = if kind == PlatformKind::Local {
+            1
+        } else {
+            cfg.u64_or("nodes", 1) as u32
+        };
+        let cores_per_node = if kind == PlatformKind::Local {
+            std::thread::available_parallelism()
+                .map(|n| n.get() as u32)
+                .unwrap_or(4)
+        } else {
+            cfg.u64_or("cores_per_node", 1) as u32
+        };
+        Platform {
+            kind,
+            name: cfg.str_or("name", kind.name()).to_string(),
+            nodes,
+            cores_per_node,
+            gpus_per_node: cfg.u64_or("gpus_per_node", 0) as u32,
+            batch_system: cfg.str_or("batch_system", "fork").to_string(),
+            launch_methods: cfg
+                .get("launch_methods")
+                .as_arr()
+                .map(|a| {
+                    a.iter()
+                        .filter_map(|v| v.as_str().map(|s| s.to_string()))
+                        .collect()
+                })
+                .unwrap_or_else(|| vec!["fork".to_string()]),
+            bootstrap_mean_s: cfg.f64_or("bootstrap_mean_s", 30.0),
+            bootstrap_std_s: cfg.f64_or("bootstrap_std_s", 5.0),
+            fs_ops_per_s: cfg.f64_or("fs_ops_per_s", 1.0e5),
+            fs_ops_per_launch: cfg.f64_or("fs_ops_per_launch", 10.0),
+        }
+    }
+
+    pub fn total_cores(&self) -> u64 {
+        self.nodes as u64 * self.cores_per_node as u64
+    }
+
+    pub fn total_gpus(&self) -> u64 {
+        self.nodes as u64 * self.gpus_per_node as u64
+    }
+}
+
+/// The concrete set of nodes a pilot holds, with per-node core/GPU counts.
+/// This is what the Agent scheduler's free-map is built from.
+#[derive(Clone, Debug)]
+pub struct NodeMap {
+    pub node_ids: Vec<u32>,
+    pub cores_per_node: u32,
+    pub gpus_per_node: u32,
+}
+
+impl NodeMap {
+    pub fn contiguous(n_nodes: u32, cores_per_node: u32, gpus_per_node: u32) -> NodeMap {
+        NodeMap {
+            node_ids: (0..n_nodes).collect(),
+            cores_per_node,
+            gpus_per_node,
+        }
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.node_ids.len()
+    }
+
+    pub fn total_cores(&self) -> u64 {
+        self.node_ids.len() as u64 * self.cores_per_node as u64
+    }
+
+    pub fn total_gpus(&self) -> u64 {
+        self.node_ids.len() as u64 * self.gpus_per_node as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_titan() {
+        let p = Platform::load(PlatformKind::Titan);
+        assert_eq!(p.cores_per_node, 16);
+        assert_eq!(p.gpus_per_node, 1);
+        assert!(p.nodes >= 8192); // exp-1 needs 131,072 cores
+        assert!(p.launch_methods.iter().any(|m| m == "orte"));
+    }
+
+    #[test]
+    fn load_summit() {
+        let p = Platform::load(PlatformKind::Summit);
+        assert_eq!(p.cores_per_node, 42);
+        assert_eq!(p.gpus_per_node, 6);
+        assert_eq!(p.nodes, 4608);
+        // 1024 nodes must give the paper's 43,008 cores / 6144 GPUs
+        assert_eq!(1024 * p.cores_per_node, 43_008);
+        assert_eq!(1024 * p.gpus_per_node, 6_144);
+        assert!(p.launch_methods.iter().any(|m| m == "prrte"));
+    }
+
+    #[test]
+    fn load_frontera() {
+        let p = Platform::load(PlatformKind::Frontera);
+        assert_eq!(p.cores_per_node, 56);
+        // 7000 nodes → the paper's 392,000 cores
+        assert_eq!(7000 * p.cores_per_node as u64, 392_000);
+    }
+
+    #[test]
+    fn local_platform_reflects_machine() {
+        let p = Platform::load(PlatformKind::Local);
+        assert!(p.cores_per_node >= 1);
+        assert_eq!(p.nodes, 1);
+    }
+
+    #[test]
+    fn nodemap_accounting() {
+        let nm = NodeMap::contiguous(1024, 42, 6);
+        assert_eq!(nm.total_cores(), 43_008);
+        assert_eq!(nm.total_gpus(), 6_144);
+        assert_eq!(nm.n_nodes(), 1024);
+    }
+
+    #[test]
+    fn kind_parse_roundtrip() {
+        for k in [
+            PlatformKind::Titan,
+            PlatformKind::Summit,
+            PlatformKind::Frontera,
+            PlatformKind::Local,
+        ] {
+            assert_eq!(PlatformKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(PlatformKind::parse("nonesuch"), None);
+    }
+}

@@ -1,0 +1,231 @@
+//! RAPTOR (§III-C, Fig. 3a): a master/worker framework built *with* RP for
+//! high-throughput function execution. Masters and workers are themselves
+//! RP tasks; once bootstrapped, each master coordinates its pool of
+//! workers directly, bypassing the Agent scheduler — which is what let the
+//! paper execute 126 M function calls at ~37 k task/s on Frontera (exp 5).
+//!
+//! Real mode here: masters are dispatcher threads, workers are thread
+//! pools executing registered functions (usually PJRT artifact calls).
+//! The DES-mode equivalent for exp-5 scale lives in `experiments::exp5`.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::agent::agent::FunctionRegistry;
+use crate::mesh::WorkQueue;
+use crate::task::{TaskDescription, TaskKind};
+use crate::util::json::Json;
+
+#[derive(Clone, Debug)]
+pub struct RaptorConfig {
+    pub n_masters: usize,
+    pub workers_per_master: usize,
+    /// concurrent function slots per worker (cores per worker node)
+    pub slots_per_worker: usize,
+}
+
+impl RaptorConfig {
+    /// The paper's exp-5 geometry, scaled by `scale` (1.0 = 70 masters ×
+    /// 99 workers; local runs use much smaller scales).
+    pub fn frontera_scaled(scale: f64) -> RaptorConfig {
+        RaptorConfig {
+            n_masters: ((70.0 * scale).round() as usize).max(1),
+            workers_per_master: ((99.0 * scale).round() as usize).max(1),
+            slots_per_worker: 1,
+        }
+    }
+
+    pub fn total_workers(&self) -> usize {
+        self.n_masters * self.workers_per_master
+    }
+
+    pub fn total_slots(&self) -> usize {
+        self.total_workers() * self.slots_per_worker
+    }
+}
+
+#[derive(Debug, Default, Clone, Copy)]
+pub struct RaptorStats {
+    pub n_done: u64,
+    pub n_failed: u64,
+    pub ttx: f64,
+    /// completed tasks per second over the run
+    pub rate: f64,
+    pub result_sum: f64,
+}
+
+/// One dispatched function call.
+struct Call {
+    function: String,
+    payload: Json,
+}
+
+pub struct Raptor;
+
+impl Raptor {
+    /// Execute all function tasks through the master/worker mesh.
+    /// Non-function tasks are rejected (RAPTOR masters only take function
+    /// calls and single-node tasks; we implement the function path).
+    pub fn run(
+        cfg: &RaptorConfig,
+        tasks: Vec<TaskDescription>,
+        registry: &FunctionRegistry,
+    ) -> Result<RaptorStats, String> {
+        if let Some(bad) = tasks.iter().find(|t| t.kind != TaskKind::Function) {
+            return Err(format!(
+                "RAPTOR only executes function tasks (got executable '{}')",
+                bad.executable
+            ));
+        }
+        let t0 = Instant::now();
+        let n_tasks = tasks.len() as u64;
+
+        // master input queues (bounded: backpressure from masters to the
+        // submitting client, as RP's zmq HWMs provide)
+        let master_queues: Vec<WorkQueue<Call>> = (0..cfg.n_masters)
+            .map(|_| WorkQueue::new(4096))
+            .collect();
+
+        let done = Arc::new(AtomicU64::new(0));
+        let failed = Arc::new(AtomicU64::new(0));
+        // f64 bits accumulated via u64 CAS (no atomic f64 in std)
+        let result_bits = Arc::new(AtomicU64::new(0f64.to_bits()));
+
+        // each master fans its queue out to its workers
+        let mut worker_handles = Vec::new();
+        for mq in &master_queues {
+            for _ in 0..cfg.workers_per_master * cfg.slots_per_worker {
+                let mq = mq.clone();
+                let registry = registry.clone();
+                let done = done.clone();
+                let failed = failed.clone();
+                let result_bits = result_bits.clone();
+                worker_handles.push(std::thread::spawn(move || {
+                    while let Some(call) = mq.pop() {
+                        match registry.get(&call.function) {
+                            Some(f) => match f(&call.payload) {
+                                Ok(v) => {
+                                    done.fetch_add(1, Ordering::Relaxed);
+                                    // accumulate result (CAS loop)
+                                    let mut cur = result_bits.load(Ordering::Relaxed);
+                                    loop {
+                                        let new = (f64::from_bits(cur) + v).to_bits();
+                                        match result_bits.compare_exchange_weak(
+                                            cur,
+                                            new,
+                                            Ordering::Relaxed,
+                                            Ordering::Relaxed,
+                                        ) {
+                                            Ok(_) => break,
+                                            Err(c) => cur = c,
+                                        }
+                                    }
+                                }
+                                Err(_) => {
+                                    failed.fetch_add(1, Ordering::Relaxed);
+                                }
+                            },
+                            None => {
+                                failed.fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
+                    }
+                }));
+            }
+        }
+
+        // the client round-robins tasks across masters (RP scheduled one
+        // master per resource partition; round-robin matches exp-5's
+        // uniform workload)
+        for (i, td) in tasks.into_iter().enumerate() {
+            let q = &master_queues[i % cfg.n_masters];
+            q.push(Call {
+                function: td.function,
+                payload: td.payload,
+            })
+            .map_err(|_| "master queue closed early".to_string())?;
+        }
+        for q in &master_queues {
+            q.close();
+        }
+        for h in worker_handles {
+            h.join().map_err(|_| "worker panicked".to_string())?;
+        }
+
+        let ttx = t0.elapsed().as_secs_f64();
+        let n_done = done.load(Ordering::Relaxed);
+        let n_failed = failed.load(Ordering::Relaxed);
+        debug_assert_eq!(n_done + n_failed, n_tasks);
+        Ok(RaptorStats {
+            n_done,
+            n_failed,
+            ttx,
+            rate: if ttx > 0.0 { n_done as f64 / ttx } else { 0.0 },
+            result_sum: f64::from_bits(result_bits.load(Ordering::Relaxed)),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn registry() -> FunctionRegistry {
+        let mut r = FunctionRegistry::new();
+        r.register("inc", |p| Ok(p.as_f64().unwrap_or(0.0) + 1.0));
+        r.register("fail", |_| Err("nope".into()));
+        r
+    }
+
+    fn func_tasks(n: usize, name: &str) -> Vec<TaskDescription> {
+        (0..n)
+            .map(|i| TaskDescription::func(name, Json::Num(i as f64), 0.0))
+            .collect()
+    }
+
+    #[test]
+    fn executes_all_calls_exactly_once() {
+        let cfg = RaptorConfig {
+            n_masters: 2,
+            workers_per_master: 3,
+            slots_per_worker: 1,
+        };
+        let stats = Raptor::run(&cfg, func_tasks(1000, "inc"), &registry()).unwrap();
+        assert_eq!(stats.n_done, 1000);
+        assert_eq!(stats.n_failed, 0);
+        // sum of (i+1) for i in 0..1000
+        assert!((stats.result_sum - (0..1000).map(|i| i as f64 + 1.0).sum::<f64>()).abs() < 1e-6);
+        assert!(stats.rate > 0.0);
+    }
+
+    #[test]
+    fn failures_counted_not_fatal() {
+        let cfg = RaptorConfig {
+            n_masters: 1,
+            workers_per_master: 2,
+            slots_per_worker: 1,
+        };
+        let mut tasks = func_tasks(10, "inc");
+        tasks.extend(func_tasks(5, "fail"));
+        tasks.extend(func_tasks(3, "unregistered"));
+        let stats = Raptor::run(&cfg, tasks, &registry()).unwrap();
+        assert_eq!(stats.n_done, 10);
+        assert_eq!(stats.n_failed, 8);
+    }
+
+    #[test]
+    fn rejects_executable_tasks() {
+        let cfg = RaptorConfig::frontera_scaled(0.01);
+        let tasks = vec![TaskDescription::emulated("/bin/true", 1, 1, 0.0)];
+        assert!(Raptor::run(&cfg, tasks, &registry()).is_err());
+    }
+
+    #[test]
+    fn frontera_geometry() {
+        let cfg = RaptorConfig::frontera_scaled(1.0);
+        assert_eq!(cfg.n_masters, 70);
+        assert_eq!(cfg.workers_per_master, 99);
+        assert_eq!(cfg.total_workers(), 6930);
+    }
+}

@@ -1,0 +1,200 @@
+//! PJRT runtime bridge: loads the AOT-compiled HLO-text artifacts produced
+//! by `python/compile/aot.py` and executes them from the Rust hot path.
+//!
+//! Python runs once at build time (`make artifacts`); this module is the
+//! only thing that touches the compiled computations at run time. See
+//! DESIGN.md §1 and /opt/xla-example/load_hlo for the interchange rationale
+//! (HLO *text*, not serialized protos).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Context, Result};
+
+/// A compiled computation: shape metadata + the loaded PJRT executable.
+pub struct Executable {
+    pub name: String,
+    exe: xla::PjRtLoadedExecutable,
+    /// serialize PJRT calls per executable (the CPU client is not
+    /// documented thread-safe for concurrent executions of one handle)
+    lock: Mutex<()>,
+}
+
+// SAFETY: the xla crate wraps raw PJRT pointers without Send/Sync markers.
+// All mutation of an Executable goes through `lock`, and the PJRT CPU
+// client itself is internally synchronized for compile/execute. The same
+// reasoning applies to Runtime (guarded by `cache`'s Mutex for loads).
+unsafe impl Send for Executable {}
+unsafe impl Sync for Executable {}
+
+impl Executable {
+    /// Execute with f32 inputs; returns all tuple outputs flattened to
+    /// f32 vecs. Inputs are (data, dims) pairs.
+    pub fn call_f32(&self, inputs: &[(&[f32], &[i64])]) -> Result<Vec<Vec<f32>>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|(data, dims)| {
+                let lit = xla::Literal::vec1(data);
+                if dims.is_empty() {
+                    Ok(lit)
+                } else {
+                    lit.reshape(dims).map_err(|e| anyhow!("reshape: {e:?}"))
+                }
+            })
+            .collect::<Result<_>>()?;
+        let _g = self.lock.lock().unwrap();
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute {}: {e:?}", self.name))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        // aot.py lowers with return_tuple=True
+        let parts = out.to_tuple().map_err(|e| anyhow!("to_tuple: {e:?}"))?;
+        parts
+            .into_iter()
+            .map(|p| {
+                // outputs may be f32 or need conversion
+                let p = p
+                    .convert(xla::PrimitiveType::F32)
+                    .map_err(|e| anyhow!("convert: {e:?}"))?;
+                p.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))
+            })
+            .collect()
+    }
+
+    /// Single-output convenience.
+    pub fn call1_f32(&self, inputs: &[(&[f32], &[i64])]) -> Result<Vec<f32>> {
+        let mut outs = self.call_f32(inputs)?;
+        if outs.len() != 1 {
+            return Err(anyhow!(
+                "{} returned {} outputs, expected 1",
+                self.name,
+                outs.len()
+            ));
+        }
+        Ok(outs.pop().unwrap())
+    }
+}
+
+/// The runtime: one PJRT CPU client + a cache of compiled executables
+/// (compile-once, execute-many — the §Perf hot path).
+pub struct Runtime {
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<String, std::sync::Arc<Executable>>>,
+    artifacts_dir: PathBuf,
+}
+
+// SAFETY: see Executable above.
+unsafe impl Send for Runtime {}
+unsafe impl Sync for Runtime {}
+
+impl Runtime {
+    pub fn cpu(artifacts_dir: impl AsRef<Path>) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(Runtime {
+            client,
+            cache: Mutex::new(HashMap::new()),
+            artifacts_dir: artifacts_dir.as_ref().to_path_buf(),
+        })
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile `<artifacts_dir>/<name>.hlo.txt` (cached).
+    pub fn load(&self, name: &str) -> Result<std::sync::Arc<Executable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let path = self.artifacts_dir.join(format!("{name}.hlo.txt"));
+        if !path.exists() {
+            return Err(anyhow!(
+                "artifact {} not found — run `make artifacts` first",
+                path.display()
+            ));
+        }
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+        let executable = std::sync::Arc::new(Executable {
+            name: name.to_string(),
+            exe,
+            lock: Mutex::new(()),
+        });
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), executable.clone());
+        Ok(executable)
+    }
+
+    /// Names of artifacts present on disk.
+    pub fn available(&self) -> Vec<String> {
+        let mut names = Vec::new();
+        if let Ok(entries) = std::fs::read_dir(&self.artifacts_dir) {
+            for e in entries.flatten() {
+                if let Some(n) = e.file_name().to_str() {
+                    if let Some(base) = n.strip_suffix(".hlo.txt") {
+                        names.push(base.to_string());
+                    }
+                }
+            }
+        }
+        names.sort();
+        names
+    }
+}
+
+/// Default artifacts dir: $RP_ARTIFACTS or ./artifacts.
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var("RP_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+/// Load the expected-values manifest written by aot.py (test vectors for
+/// integration tests).
+pub fn load_expected(artifacts_dir: impl AsRef<Path>) -> Result<crate::util::json::Json> {
+    let path = artifacts_dir.as_ref().join("expected.json");
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    crate::util::json::Json::parse(&text).map_err(|e| anyhow!("expected.json: {e}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Full numeric round-trip tests live in rust/tests/runtime_artifacts.rs
+    // (they need `make artifacts`). Here: offline behaviour.
+
+    #[test]
+    fn missing_artifact_is_a_clean_error() {
+        let rt = Runtime::cpu("/nonexistent/dir").unwrap();
+        let err = match rt.load("nope") {
+            Ok(_) => panic!("expected error"),
+            Err(e) => e.to_string(),
+        };
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+
+    #[test]
+    fn available_lists_hlo_files() {
+        let dir = std::env::temp_dir().join(format!("rp_rt_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("a.hlo.txt"), "x").unwrap();
+        std::fs::write(dir.join("b.hlo.txt"), "x").unwrap();
+        std::fs::write(dir.join("notes.md"), "x").unwrap();
+        let rt = Runtime::cpu(&dir).unwrap();
+        assert_eq!(rt.available(), vec!["a".to_string(), "b".to_string()]);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -1,0 +1,180 @@
+//! SAGA job adapters: PBS (Titan), LSF (Summit), Slurm (Frontera), Fork
+//! (local). All submit against the simulated `BatchSystem`; each adapter
+//! contributes its flavour-specific submission script rendering, which the
+//! integration tests check (and which documents what a real deployment
+//! would emit).
+
+use crate::platform::batch::{BatchSystem, JobState};
+use crate::sim::SimTime;
+
+#[derive(Clone, Debug)]
+pub struct JobDescription {
+    pub project: String,
+    pub queue: String,
+    pub nodes: u32,
+    pub walltime_s: f64,
+    pub job_name: String,
+}
+
+#[derive(Clone, Debug)]
+pub struct JobHandle {
+    pub job_id: u64,
+    pub activation_time: SimTime,
+}
+
+/// Uniform adapter interface (SAGA's `job.Service`).
+pub trait SagaAdapter {
+    fn flavour(&self) -> &'static str;
+
+    /// Render the submission script a real deployment would `qsub`/`bsub`/
+    /// `sbatch`. Pure function of the description — unit-testable.
+    fn render_script(&self, jd: &JobDescription) -> String;
+
+    /// Submit against the simulated batch system.
+    fn submit(
+        &self,
+        batch: &mut BatchSystem,
+        now: SimTime,
+        jd: &JobDescription,
+    ) -> Result<JobHandle, String> {
+        let (job_id, activation_time) = batch.submit(now, jd.nodes, jd.walltime_s)?;
+        Ok(JobHandle {
+            job_id,
+            activation_time,
+        })
+    }
+
+    fn state(&self, batch: &BatchSystem, h: &JobHandle) -> JobState {
+        batch.job(h.job_id).state
+    }
+
+    fn cancel(&self, batch: &mut BatchSystem, now: SimTime, h: &JobHandle) {
+        batch.cancel(h.job_id, now);
+    }
+}
+
+pub struct PbsAdapter;
+pub struct LsfAdapter;
+pub struct SlurmAdapter;
+pub struct ForkAdapter;
+
+impl SagaAdapter for PbsAdapter {
+    fn flavour(&self) -> &'static str {
+        "pbs"
+    }
+    fn render_script(&self, jd: &JobDescription) -> String {
+        let h = (jd.walltime_s / 3600.0).floor() as u64;
+        let m = ((jd.walltime_s % 3600.0) / 60.0).ceil() as u64;
+        format!(
+            "#!/bin/sh\n#PBS -N {}\n#PBS -A {}\n#PBS -q {}\n#PBS -l nodes={}\n#PBS -l walltime={:02}:{:02}:00\n\
+             exec $RP_AGENT_BOOTSTRAP\n",
+            jd.job_name, jd.project, jd.queue, jd.nodes, h, m
+        )
+    }
+}
+
+impl SagaAdapter for LsfAdapter {
+    fn flavour(&self) -> &'static str {
+        "lsf"
+    }
+    fn render_script(&self, jd: &JobDescription) -> String {
+        let mins = (jd.walltime_s / 60.0).ceil() as u64;
+        format!(
+            "#!/bin/sh\n#BSUB -J {}\n#BSUB -P {}\n#BSUB -q {}\n#BSUB -nnodes {}\n#BSUB -W {}\n\
+             exec $RP_AGENT_BOOTSTRAP\n",
+            jd.job_name, jd.project, jd.queue, jd.nodes, mins
+        )
+    }
+}
+
+impl SagaAdapter for SlurmAdapter {
+    fn flavour(&self) -> &'static str {
+        "slurm"
+    }
+    fn render_script(&self, jd: &JobDescription) -> String {
+        let h = (jd.walltime_s / 3600.0).floor() as u64;
+        let m = ((jd.walltime_s % 3600.0) / 60.0).ceil() as u64;
+        format!(
+            "#!/bin/sh\n#SBATCH -J {}\n#SBATCH -A {}\n#SBATCH -p {}\n#SBATCH -N {}\n#SBATCH -t {:02}:{:02}:00\n\
+             exec $RP_AGENT_BOOTSTRAP\n",
+            jd.job_name, jd.project, jd.queue, jd.nodes, h, m
+        )
+    }
+}
+
+impl SagaAdapter for ForkAdapter {
+    fn flavour(&self) -> &'static str {
+        "fork"
+    }
+    fn render_script(&self, jd: &JobDescription) -> String {
+        format!("#!/bin/sh\n# local fork pilot: {}\nexec $RP_AGENT_BOOTSTRAP\n", jd.job_name)
+    }
+}
+
+/// Adapter factory keyed on the platform's `batch_system` config field.
+pub fn adapter_for(flavour: &str) -> Result<Box<dyn SagaAdapter>, String> {
+    match flavour {
+        "pbs" | "pbspro" | "torque" => Ok(Box::new(PbsAdapter)),
+        "lsf" | "loadleveler" => Ok(Box::new(LsfAdapter)),
+        "slurm" => Ok(Box::new(SlurmAdapter)),
+        "fork" | "local" => Ok(Box::new(ForkAdapter)),
+        other => Err(format!("no SAGA adapter for batch system '{other}'")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn jd() -> JobDescription {
+        JobDescription {
+            project: "CSC393".into(),
+            queue: "batch".into(),
+            nodes: 1024,
+            walltime_s: 7200.0,
+            job_name: "rp.pilot.0000".into(),
+        }
+    }
+
+    #[test]
+    fn factory_covers_all_flavours() {
+        for f in ["pbs", "lsf", "slurm", "fork", "torque", "pbspro", "loadleveler", "local"] {
+            assert!(adapter_for(f).is_ok(), "{f}");
+        }
+        assert!(adapter_for("htcondor").is_err());
+    }
+
+    #[test]
+    fn pbs_script_fields() {
+        let s = PbsAdapter.render_script(&jd());
+        assert!(s.contains("#PBS -l nodes=1024"));
+        assert!(s.contains("walltime=02:00:00"));
+        assert!(s.contains("#PBS -A CSC393"));
+    }
+
+    #[test]
+    fn lsf_script_fields() {
+        let s = LsfAdapter.render_script(&jd());
+        assert!(s.contains("#BSUB -nnodes 1024"));
+        assert!(s.contains("#BSUB -W 120"));
+    }
+
+    #[test]
+    fn slurm_script_fields() {
+        let s = SlurmAdapter.render_script(&jd());
+        assert!(s.contains("#SBATCH -N 1024"));
+        assert!(s.contains("-t 02:00:00"));
+    }
+
+    #[test]
+    fn submit_through_adapter() {
+        let mut batch = BatchSystem::new("pbs", 2048, 30.0, 1);
+        let a = adapter_for("pbs").unwrap();
+        let h = a.submit(&mut batch, 0, &jd()).unwrap();
+        assert_eq!(a.state(&batch, &h), JobState::Pending);
+        batch.activate(h.job_id, h.activation_time);
+        assert_eq!(a.state(&batch, &h), JobState::Running);
+        a.cancel(&mut batch, h.activation_time + 1, &h);
+        assert_eq!(a.state(&batch, &h), JobState::Cancelled);
+    }
+}

@@ -1,0 +1,13 @@
+//! RADICAL-SAGA equivalent: a uniform job-submission API over the
+//! platform-specific batch systems (§III: "RP uses RADICAL-SAGA to support
+//! all the major batch systems: Slurm, PBSPro, Torque, LGI, Cobalt, LSF and
+//! LoadLeveler").
+//!
+//! Each adapter translates a `JobDescription` into the flavour-specific
+//! submission (here: against the `platform::batch` substrate) and exposes
+//! uniform state management — exactly SAGA's role in RP's execution model
+//! (Fig. 2, step 2).
+
+pub mod adapter;
+
+pub use adapter::{JobDescription, JobHandle, SagaAdapter, adapter_for};

@@ -1,0 +1,123 @@
+//! Session (§III-D): the API root object. "RP exposes an API with 5
+//! classes: Session, PilotManager, PilotDescription, TaskManager,
+//! TaskDescription." A Session owns the managers, the DB and the function
+//! registry, and provides the blocking `run_local` convenience that
+//! executes a workload end-to-end on the local platform (real mode).
+
+use crate::agent::agent::{Agent, AgentConfig, AgentResult, FunctionRegistry};
+use crate::db::Db;
+use crate::pilot::{PilotDescription, PilotManager};
+use crate::platform::{Platform, PlatformKind};
+use crate::task::TaskDescription;
+use crate::tmgr::TaskManager;
+use crate::util::ids;
+
+pub struct Session {
+    pub uid: String,
+    pub pmgr: PilotManager,
+    pub tmgr: TaskManager,
+    pub db: Db,
+    pub registry: FunctionRegistry,
+}
+
+impl Default for Session {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Session {
+    pub fn new() -> Session {
+        Session {
+            uid: ids::session_uid(),
+            pmgr: PilotManager::new(),
+            tmgr: TaskManager::new(),
+            db: Db::new(),
+            registry: FunctionRegistry::new(),
+        }
+    }
+
+    /// Register a function implementation for Function tasks.
+    pub fn register_function<F>(&mut self, name: &str, f: F)
+    where
+        F: Fn(&crate::util::json::Json) -> Result<f64, String> + Send + Sync + 'static,
+    {
+        self.registry.register(name, f);
+    }
+
+    /// Execute a workload on the local platform, blocking to completion —
+    /// the "application waits for the workload to complete before
+    /// returning control" usage mode of §III-D.
+    ///
+    /// `concurrency` bounds simultaneously running tasks (defaults to the
+    /// machine's core count when 0).
+    pub fn run_local(
+        &mut self,
+        descriptions: Vec<TaskDescription>,
+        concurrency: usize,
+    ) -> Result<AgentResult, String> {
+        let platform = Platform::load(PlatformKind::Local);
+        let cores = platform.cores_per_node;
+        let pd = PilotDescription::new("local.localhost", 1, 3600.0);
+        let pidx = self.pmgr.submit(pd)?;
+        let pilot_uid = self.pmgr.pilot(pidx).uid.clone();
+
+        self.tmgr.submit(descriptions)?;
+        self.tmgr.schedule_to_pilots(&self.db, &[pilot_uid.clone()])?;
+
+        let n_threads = if concurrency == 0 {
+            cores as usize
+        } else {
+            concurrency
+        };
+        let cfg = AgentConfig {
+            pilot_uid,
+            n_nodes: 1,
+            cores_per_node: cores,
+            gpus_per_node: 0,
+            launch_method: "fork".into(),
+            n_executor_threads: n_threads,
+            bulk_size: 4096,
+            trace: true,
+        };
+        let all_descriptions = self.tmgr.descriptions();
+        let result = Agent::run(&cfg, &self.db, &all_descriptions, &self.registry);
+        self.tmgr.sync_states(&self.db);
+        Ok(result)
+    }
+
+    pub fn close(&self) {
+        self.db.close();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::task::TaskState;
+    use crate::util::json::Json;
+
+    #[test]
+    fn session_runs_mixed_workload_locally() {
+        let mut s = Session::new();
+        s.register_function("double", |p| Ok(2.0 * p.as_f64().unwrap_or(0.0)));
+        let mut tasks = vec![
+            TaskDescription::emulated("/bin/true", 1, 1, 0.0),
+            TaskDescription::func("double", Json::Num(21.0), 0.0),
+        ];
+        tasks[0].name = "exe".into();
+        tasks[1].name = "fn".into();
+        let res = s.run_local(tasks, 2).unwrap();
+        assert_eq!(res.tasks.len(), 2);
+        assert!(res.tasks.iter().all(|t| t.state == TaskState::Done));
+        assert_eq!(res.tasks[1].result, Some(42.0));
+        // tmgr saw the terminal states
+        assert_eq!(s.tmgr.n_terminal(), 2);
+        s.close();
+    }
+
+    #[test]
+    fn sessions_have_unique_uids() {
+        assert_ne!(Session::new().uid, Session::new().uid);
+    }
+}

@@ -1,0 +1,231 @@
+//! Event-queue core: a binary-heap calendar with a virtual clock.
+//!
+//! `Engine<E>` is generic over the event payload. Components are state
+//! machines owned by the experiment driver; the driver loop pops the next
+//! event and dispatches it, possibly scheduling more. Ties in time are
+//! broken by insertion order (FIFO), which keeps runs deterministic.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Virtual time in integer microseconds. Integer (not f64) so that event
+/// ordering is exact and runs are bit-reproducible.
+pub type SimTime = u64;
+
+/// Convert seconds (f64) to SimTime, clamping negatives to zero.
+pub fn secs(s: f64) -> SimTime {
+    if s <= 0.0 {
+        0
+    } else {
+        (s * 1e6).round() as SimTime
+    }
+}
+
+/// Convert SimTime to seconds.
+pub fn to_secs(t: SimTime) -> f64 {
+    t as f64 / 1e6
+}
+
+struct Scheduled<E> {
+    at: SimTime,
+    seq: u64,
+    ev: E,
+}
+
+impl<E> PartialEq for Scheduled<E> {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at && self.seq == other.seq
+    }
+}
+impl<E> Eq for Scheduled<E> {}
+impl<E> PartialOrd for Scheduled<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<E> Ord for Scheduled<E> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // BinaryHeap is a max-heap; invert for earliest-first.
+        other
+            .at
+            .cmp(&self.at)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+pub struct Engine<E> {
+    now: SimTime,
+    seq: u64,
+    queue: BinaryHeap<Scheduled<E>>,
+    processed: u64,
+}
+
+impl<E> Default for Engine<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<E> Engine<E> {
+    pub fn new() -> Self {
+        Engine {
+            now: 0,
+            seq: 0,
+            queue: BinaryHeap::new(),
+            processed: 0,
+        }
+    }
+
+    /// Current virtual time (µs).
+    pub fn now(&self) -> SimTime {
+        self.now
+    }
+
+    /// Current virtual time in seconds.
+    pub fn now_secs(&self) -> f64 {
+        to_secs(self.now)
+    }
+
+    /// Schedule `ev` at `now + delay`.
+    pub fn schedule_in(&mut self, delay: SimTime, ev: E) {
+        self.schedule_at(self.now.saturating_add(delay), ev);
+    }
+
+    /// Schedule `ev` `delay_s` seconds from now.
+    pub fn schedule_in_secs(&mut self, delay_s: f64, ev: E) {
+        self.schedule_in(secs(delay_s), ev);
+    }
+
+    /// Schedule `ev` at absolute virtual time `at` (clamped to now).
+    pub fn schedule_at(&mut self, at: SimTime, ev: E) {
+        let at = at.max(self.now);
+        let seq = self.seq;
+        self.seq += 1;
+        self.queue.push(Scheduled { at, seq, ev });
+    }
+
+    /// Pop the next event, advancing the clock to its timestamp.
+    pub fn next(&mut self) -> Option<(SimTime, E)> {
+        let s = self.queue.pop()?;
+        debug_assert!(s.at >= self.now, "time went backwards");
+        self.now = s.at;
+        self.processed += 1;
+        Some((s.at, s.ev))
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn processed(&self) -> u64 {
+        self.processed
+    }
+
+    /// Drain the whole calendar through a handler. The handler may schedule
+    /// more events via the engine it is handed. `limit` guards against
+    /// runaway loops (0 = unlimited).
+    pub fn run<F>(&mut self, limit: u64, mut handler: F)
+    where
+        F: FnMut(&mut Engine<E>, SimTime, E),
+    {
+        let mut n = 0u64;
+        while let Some((t, ev)) = self.next() {
+            handler(self, t, ev);
+            n += 1;
+            if limit > 0 && n >= limit {
+                panic!("sim event limit {limit} exceeded — runaway simulation?");
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[derive(Debug, PartialEq)]
+    enum Ev {
+        A(u32),
+        B,
+    }
+
+    #[test]
+    fn events_pop_in_time_order() {
+        let mut e = Engine::new();
+        e.schedule_in(secs(3.0), Ev::A(3));
+        e.schedule_in(secs(1.0), Ev::A(1));
+        e.schedule_in(secs(2.0), Ev::A(2));
+        let order: Vec<u32> = std::iter::from_fn(|| e.next()).map(|(_, ev)| match ev {
+            Ev::A(n) => n,
+            _ => panic!(),
+        })
+        .collect();
+        assert_eq!(order, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn ties_broken_fifo() {
+        let mut e = Engine::new();
+        e.schedule_at(100, Ev::A(1));
+        e.schedule_at(100, Ev::A(2));
+        e.schedule_at(100, Ev::A(3));
+        let order: Vec<u32> = std::iter::from_fn(|| e.next()).map(|(_, ev)| match ev {
+            Ev::A(n) => n,
+            _ => panic!(),
+        })
+        .collect();
+        assert_eq!(order, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn clock_advances_monotonically() {
+        let mut e = Engine::new();
+        e.schedule_in(5, Ev::B);
+        e.schedule_in(10, Ev::B);
+        let (t1, _) = e.next().unwrap();
+        assert_eq!(e.now(), t1);
+        let (t2, _) = e.next().unwrap();
+        assert!(t2 >= t1);
+        assert_eq!(e.now(), 10);
+    }
+
+    #[test]
+    fn handler_can_schedule_more() {
+        let mut e = Engine::new();
+        e.schedule_in(1, 0u32);
+        let mut seen = Vec::new();
+        e.run(0, |eng, _t, ev| {
+            seen.push(ev);
+            if ev < 4 {
+                eng.schedule_in_secs(1.0, ev + 1);
+            }
+        });
+        assert_eq!(seen, vec![0, 1, 2, 3, 4]);
+        assert!((e.now_secs() - 4.0).abs() < 1e-5); // first event at 1 µs
+    }
+
+    #[test]
+    fn secs_conversions() {
+        assert_eq!(secs(1.5), 1_500_000);
+        assert_eq!(secs(-3.0), 0);
+        assert!((to_secs(secs(828.0)) - 828.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn past_schedules_clamp_to_now() {
+        let mut e = Engine::new();
+        e.schedule_in(100, Ev::B);
+        e.next().unwrap();
+        e.schedule_at(5, Ev::B); // in the "past"
+        let (t, _) = e.next().unwrap();
+        assert_eq!(t, 100);
+    }
+
+    #[test]
+    #[should_panic(expected = "event limit")]
+    fn runaway_guard() {
+        let mut e = Engine::new();
+        e.schedule_in(1, 0u32);
+        e.run(100, |eng, _, ev| eng.schedule_in(1, ev));
+    }
+}

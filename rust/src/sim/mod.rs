@@ -1,0 +1,12 @@
+//! Discrete-event simulation substrate.
+//!
+//! The experiments of the paper ran on Titan (131 k cores), Summit (4608
+//! nodes) and Frontera (8008 nodes); reproducing them requires a virtual
+//! clock. The RP component logic under test is the *real* library code;
+//! only durations of external subsystems (task runtimes, ORTE/PRRTE
+//! service times, filesystem ops, bootstrap) are sampled from calibrated
+//! models and advanced through this engine.
+
+pub mod engine;
+
+pub use engine::{secs, to_secs, Engine, SimTime};

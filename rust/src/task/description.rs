@@ -1,0 +1,185 @@
+//! TaskDescription — the user-facing specification of one task
+//! (mirrors `radical.pilot.TaskDescription`).
+//!
+//! The five heterogeneity axes of §III are all expressible:
+//!   1. kind        — executable / function
+//!   2. parallelism — scalar / MPI / OpenMP (threads) / multi-process
+//!   3. compute     — CPU cores and/or GPUs
+//!   4. size        — ranks × cores_per_rank (+ gpus), 1 HW thread … many nodes
+//!   5. duration    — seconds (emulated in DES mode; wall time in real mode)
+
+use crate::util::json::Json;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TaskKind {
+    /// stand-alone process with input/output/termination criteria
+    Executable,
+    /// Python-function-call-equivalent, executed in-process by a RAPTOR
+    /// worker (here: a registered Rust fn or a PJRT artifact call)
+    Function,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Parallelism {
+    Scalar,
+    Mpi,
+    Threads,
+    MultiProcess,
+}
+
+/// File-staging directive (§III-B: input pushed/pulled by the Agent,
+/// output staged out via SAGA).
+#[derive(Clone, Debug, PartialEq)]
+pub struct StagingDirective {
+    pub source: String,
+    pub target: String,
+    /// bytes moved — drives the DES staging-time model
+    pub size_bytes: u64,
+}
+
+#[derive(Clone, Debug)]
+pub struct TaskDescription {
+    pub name: String,
+    pub kind: TaskKind,
+    pub executable: String,
+    pub arguments: Vec<String>,
+    /// registered function name (Function tasks)
+    pub function: String,
+    /// opaque function payload (real mode: input to the PJRT artifact)
+    pub payload: Json,
+    pub parallelism: Parallelism,
+    pub ranks: u32,
+    pub cores_per_rank: u32,
+    pub gpus_per_rank: u32,
+    /// emulated runtime (DES mode). In real mode the task runs for as long
+    /// as it runs; this field then only sizes the synthetic payload.
+    pub runtime_s: f64,
+    /// pin to a scheduler node tag ("Tagged" policy)
+    pub node_tag: Option<u32>,
+    /// pin to a PRRTE DVM id
+    pub dvm_tag: Option<u32>,
+    pub input_staging: Vec<StagingDirective>,
+    pub output_staging: Vec<StagingDirective>,
+}
+
+impl Default for TaskDescription {
+    fn default() -> Self {
+        TaskDescription {
+            name: String::new(),
+            kind: TaskKind::Executable,
+            executable: String::new(),
+            arguments: Vec::new(),
+            function: String::new(),
+            payload: Json::Null,
+            parallelism: Parallelism::Scalar,
+            ranks: 1,
+            cores_per_rank: 1,
+            gpus_per_rank: 0,
+            runtime_s: 0.0,
+            node_tag: None,
+            dvm_tag: None,
+            input_staging: Vec::new(),
+            output_staging: Vec::new(),
+        }
+    }
+}
+
+impl TaskDescription {
+    /// Total CPU cores required.
+    pub fn cores(&self) -> u64 {
+        self.ranks as u64 * self.cores_per_rank as u64
+    }
+
+    /// Total GPUs required.
+    pub fn gpus(&self) -> u64 {
+        self.ranks as u64 * self.gpus_per_rank as u64
+    }
+
+    pub fn uses_mpi(&self) -> bool {
+        self.parallelism == Parallelism::Mpi
+    }
+
+    /// Sanity-check the description (mirrors RP's attribute verification).
+    pub fn verify(&self) -> Result<(), String> {
+        if self.ranks == 0 {
+            return Err("task requires at least one rank".into());
+        }
+        if self.cores_per_rank == 0 {
+            return Err("task requires at least one core per rank".into());
+        }
+        match self.kind {
+            TaskKind::Executable if self.executable.is_empty() => {
+                Err("executable task without executable".into())
+            }
+            TaskKind::Function if self.function.is_empty() => {
+                Err("function task without function name".into())
+            }
+            _ => Ok(()),
+        }
+    }
+
+    /// Convenience constructor for the common emulated executable task.
+    pub fn emulated(executable: &str, ranks: u32, cores_per_rank: u32, runtime_s: f64) -> Self {
+        TaskDescription {
+            executable: executable.to_string(),
+            ranks,
+            cores_per_rank,
+            parallelism: if ranks > 1 {
+                Parallelism::Mpi
+            } else {
+                Parallelism::Scalar
+            },
+            runtime_s,
+            ..Default::default()
+        }
+    }
+
+    /// Convenience constructor for a function task (RAPTOR).
+    pub fn func(function: &str, payload: Json, runtime_s: f64) -> Self {
+        TaskDescription {
+            kind: TaskKind::Function,
+            function: function.to_string(),
+            payload,
+            runtime_s,
+            ..Default::default()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_minimal_scalar() {
+        let d = TaskDescription::default();
+        assert_eq!(d.cores(), 1);
+        assert_eq!(d.gpus(), 0);
+        assert!(!d.uses_mpi());
+    }
+
+    #[test]
+    fn core_gpu_accounting() {
+        let mut d = TaskDescription::emulated("gmx", 4, 8, 100.0);
+        d.gpus_per_rank = 1;
+        assert_eq!(d.cores(), 32);
+        assert_eq!(d.gpus(), 4);
+        assert!(d.uses_mpi());
+    }
+
+    #[test]
+    fn verify_catches_misconfiguration() {
+        assert!(TaskDescription::default().verify().is_err()); // no executable
+        assert!(TaskDescription::emulated("x", 1, 1, 1.0).verify().is_ok());
+        let mut d = TaskDescription::emulated("x", 0, 1, 1.0);
+        assert!(d.verify().is_err());
+        d.ranks = 1;
+        d.cores_per_rank = 0;
+        assert!(d.verify().is_err());
+        let f = TaskDescription::func("dock", Json::Null, 1.0);
+        assert!(f.verify().is_ok());
+        let mut f2 = f.clone();
+        f2.function.clear();
+        assert!(f2.verify().is_err());
+    }
+}

@@ -1,0 +1,9 @@
+//! The Task abstraction (§III-A): a unit of work — executable or function —
+//! plus resource and execution-environment requirements, moving through
+//! RP's state model.
+
+pub mod description;
+pub mod state;
+
+pub use description::{Parallelism, StagingDirective, TaskDescription, TaskKind};
+pub use state::{Task, TaskState};

@@ -1,0 +1,197 @@
+//! Task state model with legal-transition enforcement.
+//!
+//! The states mirror RP's pipeline (Fig. 2): the TaskManager schedules the
+//! task to an Agent via the DB; the Agent stages input, schedules onto
+//! resources, executes, stages output; terminal states are Done / Failed /
+//! Canceled.
+
+use super::description::TaskDescription;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum TaskState {
+    New,
+    TmgrScheduling,
+    AgentStagingInput,
+    AgentSchedulingPending,
+    AgentScheduling,
+    AgentExecutingPending,
+    AgentExecuting,
+    AgentStagingOutput,
+    Done,
+    Failed,
+    Canceled,
+}
+
+impl TaskState {
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, TaskState::Done | TaskState::Failed | TaskState::Canceled)
+    }
+
+    /// Legal forward transitions. Failure/cancel is legal from any
+    /// non-terminal state.
+    pub fn can_advance_to(&self, next: TaskState) -> bool {
+        use TaskState::*;
+        if self.is_terminal() {
+            return false;
+        }
+        if matches!(next, Failed | Canceled) {
+            return true;
+        }
+        matches!(
+            (self, next),
+            (New, TmgrScheduling)
+                | (TmgrScheduling, AgentStagingInput)
+                | (TmgrScheduling, AgentSchedulingPending)
+                | (AgentStagingInput, AgentSchedulingPending)
+                | (AgentSchedulingPending, AgentScheduling)
+                | (AgentScheduling, AgentExecutingPending)
+                | (AgentExecutingPending, AgentExecuting)
+                | (AgentExecuting, AgentStagingOutput)
+                | (AgentExecuting, Done)
+                | (AgentStagingOutput, Done)
+        )
+    }
+
+    pub fn name(&self) -> &'static str {
+        use TaskState::*;
+        match self {
+            New => "NEW",
+            TmgrScheduling => "TMGR_SCHEDULING",
+            AgentStagingInput => "AGENT_STAGING_INPUT",
+            AgentSchedulingPending => "AGENT_SCHEDULING_PENDING",
+            AgentScheduling => "AGENT_SCHEDULING",
+            AgentExecutingPending => "AGENT_EXECUTING_PENDING",
+            AgentExecuting => "AGENT_EXECUTING",
+            AgentStagingOutput => "AGENT_STAGING_OUTPUT",
+            Done => "DONE",
+            Failed => "FAILED",
+            Canceled => "CANCELED",
+        }
+    }
+}
+
+/// A live task: description + identity + state + result.
+#[derive(Clone, Debug)]
+pub struct Task {
+    pub uid: String,
+    /// dense index for compact bookkeeping in large runs
+    pub index: u32,
+    pub description: TaskDescription,
+    pub state: TaskState,
+    pub exit_code: Option<i32>,
+    pub stderr: String,
+    /// result payload of function tasks (real mode)
+    pub result: Option<f64>,
+}
+
+impl Task {
+    pub fn new(uid: String, index: u32, description: TaskDescription) -> Task {
+        Task {
+            uid,
+            index,
+            description,
+            state: TaskState::New,
+            exit_code: None,
+            stderr: String::new(),
+            result: None,
+        }
+    }
+
+    /// Advance the state, enforcing legality.
+    pub fn advance(&mut self, next: TaskState) -> Result<(), String> {
+        if !self.state.can_advance_to(next) {
+            return Err(format!(
+                "illegal task transition {} → {} ({})",
+                self.state.name(),
+                next.name(),
+                self.uid
+            ));
+        }
+        self.state = next;
+        Ok(())
+    }
+
+    pub fn fail(&mut self, why: &str) {
+        if !self.state.is_terminal() {
+            self.state = TaskState::Failed;
+            self.stderr = why.to_string();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn task() -> Task {
+        Task::new(
+            "task.000000".into(),
+            0,
+            TaskDescription::emulated("/bin/true", 1, 1, 1.0),
+        )
+    }
+
+    #[test]
+    fn happy_path_transitions() {
+        use TaskState::*;
+        let mut t = task();
+        for s in [
+            TmgrScheduling,
+            AgentStagingInput,
+            AgentSchedulingPending,
+            AgentScheduling,
+            AgentExecutingPending,
+            AgentExecuting,
+            AgentStagingOutput,
+            Done,
+        ] {
+            t.advance(s).unwrap();
+        }
+        assert!(t.state.is_terminal());
+    }
+
+    #[test]
+    fn skip_staging_is_legal() {
+        use TaskState::*;
+        let mut t = task();
+        t.advance(TmgrScheduling).unwrap();
+        t.advance(AgentSchedulingPending).unwrap(); // no input staging
+        t.advance(AgentScheduling).unwrap();
+        t.advance(AgentExecutingPending).unwrap();
+        t.advance(AgentExecuting).unwrap();
+        t.advance(Done).unwrap(); // no output staging
+    }
+
+    #[test]
+    fn illegal_jumps_rejected() {
+        use TaskState::*;
+        let mut t = task();
+        assert!(t.advance(AgentExecuting).is_err());
+        t.advance(TmgrScheduling).unwrap();
+        assert!(t.advance(Done).is_err());
+    }
+
+    #[test]
+    fn failure_from_any_nonterminal() {
+        use TaskState::*;
+        let mut t = task();
+        t.advance(TmgrScheduling).unwrap();
+        t.advance(Failed).unwrap();
+        assert!(t.state.is_terminal());
+        // …and terminal states are sticky
+        assert!(t.advance(Done).is_err());
+        let mut t2 = task();
+        t2.fail("boom");
+        assert_eq!(t2.state, Failed);
+        t2.fail("again"); // idempotent, no panic
+        assert_eq!(t2.stderr, "boom");
+    }
+
+    #[test]
+    fn cancel_everywhere() {
+        use TaskState::*;
+        let mut t = task();
+        t.advance(Canceled).unwrap();
+        assert_eq!(t.state, Canceled);
+    }
+}

@@ -1,0 +1,177 @@
+//! TaskManager (§III-A/B): accepts task descriptions, verifies them,
+//! assigns uids, routes them to pilots (round-robin or explicit), and
+//! communicates them to Agents through the DB module (Fig. 2, step 4).
+
+use crate::db::{Db, TaskRecord};
+use crate::task::{Task, TaskDescription, TaskState};
+use crate::util::ids::Counter;
+
+pub struct TaskManager {
+    pub uid: String,
+    tasks: Vec<Task>,
+    counter: Counter,
+    rr_next: usize,
+}
+
+impl Default for TaskManager {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl TaskManager {
+    pub fn new() -> TaskManager {
+        TaskManager {
+            uid: "tmgr.0000".into(),
+            tasks: Vec::new(),
+            counter: Counter::new(),
+            rr_next: 0,
+        }
+    }
+
+    /// Register descriptions; returns the dense indices assigned.
+    pub fn submit(&mut self, descriptions: Vec<TaskDescription>) -> Result<Vec<u32>, String> {
+        let mut indices = Vec::with_capacity(descriptions.len());
+        for td in descriptions {
+            td.verify()?;
+            let index = self.tasks.len() as u32;
+            let uid = self.counter.next("task", 6);
+            self.tasks.push(Task::new(uid, index, td));
+            indices.push(index);
+        }
+        Ok(indices)
+    }
+
+    /// Route tasks to pilots round-robin (RP's default multi-pilot
+    /// policy) and insert the records into the DB in bulk.
+    pub fn schedule_to_pilots(&mut self, db: &Db, pilot_uids: &[String]) -> Result<(), String> {
+        if pilot_uids.is_empty() {
+            return Err("no pilots to schedule to".into());
+        }
+        let mut per_pilot: Vec<Vec<TaskRecord>> = vec![Vec::new(); pilot_uids.len()];
+        for task in self.tasks.iter_mut() {
+            if task.state != TaskState::New {
+                continue;
+            }
+            let p = self.rr_next % pilot_uids.len();
+            self.rr_next += 1;
+            task.advance(TaskState::TmgrScheduling)?;
+            per_pilot[p].push(TaskRecord {
+                uid: task.uid.clone(),
+                index: task.index,
+                pilot: pilot_uids[p].clone(),
+                state: TaskState::TmgrScheduling,
+            });
+        }
+        for (p, records) in per_pilot.into_iter().enumerate() {
+            if !records.is_empty() {
+                db.insert_tasks(&pilot_uids[p], records);
+            }
+        }
+        Ok(())
+    }
+
+    /// Absorb agent-side state updates from the DB.
+    pub fn sync_states(&mut self, db: &Db) {
+        for (uid, state) in db.drain_updates() {
+            if let Some(task) = self.tasks.iter_mut().find(|t| t.uid == uid) {
+                // agent states may arrive coarse-grained; accept terminal
+                // transitions directly
+                if state.is_terminal() {
+                    if !task.state.is_terminal() {
+                        task.state = state;
+                    }
+                } else if task.state.can_advance_to(state) {
+                    task.state = state;
+                }
+            }
+        }
+    }
+
+    pub fn tasks(&self) -> &[Task] {
+        &self.tasks
+    }
+
+    pub fn task(&self, index: u32) -> &Task {
+        &self.tasks[index as usize]
+    }
+
+    pub fn descriptions(&self) -> Vec<TaskDescription> {
+        self.tasks.iter().map(|t| t.description.clone()).collect()
+    }
+
+    pub fn n_terminal(&self) -> usize {
+        self.tasks.iter().filter(|t| t.state.is_terminal()).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tds(n: usize) -> Vec<TaskDescription> {
+        (0..n)
+            .map(|_| TaskDescription::emulated("/bin/true", 1, 1, 1.0))
+            .collect()
+    }
+
+    #[test]
+    fn submit_assigns_sequential_uids() {
+        let mut tm = TaskManager::new();
+        let idx = tm.submit(tds(3)).unwrap();
+        assert_eq!(idx, vec![0, 1, 2]);
+        assert_eq!(tm.task(0).uid, "task.000000");
+        assert_eq!(tm.task(2).uid, "task.000002");
+    }
+
+    #[test]
+    fn invalid_description_rejected() {
+        let mut tm = TaskManager::new();
+        assert!(tm.submit(vec![TaskDescription::default()]).is_err());
+    }
+
+    #[test]
+    fn round_robin_across_pilots() {
+        let mut tm = TaskManager::new();
+        tm.submit(tds(10)).unwrap();
+        let db = Db::new();
+        let pilots = vec!["pilot.0000".to_string(), "pilot.0001".to_string()];
+        tm.schedule_to_pilots(&db, &pilots).unwrap();
+        assert_eq!(db.pending("pilot.0000"), 5);
+        assert_eq!(db.pending("pilot.0001"), 5);
+        assert!(tm.tasks().iter().all(|t| t.state == TaskState::TmgrScheduling));
+    }
+
+    #[test]
+    fn reschedule_skips_already_routed() {
+        let mut tm = TaskManager::new();
+        tm.submit(tds(4)).unwrap();
+        let db = Db::new();
+        let pilots = vec!["pilot.0000".to_string()];
+        tm.schedule_to_pilots(&db, &pilots).unwrap();
+        tm.submit(tds(2)).unwrap();
+        tm.schedule_to_pilots(&db, &pilots).unwrap();
+        assert_eq!(db.pending("pilot.0000"), 6); // 4 + 2, no duplicates
+    }
+
+    #[test]
+    fn sync_states_applies_terminal_updates() {
+        let mut tm = TaskManager::new();
+        tm.submit(tds(2)).unwrap();
+        let db = Db::new();
+        tm.schedule_to_pilots(&db, &["pilot.0000".to_string()]).unwrap();
+        db.update_state("task.000000", TaskState::Done);
+        db.update_state("task.000001", TaskState::Failed);
+        tm.sync_states(&db);
+        assert_eq!(tm.task(0).state, TaskState::Done);
+        assert_eq!(tm.task(1).state, TaskState::Failed);
+        assert_eq!(tm.n_terminal(), 2);
+    }
+
+    #[test]
+    fn no_pilots_is_an_error() {
+        let mut tm = TaskManager::new();
+        tm.submit(tds(1)).unwrap();
+        assert!(tm.schedule_to_pilots(&Db::new(), &[]).is_err());
+    }
+}

@@ -1,0 +1,106 @@
+//! Minimal benchmarking harness (criterion is unavailable in the offline
+//! image). Warmup + timed batches, reporting mean/median/throughput.
+//! Used by the `rust/benches/*.rs` bench binaries (`cargo bench`).
+
+use std::time::Instant;
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchResult {
+    pub fn per_sec(&self) -> f64 {
+        1e9 / self.mean_ns
+    }
+}
+
+/// Time `f` (called once per iteration) over `batches` batches of
+/// `iters_per_batch`, after one warmup batch. Reports per-iteration stats.
+pub fn bench<F: FnMut()>(name: &str, batches: usize, iters_per_batch: u64, mut f: F) -> BenchResult {
+    // warmup
+    for _ in 0..iters_per_batch.min(1000) {
+        f();
+    }
+    let mut per_iter: Vec<f64> = Vec::with_capacity(batches);
+    for _ in 0..batches {
+        let t0 = Instant::now();
+        for _ in 0..iters_per_batch {
+            f();
+        }
+        per_iter.push(t0.elapsed().as_nanos() as f64 / iters_per_batch as f64);
+    }
+    per_iter.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = per_iter.iter().sum::<f64>() / per_iter.len() as f64;
+    let result = BenchResult {
+        name: name.to_string(),
+        iters: batches as u64 * iters_per_batch,
+        mean_ns: mean,
+        median_ns: per_iter[per_iter.len() / 2],
+        min_ns: per_iter[0],
+    };
+    print_result(&result);
+    result
+}
+
+/// Time one whole invocation of `f` (for end-to-end runs).
+pub fn bench_once<F: FnOnce() -> String>(name: &str, f: F) {
+    let t0 = Instant::now();
+    let info = f();
+    let dt = t0.elapsed().as_secs_f64();
+    println!("{name:<44} {dt:>10.3} s   {info}");
+}
+
+fn print_result(r: &BenchResult) {
+    let (val, unit) = human_ns(r.mean_ns);
+    println!(
+        "{:<44} {:>8.2} {:>3}/iter  median {:>8.2} {:>3}  {:>14.0} op/s",
+        r.name,
+        val,
+        unit,
+        human_ns(r.median_ns).0,
+        human_ns(r.median_ns).1,
+        r.per_sec()
+    );
+}
+
+fn human_ns(ns: f64) -> (f64, &'static str) {
+    if ns < 1e3 {
+        (ns, "ns")
+    } else if ns < 1e6 {
+        (ns / 1e3, "µs")
+    } else if ns < 1e9 {
+        (ns / 1e6, "ms")
+    } else {
+        (ns / 1e9, "s")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_numbers() {
+        let mut x = 0u64;
+        let r = bench("noop-add", 5, 10_000, || {
+            x = x.wrapping_add(1);
+        });
+        assert!(r.mean_ns > 0.0);
+        assert!(r.median_ns > 0.0);
+        assert!(r.min_ns <= r.mean_ns * 2.0);
+        assert_eq!(r.iters, 50_000);
+        assert!(x > 0);
+    }
+
+    #[test]
+    fn human_units() {
+        assert_eq!(human_ns(500.0).1, "ns");
+        assert_eq!(human_ns(5_000.0).1, "µs");
+        assert_eq!(human_ns(5_000_000.0).1, "ms");
+        assert_eq!(human_ns(5e9).1, "s");
+    }
+}

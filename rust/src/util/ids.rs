@@ -1,0 +1,84 @@
+//! RP-style uid generation: `pilot.0000`, `task.000042`, `session.<ts>`.
+//!
+//! RADICAL-Pilot names every entity with a namespaced, zero-padded counter;
+//! traces and analytics key on these ids, so we reproduce the scheme.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+static GLOBAL: Mutex<Option<HashMap<String, u64>>> = Mutex::new(None);
+static SESSION_COUNTER: AtomicU64 = AtomicU64::new(0);
+
+/// Per-namespace zero-padded counter id, process-global.
+/// `uid("task", 6)` → "task.000000", "task.000001", …
+pub fn uid(ns: &str, width: usize) -> String {
+    let mut g = GLOBAL.lock().unwrap();
+    let map = g.get_or_insert_with(HashMap::new);
+    let n = map.entry(ns.to_string()).or_insert(0);
+    let s = format!("{ns}.{:0width$}", n, width = width);
+    *n += 1;
+    s
+}
+
+/// Reset all counters — used by tests and by fresh Sessions so that runs
+/// are reproducible.
+pub fn reset() {
+    let mut g = GLOBAL.lock().unwrap();
+    *g = Some(HashMap::new());
+}
+
+/// Session ids are unique per process run: `rp.session.0000`.
+pub fn session_uid() -> String {
+    let n = SESSION_COUNTER.fetch_add(1, Ordering::SeqCst);
+    format!("rp.session.{n:04}")
+}
+
+/// A local (non-global) counter for components that own their namespace.
+#[derive(Debug, Default)]
+pub struct Counter {
+    next: u64,
+}
+
+impl Counter {
+    pub fn new() -> Self {
+        Counter { next: 0 }
+    }
+    pub fn next(&mut self, ns: &str, width: usize) -> String {
+        let s = format!("{ns}.{:0width$}", self.next, width = width);
+        self.next += 1;
+        s
+    }
+    pub fn count(&self) -> u64 {
+        self.next
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn local_counter_sequences() {
+        let mut c = Counter::new();
+        assert_eq!(c.next("task", 6), "task.000000");
+        assert_eq!(c.next("task", 6), "task.000001");
+        assert_eq!(c.count(), 2);
+    }
+
+    #[test]
+    fn global_uid_namespaced() {
+        reset();
+        let a = uid("pilot", 4);
+        let b = uid("pilot", 4);
+        let t = uid("task", 6);
+        assert_eq!(a, "pilot.0000");
+        assert_eq!(b, "pilot.0001");
+        assert_eq!(t, "task.000000");
+    }
+
+    #[test]
+    fn session_ids_unique() {
+        assert_ne!(session_uid(), session_uid());
+    }
+}

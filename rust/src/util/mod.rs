@@ -1,0 +1,10 @@
+//! Substrate utilities built in-repo (the build image is offline, so the
+//! usual crates — serde, rand, clap, proptest — are not available).
+
+pub mod args;
+pub mod bench;
+pub mod ids;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;

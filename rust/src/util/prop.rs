@@ -1,0 +1,123 @@
+//! Miniature property-based testing harness (proptest/quickcheck are not
+//! available in the offline image).
+//!
+//! Usage:
+//! ```ignore
+//! prop(0xC0FFEE, 200, |g| {
+//!     let n = g.usize_in(1, 64);
+//!     let xs = g.vec_u64(n, 0, 100);
+//!     // …assert invariants; return Err(String) to fail with context…
+//!     Ok(())
+//! });
+//! ```
+//! On failure, reports the case index and the seed so the exact case can be
+//! replayed deterministically.
+
+use super::rng::Rng;
+
+/// Case-local generator handed to the property closure.
+pub struct Gen {
+    pub rng: Rng,
+    /// case index (0..cases), usable for size scaling
+    pub case: usize,
+}
+
+impl Gen {
+    pub fn u64_in(&mut self, lo: u64, hi: u64) -> u64 {
+        self.rng.range_u64(lo, hi)
+    }
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.range_u64(lo as u64, hi as u64) as usize
+    }
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, hi)
+    }
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.rng.bool(p)
+    }
+    pub fn vec_u64(&mut self, len: usize, lo: u64, hi: u64) -> Vec<u64> {
+        (0..len).map(|_| self.u64_in(lo, hi)).collect()
+    }
+    pub fn vec_f64(&mut self, len: usize, lo: f64, hi: f64) -> Vec<f64> {
+        (0..len).map(|_| self.f64_in(lo, hi)).collect()
+    }
+    /// Pick one of the provided items (cloned).
+    pub fn pick<T: Clone>(&mut self, items: &[T]) -> T {
+        items[self.rng.below(items.len() as u64) as usize].clone()
+    }
+    /// A random ascii identifier.
+    pub fn ident(&mut self, max_len: usize) -> String {
+        let len = self.usize_in(1, max_len.max(1));
+        (0..len)
+            .map(|_| {
+                let c = b"abcdefghijklmnopqrstuvwxyz0123456789_"
+                    [self.rng.below(37) as usize];
+                c as char
+            })
+            .collect()
+    }
+}
+
+/// Run `cases` random cases of the property. Panics (with seed + case
+/// context) on the first failure.
+pub fn prop<F>(seed: u64, cases: usize, mut f: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let case_seed = seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut g = Gen {
+            rng: Rng::new(case_seed),
+            case,
+        };
+        if let Err(msg) = f(&mut g) {
+            panic!(
+                "property failed at case {case}/{cases} (replay seed: {case_seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        prop(1, 50, |g| {
+            n += 1;
+            let v = g.u64_in(3, 9);
+            if (3..=9).contains(&v) {
+                Ok(())
+            } else {
+                Err(format!("{v} out of range"))
+            }
+        });
+        assert_eq!(n, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_context() {
+        prop(2, 10, |g| {
+            let v = g.u64_in(0, 100);
+            if v < 1000 {
+                Err(format!("deliberate failure v={v}"))
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn ident_is_nonempty_ascii() {
+        prop(3, 100, |g| {
+            let s = g.ident(12);
+            if s.is_empty() || !s.is_ascii() {
+                return Err(format!("bad ident {s:?}"));
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,142 @@
+//! Summary-statistics helpers used by analytics and the experiment harness.
+
+/// Arithmetic mean. Empty input → 0.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Sample standard deviation (n-1 denominator). len < 2 → 0.
+pub fn std(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+/// Median (linear-interpolated percentile 50).
+pub fn median(xs: &[f64]) -> f64 {
+    percentile(xs, 50.0)
+}
+
+/// Linear-interpolated percentile, p in [0, 100]. Empty input → 0.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0) * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (rank - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+pub fn min(xs: &[f64]) -> f64 {
+    xs.iter().copied().fold(f64::INFINITY, f64::min)
+}
+
+pub fn max(xs: &[f64]) -> f64 {
+    xs.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+}
+
+/// `mean ± std` in the notation the paper uses.
+pub fn mean_std_str(xs: &[f64]) -> String {
+    format!("{:.1}±{:.1}", mean(xs), std(xs))
+}
+
+/// Fixed-width histogram over [lo, hi) with `bins` buckets.
+/// Returns (bucket_left_edges, counts). Values outside are clamped to the
+/// first/last bucket.
+pub fn histogram(xs: &[f64], lo: f64, hi: f64, bins: usize) -> (Vec<f64>, Vec<usize>) {
+    assert!(bins > 0 && hi > lo);
+    let w = (hi - lo) / bins as f64;
+    let edges: Vec<f64> = (0..bins).map(|i| lo + i as f64 * w).collect();
+    let mut counts = vec![0usize; bins];
+    for &x in xs {
+        let i = (((x - lo) / w).floor() as i64).clamp(0, bins as i64 - 1) as usize;
+        counts[i] += 1;
+    }
+    (edges, counts)
+}
+
+/// Linear interpolation over a monotone (x, y) table; clamps at the ends.
+pub fn interp(table: &[(f64, f64)], x: f64) -> f64 {
+    assert!(!table.is_empty());
+    if x <= table[0].0 {
+        return table[0].1;
+    }
+    for w in table.windows(2) {
+        let (x0, y0) = w[0];
+        let (x1, y1) = w[1];
+        if x <= x1 {
+            if x1 == x0 {
+                return y1;
+            }
+            return y0 + (x - x0) / (x1 - x0) * (y1 - y0);
+        }
+    }
+    table[table.len() - 1].1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_std_basic() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((mean(&xs) - 5.0).abs() < 1e-12);
+        assert!((std(&xs) - 2.138089935).abs() < 1e-6);
+    }
+
+    #[test]
+    fn empty_inputs_are_zero() {
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(std(&[]), 0.0);
+        assert_eq!(percentile(&[], 50.0), 0.0);
+    }
+
+    #[test]
+    fn percentiles() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert!((median(&xs) - 50.5).abs() < 1e-9);
+        assert!((percentile(&xs, 0.0) - 1.0).abs() < 1e-9);
+        assert!((percentile(&xs, 100.0) - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn histogram_counts_everything() {
+        let xs: Vec<f64> = (0..1000).map(|i| i as f64 / 100.0).collect();
+        let (_, counts) = histogram(&xs, 0.0, 10.0, 20);
+        assert_eq!(counts.iter().sum::<usize>(), 1000);
+    }
+
+    #[test]
+    fn histogram_clamps_outliers() {
+        let (_, counts) = histogram(&[-5.0, 100.0], 0.0, 10.0, 10);
+        assert_eq!(counts[0], 1);
+        assert_eq!(counts[9], 1);
+    }
+
+    #[test]
+    fn interp_table() {
+        // the ORTE ack calibration table from the paper
+        let t = [
+            (16384.0, 29.0),
+            (32768.0, 34.0),
+            (65536.0, 59.0),
+            (131072.0, 135.0),
+        ];
+        assert_eq!(interp(&t, 8000.0), 29.0); // clamp low
+        assert_eq!(interp(&t, 200000.0), 135.0); // clamp high
+        assert!((interp(&t, 49152.0) - 46.5).abs() < 1e-9); // midpoint
+    }
+}

@@ -1,0 +1,311 @@
+//! Cross-module integration tests: the full Session→TaskManager→DB→Agent
+//! pipeline in real mode, the DES harness at small scale, multi-pilot
+//! routing, fault injection, and analytics consistency on real traces.
+
+use rp::agent::agent::{Agent, AgentConfig, FunctionRegistry};
+use rp::analytics::{ru_breakdown, ttx, RuTimeline};
+use rp::db::Db;
+use rp::experiments::harness::{AgentSim, SimConfig};
+use rp::experiments::workloads::{bpti_emulated, heterogeneous_summit};
+use rp::pilot::{PilotDescription, PilotManager, PilotState};
+use rp::platform::{BatchSystem, PlatformKind};
+use rp::session::Session;
+use rp::task::{TaskDescription, TaskState};
+use rp::tmgr::TaskManager;
+use rp::util::json::Json;
+use rp::util::rng::Rng;
+
+// ------------------------------------------------------------- real mode --
+
+#[test]
+fn session_end_to_end_with_staging() {
+    let dir = std::env::temp_dir().join(format!("rp_it_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let src = dir.join("input.txt");
+    std::fs::write(&src, b"data").unwrap();
+    let dst = dir.join("staged/input.txt");
+
+    let mut s = Session::new();
+    let mut td = TaskDescription::emulated("/bin/cat", 1, 1, 0.0);
+    td.arguments = vec![dst.to_str().unwrap().to_string()];
+    td.input_staging = vec![rp::task::StagingDirective {
+        source: src.to_str().unwrap().into(),
+        target: dst.to_str().unwrap().into(),
+        size_bytes: 4,
+    }];
+    let res = s.run_local(vec![td], 1).unwrap();
+    assert_eq!(res.tasks[0].state, TaskState::Done, "{}", res.tasks[0].stderr);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn agent_handles_large_fanout_of_tiny_tasks() {
+    let db = Db::new();
+    let n = 300;
+    let descriptions: Vec<TaskDescription> = (0..n)
+        .map(|i| {
+            let mut t = TaskDescription::func("noop", Json::Num(i as f64), 0.0);
+            t.name = format!("t{i}");
+            t
+        })
+        .collect();
+    let records: Vec<rp::db::TaskRecord> = (0..n)
+        .map(|i| rp::db::TaskRecord {
+            uid: format!("task.{i:06}"),
+            index: i as u32,
+            pilot: "pilot.0000".into(),
+            state: TaskState::TmgrScheduling,
+        })
+        .collect();
+    db.insert_tasks("pilot.0000", records);
+    let mut reg = FunctionRegistry::new();
+    reg.register("noop", |p| Ok(p.as_f64().unwrap_or(0.0)));
+    let cfg = AgentConfig {
+        pilot_uid: "pilot.0000".into(),
+        n_nodes: 1,
+        cores_per_node: 8,
+        gpus_per_node: 0,
+        launch_method: "fork".into(),
+        n_executor_threads: 8,
+        bulk_size: 64,
+        trace: true,
+    };
+    let res = Agent::run(&cfg, &db, &descriptions, &reg);
+    assert_eq!(
+        res.tasks.iter().filter(|t| t.state == TaskState::Done).count(),
+        n
+    );
+    // analytics work on the real-mode trace too
+    assert!(ttx(&res.tracer).unwrap() > 0.0);
+}
+
+#[test]
+fn mixed_success_failure_accounting() {
+    let mut s = Session::new();
+    s.register_function("ok", |_| Ok(1.0));
+    s.register_function("bad", |_| Err("deliberate".into()));
+    let tasks = vec![
+        TaskDescription::func("ok", Json::Null, 0.0),
+        TaskDescription::func("bad", Json::Null, 0.0),
+        TaskDescription::emulated("/bin/true", 1, 1, 0.0),
+        TaskDescription::emulated("/nonexistent/binary", 1, 1, 0.0),
+    ];
+    let res = s.run_local(tasks, 2).unwrap();
+    let states: Vec<TaskState> = res.tasks.iter().map(|t| t.state).collect();
+    assert_eq!(
+        states,
+        vec![TaskState::Done, TaskState::Failed, TaskState::Done, TaskState::Failed]
+    );
+    assert!(res.tasks[3].stderr.contains("spawn failed"));
+}
+
+// ---------------------------------------------------------------- routing --
+
+#[test]
+fn taskmanager_multi_pilot_roundtrip() {
+    let mut pmgr = PilotManager::new();
+    let mut batch = BatchSystem::new("pbs", 18_688, 10.0, 3);
+    let a = pmgr.submit(PilotDescription::new("ornl.titan", 8, 600.0)).unwrap();
+    let b = pmgr.submit(PilotDescription::new("ornl.titan", 8, 600.0)).unwrap();
+    for idx in [a, b] {
+        let t = pmgr.launch(idx, &mut batch, 0).unwrap();
+        pmgr.activate(idx, &mut batch, t);
+        assert_eq!(pmgr.pilot(idx).state, PilotState::Active);
+    }
+    let uids = vec![pmgr.pilot(a).uid.clone(), pmgr.pilot(b).uid.clone()];
+
+    let mut tmgr = TaskManager::new();
+    let mut rng = Rng::new(1);
+    tmgr.submit(bpti_emulated(10, &mut rng)).unwrap();
+    let db = Db::new();
+    tmgr.schedule_to_pilots(&db, &uids).unwrap();
+    assert_eq!(db.pending(&uids[0]) + db.pending(&uids[1]), 10);
+
+    // agent-side terminal updates flow back through the DB
+    for uid in &uids {
+        for rec in db.pull_tasks(uid, 100) {
+            db.update_state(&rec.uid, TaskState::Done);
+        }
+    }
+    tmgr.sync_states(&db);
+    assert_eq!(tmgr.n_terminal(), 10);
+}
+
+// -------------------------------------------------------------- DES mode --
+
+#[test]
+fn des_exp1_point_is_deterministic_and_in_band() {
+    let run = || {
+        let mut rng = Rng::new(77);
+        let tasks = bpti_emulated(64, &mut rng);
+        let mut cfg = SimConfig::new(PlatformKind::Titan, 128);
+        cfg.sched_rate = 6.0;
+        cfg.launch_method = Some("orte".into());
+        cfg.seed = 77;
+        AgentSim::new(cfg).run(&tasks)
+    };
+    let x = run();
+    let y = run();
+    assert_eq!(x.ttx, y.ttx, "DES must be deterministic under a seed");
+    assert!(x.ttx > 828.0 && x.ttx < 1100.0, "ttx={}", x.ttx);
+    assert_eq!(x.n_done, 64);
+}
+
+#[test]
+fn des_trace_is_analytics_consistent() {
+    let mut rng = Rng::new(5);
+    let tasks = bpti_emulated(32, &mut rng);
+    let mut cfg = SimConfig::new(PlatformKind::Titan, 64);
+    cfg.sched_rate = 6.0;
+    cfg.launch_method = Some("orte".into());
+    let out = AgentSim::new(cfg).run(&tasks);
+
+    let b = ru_breakdown(
+        &out.tracer,
+        &out.task_cores,
+        out.pilot_cores,
+        out.t_start,
+        out.t_end,
+        out.t_bootstrap_done,
+    );
+    assert!((b.total() - 1.0).abs() < 1e-9);
+    assert!(b.exec > 0.5, "mostly executing: {b:?}");
+
+    let tl = RuTimeline::build(
+        &out.tracer,
+        &out.task_cores,
+        out.pilot_cores,
+        out.t_start,
+        out.t_end,
+        out.t_bootstrap_done,
+        100,
+    );
+    // the two independent RU computations agree
+    assert!(
+        (tl.utilization() - b.exec).abs() < 0.02,
+        "timeline {} vs breakdown {}",
+        tl.utilization(),
+        b.exec
+    );
+}
+
+#[test]
+fn des_dvm_failure_fault_tolerance() {
+    // with DVM failures forced on a 16-DVM pilot, some nodes are lost but
+    // every task still reaches a terminal state (paper §IV-D)
+    let mut rng = Rng::new(13);
+    let tasks = heterogeneous_summit(2000, 500.0, 600.0, &mut rng);
+    let mut cfg = SimConfig::new(PlatformKind::Summit, 4097);
+    cfg.sched_rate = 300.0;
+    cfg.launch_method = Some("prrte".into());
+    cfg.agent_nodes = 1;
+    cfg.dvm_failures = true;
+    cfg.seed = 13;
+    let out = AgentSim::new(cfg).run(&tasks);
+    assert_eq!(out.n_done + out.n_failed, 2000);
+    assert!(out.n_done > 1800, "most tasks survive DVM loss");
+}
+
+#[test]
+fn des_jsrun_concurrency_cap_stretches_ttx() {
+    // ablation: jsrun's ~800-task cap forces generations where prrte does
+    // not — the reason the paper used PRRTE (§IV-D / ref [47])
+    let make = |lm: &str| {
+        let tasks: Vec<TaskDescription> = (0..1600)
+            .map(|_| TaskDescription::emulated("x", 1, 1, 300.0))
+            .collect();
+        let mut cfg = SimConfig::new(PlatformKind::Summit, 39); // 1638 cores
+        cfg.sched_rate = 300.0;
+        cfg.launch_method = Some(lm.into());
+        cfg.seed = 21;
+        AgentSim::new(cfg).run(&tasks)
+    };
+    let jsrun = make("jsrun");
+    let prrte = make("prrte");
+    assert_eq!(jsrun.n_done, 1600);
+    assert!(
+        jsrun.ttx > prrte.ttx + 250.0,
+        "jsrun cap must force a second generation: jsrun={} prrte={}",
+        jsrun.ttx,
+        prrte.ttx
+    );
+}
+
+#[test]
+fn des_infeasible_tasks_fail_cleanly() {
+    let mut tasks = bpti_emulated(4, &mut Rng::new(1));
+    // one task that can never fit: non-MPI but bigger than a node
+    let mut bad = TaskDescription::emulated("huge", 1, 100, 100.0);
+    bad.parallelism = rp::task::Parallelism::Threads;
+    tasks.push(bad);
+    let mut cfg = SimConfig::new(PlatformKind::Titan, 16);
+    cfg.launch_method = Some("mpirun".into());
+    let out = AgentSim::new(cfg).run(&tasks);
+    assert_eq!(out.n_done, 4);
+    assert_eq!(out.n_failed, 1);
+}
+
+// ------------------------------------------------------------ remote DB --
+
+#[test]
+fn remote_db_deployment_scenario() {
+    // §III-A deployment: TaskManager local, DB served over TCP, Agent
+    // "remote" — here both sides talk to the same DbServer over sockets.
+    use rp::db::{DbClient, DbServer};
+    let db = std::sync::Arc::new(Db::new());
+    let server = DbServer::start(db.clone()).unwrap();
+
+    // tmgr side: route tasks through the wire
+    let mut tmgr_client = DbClient::connect(server.addr).unwrap();
+    let recs: Vec<rp::db::TaskRecord> = (0..20)
+        .map(|i| rp::db::TaskRecord {
+            uid: format!("task.{i:06}"),
+            index: i,
+            pilot: "pilot.0000".into(),
+            state: TaskState::TmgrScheduling,
+        })
+        .collect();
+    assert_eq!(tmgr_client.insert_tasks("pilot.0000", &recs).unwrap(), 20);
+
+    // agent side: pull in bulk over the wire, execute, report back
+    let mut agent_client = DbClient::connect(server.addr).unwrap();
+    let mut got = Vec::new();
+    while got.len() < 20 {
+        let batch = agent_client.pull_tasks("pilot.0000", 8).unwrap();
+        assert!(!batch.is_empty());
+        got.extend(batch);
+    }
+    for (uid, _) in &got {
+        agent_client.update_state(uid, TaskState::Done).unwrap();
+    }
+
+    // tmgr drains terminal updates
+    let ups = tmgr_client.drain_updates().unwrap();
+    assert_eq!(ups.len(), 20);
+    assert!(ups.iter().all(|(_, s)| *s == TaskState::Done));
+    server.stop();
+}
+
+#[test]
+fn metascheduler_drives_harness_workload_shapes() {
+    // partitioned scheduling handles the exp-3 mix end-to-end
+    use rp::agent::partition::{MetaPolicy, MetaScheduler};
+    use rp::agent::scheduler::ResourceRequest;
+    let mut rng = Rng::new(31);
+    let tasks = heterogeneous_summit(1000, 500.0, 600.0, &mut rng);
+    let mut m = MetaScheduler::new(1024, 4, 42, 6, MetaPolicy::LeastLoaded);
+    let mut held = Vec::new();
+    let mut placed = 0;
+    for t in &tasks {
+        let req = ResourceRequest::from_description(t);
+        if let Some(a) = m.try_allocate(&req) {
+            held.push(a);
+            placed += 1;
+        }
+    }
+    assert!(placed > 900, "placed {placed}/1000");
+    for a in &held {
+        m.release(a);
+    }
+    assert_eq!(m.free_cores(), m.total_cores());
+}

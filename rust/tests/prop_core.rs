@@ -1,0 +1,208 @@
+//! Property tests on the substrates: DES ordering, JSON round-trips,
+//! mesh exactly-once delivery, DB queue semantics, analytics partitioning.
+
+use rp::analytics::{ru_breakdown, RuTimeline};
+use rp::db::{Db, TaskRecord};
+use rp::mesh::WorkQueue;
+use rp::sim::Engine;
+use rp::task::TaskState;
+use rp::tracer::{Ev, Tracer};
+use rp::util::json::Json;
+use rp::util::prop::prop;
+
+#[test]
+fn des_pops_monotone_nondecreasing() {
+    prop(0xD001, 200, |g| {
+        let mut e: Engine<u64> = Engine::new();
+        let n = g.usize_in(1, 500);
+        for i in 0..n {
+            e.schedule_at(g.u64_in(0, 1_000_000), i as u64);
+        }
+        let mut last = 0;
+        let mut count = 0;
+        while let Some((t, _)) = e.next() {
+            if t < last {
+                return Err(format!("time regressed {t} < {last}"));
+            }
+            last = t;
+            count += 1;
+        }
+        if count != n {
+            return Err(format!("lost events: {count}/{n}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn json_roundtrip_arbitrary_values() {
+    prop(0xD002, 300, |g| {
+        // build a random JSON value
+        fn build(g: &mut rp::util::prop::Gen, depth: usize) -> Json {
+            match if depth == 0 { g.usize_in(0, 3) } else { g.usize_in(0, 5) } {
+                0 => Json::Null,
+                1 => Json::Bool(g.bool(0.5)),
+                2 => Json::Num((g.f64_in(-1e6, 1e6) * 100.0).round() / 100.0),
+                3 => Json::Str(g.ident(16)),
+                4 => Json::Arr((0..g.usize_in(0, 5)).map(|_| build(g, depth - 1)).collect()),
+                _ => Json::Obj(
+                    (0..g.usize_in(0, 5))
+                        .map(|_| (g.ident(8), build(g, depth - 1)))
+                        .collect(),
+                ),
+            }
+        }
+        let v = build(g, 3);
+        let text = v.to_string();
+        let back = Json::parse(&text).map_err(|e| e.to_string())?;
+        if back != v {
+            return Err(format!("roundtrip mismatch: {v} → {text} → {back}"));
+        }
+        // pretty-printed form parses to the same value too
+        let back2 = Json::parse(&v.to_string_pretty()).map_err(|e| e.to_string())?;
+        if back2 != v {
+            return Err("pretty roundtrip mismatch".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn workqueue_exactly_once_under_concurrency() {
+    prop(0xD003, 20, |g| {
+        let q: WorkQueue<u64> = WorkQueue::new(0);
+        let n = g.u64_in(100, 2000);
+        let consumers: Vec<_> = (0..g.usize_in(1, 6))
+            .map(|_| {
+                let q = q.clone();
+                std::thread::spawn(move || {
+                    let mut got = Vec::new();
+                    while let Some(v) = q.pop() {
+                        got.push(v);
+                    }
+                    got
+                })
+            })
+            .collect();
+        for i in 0..n {
+            q.push(i).map_err(|_| "push failed")?;
+        }
+        q.close();
+        let mut all: Vec<u64> = consumers
+            .into_iter()
+            .flat_map(|h| h.join().unwrap())
+            .collect();
+        all.sort();
+        if all != (0..n).collect::<Vec<_>>() {
+            return Err(format!("not exactly-once: {} of {} delivered", all.len(), n));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn db_pull_preserves_count_and_order() {
+    prop(0xD004, 100, |g| {
+        let db = Db::new();
+        let n = g.usize_in(1, 300);
+        let recs: Vec<TaskRecord> = (0..n)
+            .map(|i| TaskRecord {
+                uid: format!("t{i}"),
+                index: i as u32,
+                pilot: "p".into(),
+                state: TaskState::TmgrScheduling,
+            })
+            .collect();
+        db.insert_tasks("p", recs);
+        let mut got = Vec::new();
+        while got.len() < n {
+            let batch = db.pull_tasks("p", g.usize_in(1, 64));
+            if batch.is_empty() {
+                return Err("queue drained early".into());
+            }
+            got.extend(batch);
+        }
+        for (i, r) in got.iter().enumerate() {
+            if r.index != i as u32 {
+                return Err(format!("order broken at {i}: {}", r.index));
+            }
+        }
+        if !db.pull_tasks("p", 1).is_empty() {
+            return Err("extra records appeared".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn ru_breakdown_partitions_to_one() {
+    prop(0xD005, 100, |g| {
+        let n = g.usize_in(1, 40);
+        let mut tr = Tracer::new(true);
+        let t_end = 1000.0;
+        let mut cores = Vec::new();
+        for i in 0..n as u32 {
+            let c = g.u64_in(1, 8);
+            cores.push(c);
+            let q = g.f64_in(10.0, 200.0);
+            let es = q + g.f64_in(0.0, 20.0);
+            let rs = es + g.f64_in(0.0, 40.0);
+            let re = rs + g.f64_in(1.0, 500.0);
+            let sr = re + g.f64_in(0.0, 50.0);
+            // all events inside the pilot span
+            if sr >= t_end {
+                continue;
+            }
+            tr.rec(q, i, Ev::TaskSchedOk);
+            tr.rec(es, i, Ev::TaskExecStart);
+            tr.rec(rs, i, Ev::TaskRunStart);
+            tr.rec(re, i, Ev::TaskRunStop);
+            tr.rec(sr, i, Ev::TaskSpawnReturn);
+        }
+        // a pilot big enough that the events never overcommit it
+        let pilot_cores = cores.iter().sum::<u64>().max(1) * 2;
+        let b = ru_breakdown(&tr, &cores, pilot_cores, 0.0, t_end, 5.0);
+        if (b.total() - 1.0).abs() > 1e-6 {
+            return Err(format!("breakdown sums to {}", b.total()));
+        }
+        for (name, v) in [("exec", b.exec), ("launcher", b.launcher), ("rp", b.rp), ("idle", b.idle)] {
+            if !(0.0..=1.0).contains(&v) {
+                return Err(format!("{name} fraction out of range: {v}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn ru_timeline_bins_conserve_cores() {
+    prop(0xD006, 60, |g| {
+        let n = g.usize_in(1, 20);
+        let mut tr = Tracer::new(true);
+        let mut cores = Vec::new();
+        for i in 0..n as u32 {
+            cores.push(g.u64_in(1, 4));
+            let q = g.f64_in(5.0, 50.0);
+            let es = q + 1.0;
+            let rs = es + 2.0;
+            let re = rs + g.f64_in(1.0, 100.0);
+            tr.rec(q, i, Ev::TaskSchedOk);
+            tr.rec(es, i, Ev::TaskExecStart);
+            tr.rec(rs, i, Ev::TaskRunStart);
+            tr.rec(re, i, Ev::TaskRunStop);
+        }
+        let pilot_cores = cores.iter().sum::<u64>().max(1) * 2;
+        let tl = RuTimeline::build(&tr, &cores, pilot_cores, 0.0, 200.0, 3.0, 50);
+        for (k, b) in tl.bins.iter().enumerate() {
+            let sum: f64 = b.iter().sum();
+            if (sum - pilot_cores as f64).abs() > 1e-6 {
+                return Err(format!("bin {k} sums to {sum}, pilot has {pilot_cores}"));
+            }
+        }
+        let u = tl.utilization();
+        if !(0.0..=1.0 + 1e-9).contains(&u) {
+            return Err(format!("utilization {u} out of range"));
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,216 @@
+//! Property tests on the Agent schedulers: the invariants RP's correctness
+//! rests on — never over-allocate, conserve resources across alloc/free,
+//! honor placement constraints — checked over randomized workloads and
+//! interleavings (see DESIGN.md §7).
+
+use rp::agent::scheduler::{
+    Allocation, Continuous, ResourceRequest, Scheduler, Tagged, Torus,
+};
+use rp::util::prop::{prop, Gen};
+
+fn random_req(g: &mut Gen, max_cpr: u32, max_ranks: u32, max_gpr: u32) -> ResourceRequest {
+    let mpi = g.bool(0.4);
+    ResourceRequest {
+        ranks: if mpi { g.u64_in(1, max_ranks as u64) as u32 } else { 1 },
+        cores_per_rank: g.u64_in(1, max_cpr as u64) as u32,
+        gpus_per_rank: if g.bool(0.3) {
+            g.u64_in(0, max_gpr as u64) as u32
+        } else {
+            0
+        },
+        uses_mpi: mpi,
+        node_tag: if g.bool(0.2) {
+            Some(g.u64_in(0, 63) as u32)
+        } else {
+            None
+        },
+    }
+}
+
+/// Drive a scheduler through a random interleaving of allocations and
+/// releases; verify conservation and per-allocation exactness.
+fn exercise<S: Scheduler>(mut sched: S, g: &mut Gen, max_cpr: u32, max_ranks: u32, max_gpr: u32) -> Result<(), String> {
+    let total_c = sched.total_cores();
+    let total_g = sched.total_gpus();
+    let mut held: Vec<(ResourceRequest, Allocation)> = Vec::new();
+    let steps = g.usize_in(20, 200);
+
+    for _ in 0..steps {
+        if g.bool(0.6) || held.is_empty() {
+            let req = random_req(g, max_cpr, max_ranks, max_gpr);
+            let free_before = (sched.free_cores(), sched.free_gpus());
+            match sched.try_allocate(&req) {
+                Some(alloc) => {
+                    // granted exactly what was asked (whole-node schedulers
+                    // may round up cores to node granularity)
+                    if alloc.cores() < req.cores() {
+                        return Err(format!(
+                            "under-allocation: got {} cores for {:?}",
+                            alloc.cores(),
+                            req
+                        ));
+                    }
+                    if alloc.gpus() != req.gpus() && sched.total_gpus() > 0 {
+                        return Err(format!("gpu mismatch for {req:?}"));
+                    }
+                    // free counters decreased by exactly the grant
+                    if sched.free_cores() != free_before.0 - alloc.cores()
+                        || sched.free_gpus() != free_before.1 - alloc.gpus()
+                    {
+                        return Err("free-counter drift on allocate".into());
+                    }
+                    // pinned tasks land on the pinned node
+                    if let Some(tag) = req.node_tag {
+                        if sched.name() == "tagged" {
+                            let expect = tag % 64;
+                            if alloc.slots[0].node_idx != expect {
+                                return Err(format!(
+                                    "tag {tag} landed on node {}",
+                                    alloc.slots[0].node_idx
+                                ));
+                            }
+                        }
+                    }
+                    held.push((req, alloc));
+                }
+                None => {
+                    // a refusal must not change state
+                    if (sched.free_cores(), sched.free_gpus()) != free_before {
+                        return Err("refusal mutated state".into());
+                    }
+                }
+            }
+        } else {
+            let i = g.usize_in(0, held.len() - 1);
+            let (_, alloc) = held.swap_remove(i);
+            let free_before = (sched.free_cores(), sched.free_gpus());
+            sched.release(&alloc);
+            if sched.free_cores() != free_before.0 + alloc.cores()
+                || sched.free_gpus() != free_before.1 + alloc.gpus()
+            {
+                return Err("free-counter drift on release".into());
+            }
+        }
+        // global invariant: free never exceeds total
+        if sched.free_cores() > total_c || sched.free_gpus() > total_g {
+            return Err("free exceeds capacity".into());
+        }
+    }
+
+    // release everything → full conservation
+    for (_, alloc) in held.drain(..) {
+        sched.release(&alloc);
+    }
+    if sched.free_cores() != total_c || sched.free_gpus() != total_g {
+        return Err(format!(
+            "leak: {}/{} cores, {}/{} gpus after full release",
+            sched.free_cores(),
+            total_c,
+            sched.free_gpus(),
+            total_g
+        ));
+    }
+    Ok(())
+}
+
+#[test]
+fn continuous_conserves_resources() {
+    prop(0xC011, 150, |g| {
+        let sched = Continuous::new(64, 16, 2);
+        exercise(sched, g, 16, 32, 2)
+    });
+}
+
+#[test]
+fn continuous_summit_geometry() {
+    prop(0xC012, 60, |g| {
+        let sched = Continuous::new(128, 42, 6);
+        exercise(sched, g, 42, 16, 6)
+    });
+}
+
+#[test]
+fn tagged_conserves_and_pins() {
+    prop(0xC013, 150, |g| {
+        let sched = Tagged::new(64, 16, 2);
+        exercise(sched, g, 16, 8, 2)
+    });
+}
+
+#[test]
+fn torus_conserves_whole_nodes() {
+    prop(0xC014, 150, |g| {
+        let sched = Torus::new(&[8, 8], 16);
+        // torus: no GPUs, whole-node granularity
+        let mut held: Vec<Allocation> = Vec::new();
+        let mut sched = sched;
+        for _ in 0..g.usize_in(20, 120) {
+            if g.bool(0.6) || held.is_empty() {
+                let req = ResourceRequest {
+                    ranks: g.u64_in(1, 64) as u32,
+                    cores_per_rank: 1,
+                    gpus_per_rank: 0,
+                    uses_mpi: true,
+                    node_tag: None,
+                };
+                if let Some(a) = sched.try_allocate(&req) {
+                    // contiguity in torus order (with wraparound)
+                    let nodes = a.nodes();
+                    for w in nodes.windows(2) {
+                        let next = (w[0] + 1) % 64;
+                        if w[1] != next {
+                            return Err(format!("non-contiguous torus alloc {nodes:?}"));
+                        }
+                    }
+                    held.push(a);
+                }
+            } else {
+                let i = g.usize_in(0, held.len() - 1);
+                sched.release(&held.swap_remove(i));
+            }
+        }
+        for a in held.drain(..) {
+            sched.release(&a);
+        }
+        if sched.free_cores() != 64 * 16 {
+            return Err("torus leak".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn feasible_implies_eventually_allocatable() {
+    // on an EMPTY pilot, feasible(req) == try_allocate(req).is_some()
+    prop(0xC015, 200, |g| {
+        let mut sched = Continuous::new(16, 8, 1);
+        let req = random_req(g, 12, 24, 2);
+        let feasible = sched.feasible(&req);
+        let got = sched.try_allocate(&req).is_some();
+        if feasible != got {
+            return Err(format!("feasible={feasible} but allocate={got} for {req:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn allocation_slots_never_exceed_node_capacity() {
+    prop(0xC016, 100, |g| {
+        let mut sched = Continuous::new(32, 16, 4);
+        for _ in 0..g.usize_in(5, 60) {
+            let req = random_req(g, 16, 16, 4);
+            if let Some(a) = sched.try_allocate(&req) {
+                for s in &a.slots {
+                    if s.cores > 16 || s.gpus > 4 {
+                        return Err(format!("slot over node capacity: {s:?}"));
+                    }
+                    if s.node_idx >= 32 {
+                        return Err(format!("slot on nonexistent node: {s:?}"));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}

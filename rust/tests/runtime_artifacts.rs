@@ -1,0 +1,197 @@
+//! Integration: the AOT artifacts (Pallas → jax → HLO text) execute on the
+//! Rust PJRT runtime and match the pure-jnp oracle values exported by
+//! aot.py (artifacts/expected.json). Requires `make artifacts`.
+
+use rp::runtime::{load_expected, Runtime};
+use rp::util::json::Json;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    for base in [".", ".."] {
+        let d = std::path::Path::new(base).join("artifacts");
+        if d.join("expected.json").exists() {
+            return Some(d);
+        }
+    }
+    None
+}
+
+fn getv(d: &Json, k: &str) -> Vec<f32> {
+    d.get(k)
+        .as_arr()
+        .unwrap_or_else(|| panic!("expected.json missing {k}"))
+        .iter()
+        .map(|v| v.as_f64().unwrap() as f32)
+        .collect()
+}
+
+/// aot.py's deterministic input generator, reimplemented bit-for-bit.
+fn det(n: usize, scale: f32, seed: u64) -> Vec<f32> {
+    (0..n)
+        .map(|k| ((((k as u64 * 31 + seed * 17) % 97) as f32 / 97.0) - 0.5) * scale)
+        .collect()
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artifacts_dir() {
+            Some(d) => d,
+            None => {
+                eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+                return;
+            }
+        }
+    };
+}
+
+#[test]
+fn dock_batch_matches_oracle() {
+    let dir = require_artifacts!();
+    let rt = Runtime::cpu(&dir).unwrap();
+    let exe = rt.load("dock_batch").unwrap();
+    let exp = load_expected(&dir).unwrap();
+    let d = exp.get("dock_batch");
+    let (b, l, r) = (
+        d.u64_or("B", 0) as i64,
+        d.u64_or("L", 0) as i64,
+        d.u64_or("R", 0) as i64,
+    );
+    let out = exe
+        .call1_f32(&[
+            (&getv(d, "lig_xyz"), &[b, l, 3]),
+            (&getv(d, "lig_q"), &[b, l]),
+            (&getv(d, "rec_xyz"), &[r, 3]),
+            (&getv(d, "rec_q"), &[r]),
+        ])
+        .unwrap();
+    let want = getv(d, "scores");
+    assert_eq!(out.len(), want.len());
+    for (g, w) in out.iter().zip(&want) {
+        assert!(
+            (g - w).abs() <= 1e-2_f32.max(w.abs() * 5e-4),
+            "dock score mismatch: {g} vs {w}"
+        );
+    }
+}
+
+#[test]
+fn synapse_task_matches_oracle_summary() {
+    let dir = require_artifacts!();
+    let rt = Runtime::cpu(&dir).unwrap();
+    let exe = rt.load("synapse_task").unwrap();
+    let exp = load_expected(&dir).unwrap();
+    let d = exp.get("synapse_task");
+    let n = d.u64_or("N", 0) as usize;
+    let input = det(n * n, 0.1, 5);
+    let out = exe.call1_f32(&[(&input, &[n as i64, n as i64])]).unwrap();
+    assert_eq!(out.len(), n * n);
+
+    let want_sum = d.f64_or("out_sum", f64::NAN);
+    let got_sum: f64 = out.iter().map(|&x| x as f64).sum();
+    assert!(
+        (got_sum - want_sum).abs() <= 1e-3_f64.max(want_sum.abs() * 1e-4),
+        "synapse sum {got_sum} vs {want_sum}"
+    );
+    let first8 = getv(d, "out_first8");
+    for (g, w) in out.iter().zip(&first8) {
+        assert!((g - w).abs() <= 1e-4_f32.max(w.abs() * 1e-4), "{g} vs {w}");
+    }
+}
+
+#[test]
+fn md_step_matches_oracle_summary() {
+    let dir = require_artifacts!();
+    let rt = Runtime::cpu(&dir).unwrap();
+    let exe = rt.load("md_step").unwrap();
+    let exp = load_expected(&dir).unwrap();
+    let d = exp.get("md_step");
+    let n = d.u64_or("N", 0) as i64;
+    let outs = exe
+        .call_f32(&[(&getv(d, "xyz"), &[n, 3]), (&getv(d, "vel"), &[n, 3])])
+        .unwrap();
+    assert_eq!(outs.len(), 2, "md_step returns (xyz1, vel1)");
+    let (x1, v1) = (&outs[0], &outs[1]);
+
+    for (g, w) in x1.iter().zip(&getv(d, "xyz_out_first8")) {
+        assert!((g - w).abs() <= 1e-3_f32.max(w.abs() * 1e-3), "xyz {g} vs {w}");
+    }
+    for (g, w) in v1.iter().zip(&getv(d, "vel_out_first8")) {
+        assert!((g - w).abs() <= 1e-2_f32.max(w.abs() * 1e-2), "vel {g} vs {w}");
+    }
+    let want_sum = d.f64_or("xyz_out_sum", f64::NAN);
+    let got_sum: f64 = x1.iter().map(|&x| x as f64).sum();
+    assert!(
+        (got_sum - want_sum).abs() <= 0.05_f64.max(want_sum.abs() * 1e-3),
+        "xyz sum {got_sum} vs {want_sum}"
+    );
+}
+
+#[test]
+fn executables_are_cached_and_reusable() {
+    let dir = require_artifacts!();
+    let rt = Runtime::cpu(&dir).unwrap();
+    let a = rt.load("dock_batch").unwrap();
+    let b = rt.load("dock_batch").unwrap();
+    assert!(std::sync::Arc::ptr_eq(&a, &b), "compile-once cache");
+    // many repeat calls give identical results (no state leakage)
+    let exp = load_expected(&dir).unwrap();
+    let d = exp.get("dock_batch");
+    let (bb, l, r) = (
+        d.u64_or("B", 0) as i64,
+        d.u64_or("L", 0) as i64,
+        d.u64_or("R", 0) as i64,
+    );
+    let inputs = [
+        (getv(d, "lig_xyz"), vec![bb, l, 3]),
+        (getv(d, "lig_q"), vec![bb, l]),
+        (getv(d, "rec_xyz"), vec![r, 3]),
+        (getv(d, "rec_q"), vec![r]),
+    ];
+    let args: Vec<(&[f32], &[i64])> = inputs
+        .iter()
+        .map(|(v, s)| (v.as_slice(), s.as_slice()))
+        .collect();
+    let first = a.call1_f32(&args).unwrap();
+    for _ in 0..5 {
+        assert_eq!(a.call1_f32(&args).unwrap(), first);
+    }
+}
+
+#[test]
+fn concurrent_calls_from_many_threads() {
+    let dir = require_artifacts!();
+    let rt = Runtime::cpu(&dir).unwrap();
+    let exe = rt.load("dock_batch").unwrap();
+    let exp = load_expected(&dir).unwrap();
+    let d = exp.get("dock_batch");
+    let (b, l, r) = (
+        d.u64_or("B", 0) as i64,
+        d.u64_or("L", 0) as i64,
+        d.u64_or("R", 0) as i64,
+    );
+    let lx = std::sync::Arc::new(getv(d, "lig_xyz"));
+    let lq = std::sync::Arc::new(getv(d, "lig_q"));
+    let rx = std::sync::Arc::new(getv(d, "rec_xyz"));
+    let rq = std::sync::Arc::new(getv(d, "rec_q"));
+    let want = getv(d, "scores");
+    let handles: Vec<_> = (0..4)
+        .map(|_| {
+            let (exe, lx, lq, rx, rq) =
+                (exe.clone(), lx.clone(), lq.clone(), rx.clone(), rq.clone());
+            std::thread::spawn(move || {
+                exe.call1_f32(&[
+                    (lx.as_slice(), &[b, l, 3]),
+                    (lq.as_slice(), &[b, l]),
+                    (rx.as_slice(), &[r, 3]),
+                    (rq.as_slice(), &[r]),
+                ])
+                .unwrap()
+            })
+        })
+        .collect();
+    for h in handles {
+        let got = h.join().unwrap();
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() <= 1e-2_f32.max(w.abs() * 5e-4));
+        }
+    }
+}
