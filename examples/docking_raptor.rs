@@ -36,7 +36,7 @@ fn det(n: usize, scale: f32, seed: u64) -> Vec<f32> {
         .collect()
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> rp::util::error::Result<()> {
     let args = Args::from_env();
     let n_ligands = args.usize_or("ligands", 4096);
     let n_batches = n_ligands / B;

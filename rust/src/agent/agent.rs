@@ -1,32 +1,39 @@
-//! The real-execution-mode Agent: the same component pipeline RP runs as
-//! processes (Stager-In → Scheduler → Executors → Stager-Out), here as
-//! threads connected by the mesh, executing *actual* work on the local
-//! platform — executable tasks as spawned processes, function tasks as
-//! registered Rust closures (typically PJRT artifact calls, see
-//! `runtime::`).
+//! The real-execution-mode Agent: RP's component pipeline (§III-A, Fig. 2)
 //!
-//! The DES harness (`experiments::harness`) drives the same scheduler and
-//! executor logic under virtual time; this module is the wall-clock
-//! deployment of it.
+//!   DB bridge → Stager-In → Scheduler → Executor workers → Stager-Out
+//!
+//! built from [`mesh::Component`](crate::mesh::Component) stages connected
+//! by typed `WorkQueue`s, executing *actual* work on the local platform —
+//! executable tasks as spawned processes, function tasks as registered
+//! Rust closures (typically PJRT artifact calls, see `runtime::`).
+//!
+//! The scheduling decisions themselves are made by the shared
+//! [`SchedCore`](super::pipeline::SchedCore); the DES harness
+//! (`experiments::harness`) drives the *same* core under virtual time.
+//! This module is the wall-clock deployment: stages run as scoped threads
+//! reading a [`WallClock`](crate::mesh::WallClock), and shutdown cascades
+//! queue-to-queue (Stager-Out closes the scheduler's input once every
+//! task is terminal, which drains the scheduler, closes the work queue,
+//! and lets the workers exit).
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::{Duration, Instant};
 
-use crate::db::Db;
-use crate::mesh::WorkQueue;
+use crate::db::{Db, TaskRecord};
+use crate::mesh::{spawn_scoped, Clock, Component, Flow, SpawnOpts, WallClock, WorkQueue};
 use crate::task::{Task, TaskDescription, TaskKind, TaskState};
 use crate::tracer::{Ev, Tracer};
+use crate::util::error::Result;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 
-use super::executor::{Executor, ExecutorConfig};
-use super::scheduler::{Allocation, Continuous, ResourceRequest, Scheduler};
+use super::executor::{Executor, ExecutorConfig, LaunchTicket};
+use super::pipeline::{SchedCore, SchedDecision};
+use super::scheduler::{Allocation, Continuous};
 use super::stager::{Stager, StagerModel};
 
 /// A registered function implementation (RAPTOR-style function tasks).
-pub type TaskFn = Arc<dyn Fn(&Json) -> Result<f64, String> + Send + Sync>;
+pub type TaskFn = Arc<dyn Fn(&Json) -> Result<f64> + Send + Sync>;
 
 /// Function registry: names → implementations. The real-mode equivalent
 /// of RAPTOR workers importing the user's Python module.
@@ -44,7 +51,7 @@ impl FunctionRegistry {
 
     pub fn register<F>(&mut self, name: &str, f: F)
     where
-        F: Fn(&Json) -> Result<f64, String> + Send + Sync + 'static,
+        F: Fn(&Json) -> Result<f64> + Send + Sync + 'static,
     {
         self.map.insert(name.to_string(), Arc::new(f));
     }
@@ -88,21 +95,45 @@ impl AgentConfig {
     }
 }
 
+/// Messages into the scheduler stage: tasks becoming schedulable, and
+/// resources returning from finished tasks (the release feedback loop).
+enum SchedMsg {
+    Ready(u32),
+    Freed(u32),
+}
+
+/// A scheduled task handed to an executor worker.
 struct WorkItem {
     index: u32,
     td: TaskDescription,
-    alloc: Allocation,
 }
 
+/// A task's terminal record flowing into Stager-Out. `ran == false`
+/// marks synthetic completions for tasks that never launched (stage-in
+/// failure, infeasible request, launch refusal).
 struct Completion {
     index: u32,
-    alloc: Allocation,
     exit_code: i32,
     result: Option<f64>,
     error: String,
     /// run span, seconds since agent start (worker-measured)
     t_run_start: f64,
     t_run_stop: f64,
+    ran: bool,
+}
+
+impl Completion {
+    fn unran(index: u32, error: String) -> Completion {
+        Completion {
+            index,
+            exit_code: 1,
+            result: None,
+            error,
+            t_run_start: 0.0,
+            t_run_stop: 0.0,
+            ran: false,
+        }
+    }
 }
 
 /// Outcome of one agent run.
@@ -112,6 +143,260 @@ pub struct AgentResult {
     /// wall-clock workload span (first pull → last completion)
     pub ttx: f64,
 }
+
+// ---------------------------------------------------------------------------
+// pipeline stages
+
+/// Stager-In: DB records → schedulable tasks (real input staging).
+struct StagerIn<'a> {
+    tasks: &'a Mutex<Vec<Task>>,
+    tracer: &'a Mutex<Tracer>,
+    clock: Arc<WallClock>,
+    stager: Stager,
+    /// side channel for tasks that die before ever being scheduled
+    q_done: WorkQueue<Completion>,
+}
+
+impl StagerIn<'_> {
+    fn rec(&self, ev: Ev, idx: u32) {
+        self.tracer.lock().unwrap().rec(self.clock.now(), idx, ev);
+    }
+}
+
+impl Component for StagerIn<'_> {
+    type In = TaskRecord;
+    type Out = SchedMsg;
+
+    fn name(&self) -> &str {
+        "stager_in"
+    }
+
+    fn process(&mut self, batch: Vec<TaskRecord>, out: &WorkQueue<SchedMsg>) -> Result<Flow> {
+        for record in batch {
+            let idx = record.index;
+            self.rec(Ev::TaskDbPull, idx);
+            let input_staging = {
+                let mut tasks = self.tasks.lock().unwrap();
+                let task = &mut tasks[idx as usize];
+                let _ = task.advance(TaskState::TmgrScheduling);
+                task.description.input_staging.clone()
+            };
+            if !input_staging.is_empty() {
+                self.rec(Ev::TaskStageInStart, idx);
+                {
+                    let mut tasks = self.tasks.lock().unwrap();
+                    let _ = tasks[idx as usize].advance(TaskState::AgentStagingInput);
+                }
+                if let Err(e) = self.stager.stage_real(&input_staging) {
+                    self.q_done
+                        .push(Completion::unran(idx, format!("stage-in failed: {e}")))
+                        .ok();
+                    continue;
+                }
+                self.rec(Ev::TaskStageInStop, idx);
+            }
+            {
+                let mut tasks = self.tasks.lock().unwrap();
+                let _ = tasks[idx as usize].advance(TaskState::AgentSchedulingPending);
+            }
+            self.rec(Ev::TaskSchedQueue, idx);
+            out.push(SchedMsg::Ready(idx))
+                .map_err(|_| "scheduler queue closed while staging in")?;
+        }
+        Ok(Flow::Continue)
+    }
+}
+
+/// Scheduler stage: drives the shared `SchedCore` on every wake —
+/// enqueues newly-ready tasks, returns freed resources, then places
+/// whatever fits and emits `WorkItem`s to the executor workers.
+struct SchedStage<'a> {
+    core: SchedCore,
+    descriptions: &'a [TaskDescription],
+    tasks: &'a Mutex<Vec<Task>>,
+    tracer: &'a Mutex<Tracer>,
+    q_done: WorkQueue<Completion>,
+    tickets: HashMap<u32, (Allocation, LaunchTicket)>,
+    rng: Rng,
+}
+
+impl Component for SchedStage<'_> {
+    type In = SchedMsg;
+    type Out = WorkItem;
+
+    fn name(&self) -> &str {
+        "scheduler"
+    }
+
+    fn process(&mut self, batch: Vec<SchedMsg>, out: &WorkQueue<WorkItem>) -> Result<Flow> {
+        for msg in batch {
+            match msg {
+                SchedMsg::Ready(idx) => self.core.enqueue(idx),
+                SchedMsg::Freed(idx) => {
+                    if let Some((alloc, ticket)) = self.tickets.remove(&idx) {
+                        self.core.release(&alloc, &ticket);
+                    }
+                }
+            }
+        }
+        let pilot_cores = self.core.total_cores();
+        let descriptions = self.descriptions;
+        let tasks = self.tasks;
+        let tickets = &mut self.tickets;
+        let q_done = &self.q_done;
+        let mut tracer = self.tracer.lock().unwrap();
+        self.core.schedule(
+            descriptions,
+            pilot_cores,
+            usize::MAX,
+            &mut self.rng,
+            &mut tracer,
+            |decision, _rng, _tracer| match decision {
+                SchedDecision::Launched {
+                    index,
+                    alloc,
+                    ticket,
+                    ..
+                } => {
+                    {
+                        let mut ts = tasks.lock().unwrap();
+                        let task = &mut ts[index as usize];
+                        let _ = task.advance(TaskState::AgentScheduling);
+                        let _ = task.advance(TaskState::AgentExecutingPending);
+                    }
+                    tickets.insert(index, (alloc, ticket));
+                    out.push(WorkItem {
+                        index,
+                        td: descriptions[index as usize].clone(),
+                    })
+                    .ok();
+                }
+                SchedDecision::Infeasible { index } => {
+                    q_done
+                        .push(Completion::unran(
+                            index,
+                            "infeasible resource request for this pilot".into(),
+                        ))
+                        .ok();
+                }
+                SchedDecision::LaunchFailed { index, error } => {
+                    q_done
+                        .push(Completion::unran(index, format!("launch failed: {error}")))
+                        .ok();
+                }
+            },
+        );
+        Ok(Flow::Continue)
+    }
+}
+
+/// Stager-Out: finalizes every terminal task (real output staging, DB
+/// state updates, trace), feeds freed resources back to the scheduler,
+/// and — once all expected tasks are terminal — ends the pipeline by
+/// returning `Flow::Done` (its output close cascades upstream shutdown).
+struct StagerOut<'a> {
+    tasks: &'a Mutex<Vec<Task>>,
+    tracer: &'a Mutex<Tracer>,
+    clock: Arc<WallClock>,
+    db: &'a Db,
+    stager: Stager,
+    expected: usize,
+    done: usize,
+}
+
+impl StagerOut<'_> {
+    fn rec(&self, ev: Ev, idx: u32) {
+        self.tracer.lock().unwrap().rec(self.clock.now(), idx, ev);
+    }
+}
+
+impl Component for StagerOut<'_> {
+    type In = Completion;
+    type Out = SchedMsg;
+
+    fn name(&self) -> &str {
+        "stager_out"
+    }
+
+    fn process(&mut self, batch: Vec<Completion>, out: &WorkQueue<SchedMsg>) -> Result<Flow> {
+        for c in batch {
+            if c.ran {
+                // resources return to the scheduler before finalization,
+                // exactly as the monolithic loop released first
+                out.push(SchedMsg::Freed(c.index)).ok();
+                {
+                    let mut tracer = self.tracer.lock().unwrap();
+                    tracer.rec(c.t_run_start, c.index, Ev::TaskRunStart);
+                    tracer.rec(c.t_run_stop, c.index, Ev::TaskRunStop);
+                    tracer.rec(self.clock.now(), c.index, Ev::TaskSpawnReturn);
+                }
+                let (uid, output_staging) = {
+                    let mut tasks = self.tasks.lock().unwrap();
+                    let task = &mut tasks[c.index as usize];
+                    let _ = task.advance(TaskState::AgentExecuting);
+                    task.exit_code = Some(c.exit_code);
+                    task.result = c.result;
+                    (task.uid.clone(), task.description.output_staging.clone())
+                };
+                if c.exit_code == 0 && c.error.is_empty() {
+                    let mut staged = Ok(());
+                    if !output_staging.is_empty() {
+                        self.rec(Ev::TaskStageOutStart, c.index);
+                        {
+                            let mut tasks = self.tasks.lock().unwrap();
+                            let _ = tasks[c.index as usize].advance(TaskState::AgentStagingOutput);
+                        }
+                        staged = self.stager.stage_real(&output_staging);
+                        if staged.is_ok() {
+                            self.rec(Ev::TaskStageOutStop, c.index);
+                        }
+                    }
+                    match staged {
+                        Ok(()) => {
+                            {
+                                let mut tasks = self.tasks.lock().unwrap();
+                                let _ = tasks[c.index as usize].advance(TaskState::Done);
+                            }
+                            self.rec(Ev::TaskDone, c.index);
+                            self.db.update_state(&uid, TaskState::Done);
+                        }
+                        Err(e) => {
+                            {
+                                let mut tasks = self.tasks.lock().unwrap();
+                                tasks[c.index as usize].fail(&format!("stage-out failed: {e}"));
+                            }
+                            self.db.update_state(&uid, TaskState::Failed);
+                        }
+                    }
+                } else {
+                    {
+                        let mut tasks = self.tasks.lock().unwrap();
+                        tasks[c.index as usize].fail(&c.error);
+                    }
+                    self.rec(Ev::TaskFailed, c.index);
+                    self.db.update_state(&uid, TaskState::Failed);
+                }
+            } else {
+                // never launched: fail without run/return events
+                let uid = {
+                    let mut tasks = self.tasks.lock().unwrap();
+                    let task = &mut tasks[c.index as usize];
+                    task.fail(&c.error);
+                    task.uid.clone()
+                };
+                self.db.update_state(&uid, TaskState::Failed);
+            }
+            self.done += 1;
+        }
+        if self.done == self.expected {
+            Ok(Flow::Done)
+        } else {
+            Ok(Flow::Continue)
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
 
 pub struct Agent;
 
@@ -126,189 +411,138 @@ impl Agent {
         registry: &FunctionRegistry,
     ) -> AgentResult {
         let expected = descriptions.len();
-        let t0 = Instant::now();
-        let now = |t0: Instant| t0.elapsed().as_secs_f64();
+        if expected == 0 {
+            return AgentResult {
+                tasks: Vec::new(),
+                tracer: Tracer::new(cfg.trace),
+                ttx: 0.0,
+            };
+        }
+        let clock = Arc::new(WallClock::new());
+        let tracer = Mutex::new(Tracer::new(cfg.trace));
+        let tasks: Mutex<Vec<Task>> = Mutex::new(
+            descriptions
+                .iter()
+                .enumerate()
+                .map(|(i, td)| Task::new(format!("task.{i:06}"), i as u32, td.clone()))
+                .collect(),
+        );
 
-        let mut tracer = Tracer::new(cfg.trace);
-        let mut scheduler = Continuous::new(cfg.n_nodes, cfg.cores_per_node, cfg.gpus_per_node);
-        let mut executor = Executor::new(&ExecutorConfig::simple(&cfg.launch_method, cfg.n_nodes))
+        let scheduler = Continuous::new(cfg.n_nodes, cfg.cores_per_node, cfg.gpus_per_node);
+        let executor = Executor::new(&ExecutorConfig::simple(&cfg.launch_method, cfg.n_nodes))
             .expect("executor config");
-        let mut stager = Stager::new(StagerModel::default());
-        let mut rng = Rng::new(0xA6E47);
+        // unbounded backfill, fail (don't requeue) on launch errors — the
+        // real-mode policy; the DES harness picks the opposite knobs
+        let core = SchedCore::new(scheduler, executor, clock.clone(), usize::MAX, false);
 
-        let work: WorkQueue<WorkItem> = WorkQueue::new(0);
-        let completions: WorkQueue<Completion> = WorkQueue::new(0);
-        let running = Arc::new(AtomicU64::new(0));
+        let q_records: WorkQueue<TaskRecord> = WorkQueue::new(0);
+        let q_sched: WorkQueue<SchedMsg> = WorkQueue::new(0);
+        let q_work: WorkQueue<WorkItem> = WorkQueue::new(0);
+        let q_done: WorkQueue<Completion> = WorkQueue::new(0);
 
-        // executor worker pool
-        let mut workers = Vec::new();
-        for _ in 0..cfg.n_executor_threads.max(1) {
-            let work = work.clone();
-            let completions = completions.clone();
-            let registry = registry.clone();
-            let running = running.clone();
-            workers.push(std::thread::spawn(move || {
-                while let Some(item) = work.pop() {
-                    running.fetch_add(1, Ordering::SeqCst);
-                    let t_start = t0.elapsed().as_secs_f64();
-                    let mut completion = execute_one(item, &registry);
-                    completion.t_run_start = t_start;
-                    completion.t_run_stop = t0.elapsed().as_secs_f64();
-                    running.fetch_sub(1, Ordering::SeqCst);
-                    if completions.push(completion).is_err() {
-                        break;
+        std::thread::scope(|s| {
+            // DB bridge: the TaskManager→DB→Agent hop onto the mesh
+            s.spawn(|| {
+                let mut pulled = 0usize;
+                while pulled < expected {
+                    let batch = db.pull_tasks_blocking(&cfg.pilot_uid, cfg.bulk_size);
+                    if batch.is_empty() {
+                        break; // DB closed under us
                     }
-                }
-            }));
-        }
-
-        let mut tasks: Vec<Task> = descriptions
-            .iter()
-            .enumerate()
-            .map(|(i, td)| Task::new(format!("task.{i:06}"), i as u32, td.clone()))
-            .collect();
-
-        let mut pending: Vec<u32> = Vec::new();
-        let mut pulled = 0usize;
-        let mut done = 0usize;
-        let mut tickets: HashMap<u32, crate::agent::executor::LaunchTicket> = HashMap::new();
-
-        while done < expected {
-            // 1. pull new tasks from the DB in bulk
-            if pulled < expected {
-                let batch = db.pull_tasks(&cfg.pilot_uid, cfg.bulk_size);
-                for rec in batch {
-                    let t = now(t0);
-                    tracer.rec(t, rec.index, Ev::TaskDbPull);
-                    let task = &mut tasks[rec.index as usize];
-                    let _ = task.advance(TaskState::TmgrScheduling);
-                    // input staging (real copies if directives present)
-                    if !task.description.input_staging.is_empty() {
-                        tracer.rec(now(t0), rec.index, Ev::TaskStageInStart);
-                        let _ = task.advance(TaskState::AgentStagingInput);
-                        if let Err(e) = stager.stage_real(&task.description.input_staging) {
-                            task.fail(&format!("stage-in failed: {e}"));
-                            db.update_state(&task.uid, TaskState::Failed);
-                            done += 1;
-                            pulled += 1;
-                            continue;
+                    for record in batch {
+                        pulled += 1;
+                        if q_records.push(record).is_err() {
+                            return;
                         }
-                        tracer.rec(now(t0), rec.index, Ev::TaskStageInStop);
                     }
-                    let _ = task.advance(TaskState::AgentSchedulingPending);
-                    tracer.rec(now(t0), rec.index, Ev::TaskSchedQueue);
-                    pending.push(rec.index);
-                    pulled += 1;
                 }
+                q_records.close();
+            });
+
+            let h_in = spawn_scoped(
+                s,
+                StagerIn {
+                    tasks: &tasks,
+                    tracer: &tracer,
+                    clock: clock.clone(),
+                    stager: Stager::new(StagerModel::default()),
+                    q_done: q_done.clone(),
+                },
+                q_records.clone(),
+                q_sched.clone(),
+                SpawnOpts {
+                    bulk: cfg.bulk_size.max(1),
+                    // q_sched is shared with Stager-Out's Freed feedback;
+                    // Stager-Out owns the close
+                    close_output: false,
+                },
+            );
+
+            let h_sched = spawn_scoped(
+                s,
+                SchedStage {
+                    core,
+                    descriptions,
+                    tasks: &tasks,
+                    tracer: &tracer,
+                    q_done: q_done.clone(),
+                    tickets: HashMap::new(),
+                    rng: Rng::new(0xA6E47),
+                },
+                q_sched.clone(),
+                q_work.clone(),
+                SpawnOpts {
+                    bulk: 1024,
+                    close_output: true,
+                },
+            );
+
+            // executor worker pool (the Executor component's rank pool)
+            for _ in 0..cfg.n_executor_threads.max(1) {
+                let q_work = q_work.clone();
+                let q_done = q_done.clone();
+                let clock = clock.clone();
+                s.spawn(move || {
+                    while let Some(item) = q_work.pop() {
+                        let t_start = clock.now();
+                        let mut completion = execute_one(item, registry);
+                        completion.t_run_start = t_start;
+                        completion.t_run_stop = clock.now();
+                        if q_done.push(completion).is_err() {
+                            break;
+                        }
+                    }
+                });
             }
 
-            // 2. schedule as many pending tasks as fit (first-fit scan)
-            let mut i = 0;
-            while i < pending.len() {
-                let idx = pending[i];
-                let td = tasks[idx as usize].description.clone();
-                let req = ResourceRequest::from_description(&td);
-                if !scheduler.feasible(&req) {
-                    let task = &mut tasks[idx as usize];
-                    task.fail("infeasible resource request for this pilot");
-                    db.update_state(&task.uid, TaskState::Failed);
-                    done += 1;
-                    pending.swap_remove(i);
-                    continue;
-                }
-                if !executor.can_accept() {
-                    break;
-                }
-                match scheduler.try_allocate(&req) {
-                    Some(alloc) => {
-                        let task = &mut tasks[idx as usize];
-                        let _ = task.advance(TaskState::AgentScheduling);
-                        tracer.rec(now(t0), idx, Ev::TaskSchedOk);
-                        let pilot_cores = scheduler.total_cores();
-                        match executor.launch(idx, &td, &alloc, pilot_cores, &mut rng) {
-                            Ok(ticket) => {
-                                let _ = task.advance(TaskState::AgentExecutingPending);
-                                tracer.rec(now(t0), idx, Ev::TaskExecStart);
-                                tickets.insert(idx, ticket);
-                                work.push(WorkItem {
-                                    index: idx,
-                                    td: td.clone(),
-                                    alloc,
-                                })
-                                .ok();
-                            }
-                            Err(e) => {
-                                scheduler.release(&alloc);
-                                task.fail(&format!("launch failed: {e}"));
-                                db.update_state(&task.uid, TaskState::Failed);
-                                done += 1;
-                            }
-                        }
-                        pending.swap_remove(i);
-                    }
-                    None => {
-                        // keep FIFO head blocking small backfills minimal:
-                        // try the next pending task (continuous backfill)
-                        i += 1;
-                    }
-                }
-            }
+            let h_out = spawn_scoped(
+                s,
+                StagerOut {
+                    tasks: &tasks,
+                    tracer: &tracer,
+                    clock: clock.clone(),
+                    db,
+                    stager: Stager::new(StagerModel::default()),
+                    expected,
+                    done: 0,
+                },
+                q_done.clone(),
+                q_sched.clone(),
+                SpawnOpts {
+                    bulk: 256,
+                    close_output: true,
+                },
+            );
 
-            // 3. absorb completions (block briefly to avoid spinning)
-            let deadline = Duration::from_millis(50);
-            if let Some(c) = completions.pop_timeout(deadline) {
-                let mut batch = vec![c];
-                batch.extend(std::iter::from_fn(|| completions.try_pop()));
-                for c in batch {
-                    let t = now(t0);
-                    scheduler.release(&c.alloc);
-                    if let Some(ticket) = tickets.remove(&c.index) {
-                        executor.complete(&ticket);
-                    }
-                    let task = &mut tasks[c.index as usize];
-                    let _ = task.advance(TaskState::AgentExecuting);
-                    tracer.rec(c.t_run_start, c.index, Ev::TaskRunStart);
-                    tracer.rec(c.t_run_stop, c.index, Ev::TaskRunStop);
-                    tracer.rec(t, c.index, Ev::TaskSpawnReturn);
-                    task.exit_code = Some(c.exit_code);
-                    task.result = c.result;
-                    if c.exit_code == 0 && c.error.is_empty() {
-                        // output staging
-                        if !task.description.output_staging.is_empty() {
-                            tracer.rec(now(t0), c.index, Ev::TaskStageOutStart);
-                            let _ = task.advance(TaskState::AgentStagingOutput);
-                            if let Err(e) = stager.stage_real(&task.description.output_staging) {
-                                task.fail(&format!("stage-out failed: {e}"));
-                                db.update_state(&task.uid, TaskState::Failed);
-                                done += 1;
-                                continue;
-                            }
-                            tracer.rec(now(t0), c.index, Ev::TaskStageOutStop);
-                        }
-                        let _ = task.advance(TaskState::Done);
-                        tracer.rec(now(t0), c.index, Ev::TaskDone);
-                        db.update_state(&task.uid, TaskState::Done);
-                    } else {
-                        task.fail(&c.error);
-                        tracer.rec(now(t0), c.index, Ev::TaskFailed);
-                        db.update_state(&task.uid, TaskState::Failed);
-                    }
-                    done += 1;
-                }
-            }
-        }
+            let _ = h_in.join();
+            let _ = h_sched.join();
+            let _ = h_out.join();
+        });
 
-        work.close();
-        for w in workers {
-            let _ = w.join();
-        }
-        completions.close();
-
-        let ttx = now(t0);
         AgentResult {
-            tasks,
-            tracer,
-            ttx,
+            tasks: tasks.into_inner().unwrap(),
+            tracer: tracer.into_inner().unwrap(),
+            ttx: clock.now(),
         }
     }
 }
@@ -316,37 +550,26 @@ impl Agent {
 /// Execute one task for real: function tasks via the registry; executable
 /// tasks as spawned processes. Records run start/stop via the Completion.
 fn execute_one(item: WorkItem, registry: &FunctionRegistry) -> Completion {
+    let base = |exit_code: i32, result: Option<f64>, error: String| Completion {
+        index: item.index,
+        exit_code,
+        result,
+        error,
+        t_run_start: 0.0,
+        t_run_stop: 0.0,
+        ran: true,
+    };
     match item.td.kind {
         TaskKind::Function => match registry.get(&item.td.function) {
             Some(f) => match f(&item.td.payload) {
-                Ok(v) => Completion {
-                    index: item.index,
-                    alloc: item.alloc,
-                    exit_code: 0,
-                    result: Some(v),
-                    error: String::new(),
-                    t_run_start: 0.0,
-                    t_run_stop: 0.0,
-                },
-                Err(e) => Completion {
-                    index: item.index,
-                    alloc: item.alloc,
-                    exit_code: 1,
-                    result: None,
-                    error: e,
-                    t_run_start: 0.0,
-                    t_run_stop: 0.0,
-                },
+                Ok(v) => base(0, Some(v), String::new()),
+                Err(e) => base(1, None, e.to_string()),
             },
-            None => Completion {
-                index: item.index,
-                alloc: item.alloc,
-                exit_code: 127,
-                result: None,
-                error: format!("function '{}' not registered", item.td.function),
-                t_run_start: 0.0,
-                t_run_stop: 0.0,
-            },
+            None => base(
+                127,
+                None,
+                format!("function '{}' not registered", item.td.function),
+            ),
         },
         TaskKind::Executable => {
             let out = std::process::Command::new(&item.td.executable)
@@ -355,36 +578,19 @@ fn execute_one(item: WorkItem, registry: &FunctionRegistry) -> Completion {
                 .stderr(std::process::Stdio::piped())
                 .output();
             match out {
-                Ok(out) => Completion {
-                    index: item.index,
-                    alloc: item.alloc,
-                    exit_code: out.status.code().unwrap_or(-1),
-                    result: None,
-                    error: if out.status.success() {
+                Ok(out) => base(
+                    out.status.code().unwrap_or(-1),
+                    None,
+                    if out.status.success() {
                         String::new()
                     } else {
                         String::from_utf8_lossy(&out.stderr).into_owned()
                     },
-                    t_run_start: 0.0,
-                    t_run_stop: 0.0,
-                },
-                Err(e) => Completion {
-                    index: item.index,
-                    alloc: item.alloc,
-                    exit_code: 126,
-                    result: None,
-                    error: format!("spawn failed: {e}"),
-                    t_run_start: 0.0,
-                    t_run_stop: 0.0,
-                },
+                ),
+                Err(e) => base(126, None, format!("spawn failed: {e}")),
             }
         }
     }
-}
-
-/// Shared-state wrapper so tests and examples can observe concurrency.
-pub struct AgentHandle {
-    pub result: Mutex<Option<AgentResult>>,
 }
 
 #[cfg(test)]
@@ -475,6 +681,12 @@ mod tests {
             FunctionRegistry::new(),
         );
         assert_eq!(res.tasks[0].state, TaskState::Failed);
+    }
+
+    #[test]
+    fn empty_workload_returns_immediately() {
+        let res = run_agent(Vec::new(), FunctionRegistry::new());
+        assert!(res.tasks.is_empty());
     }
 
     #[test]

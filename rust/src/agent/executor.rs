@@ -6,6 +6,7 @@
 use crate::launch::method::{method_for, LaunchMethod, LaunchSample, Placement};
 use crate::launch::prrte::{DvmMap, DvmPolicy, MAX_NODES_PER_DVM};
 use crate::task::TaskDescription;
+use crate::util::error::{Result, RpError};
 use crate::util::rng::Rng;
 
 use super::scheduler::Allocation;
@@ -48,7 +49,7 @@ pub struct Executor {
 }
 
 impl Executor {
-    pub fn new(cfg: &ExecutorConfig) -> Result<Executor, String> {
+    pub fn new(cfg: &ExecutorConfig) -> Result<Executor> {
         let method = method_for(&cfg.launch_method, cfg.node_ids.len() as u32)?;
         let dvms = if cfg.launch_method == "prrte" {
             Some(DvmMap::partition(
@@ -119,13 +120,13 @@ impl Executor {
         alloc: &Allocation,
         pilot_cores: u64,
         rng: &mut Rng,
-    ) -> Result<LaunchTicket, String> {
+    ) -> Result<LaunchTicket> {
         if !self.can_accept() {
-            return Err(format!(
+            return Err(RpError::Launch(format!(
                 "{} at its concurrency cap ({} in flight)",
                 self.method.name(),
                 self.in_flight
-            ));
+            )));
         }
         let placement = self.place(td, alloc);
         self.method.check(&placement)?;

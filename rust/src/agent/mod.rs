@@ -5,10 +5,12 @@
 pub mod agent;
 pub mod executor;
 pub mod partition;
+pub mod pipeline;
 pub mod scheduler;
 pub mod stager;
 
 pub use agent::{Agent, AgentConfig};
+pub use pipeline::{SchedCore, SchedDecision};
 pub use executor::{Executor, ExecutorConfig};
 pub use partition::{MetaAllocation, MetaPolicy, MetaScheduler, Partition};
 pub use scheduler::{Allocation, ResourceRequest, Scheduler, Slot};

@@ -1,0 +1,306 @@
+//! The unified scheduling pipeline core (DESIGN.md §3).
+//!
+//! `SchedCore` is the one implementation of RP's Agent scheduling loop:
+//! first-fit scan with a bounded backfill window over a FIFO task queue,
+//! allocation via a [`Scheduler`], launch via the [`Executor`], per-hop
+//! trace events. Both execution modes drive it:
+//!
+//!  * the real-mode [`Agent`](super::agent::Agent) calls it from the
+//!    scheduler Component under a [`WallClock`](crate::mesh::WallClock);
+//!  * the DES harness ([`AgentSim`](crate::experiments::AgentSim)) calls
+//!    it from its event loop under a
+//!    [`VirtualClock`](crate::mesh::VirtualClock), advancing the clock to
+//!    each event's timestamp.
+//!
+//! Mode-specific consequences of each decision (spawning a process vs
+//! scheduling a virtual-time event, fail-vs-requeue on launch error) stay
+//! with the caller, delivered through the [`SchedDecision`] callback. The
+//! callback receives the `Rng` and `Tracer` back so both modes keep a
+//! single deterministic RNG/trace stream — the DES determinism tests pin
+//! the exact decision sequence this loop produces.
+
+use std::collections::VecDeque;
+use std::sync::Arc;
+
+use crate::mesh::Clock;
+use crate::task::TaskDescription;
+use crate::tracer::{Ev, Tracer};
+use crate::util::error::RpError;
+use crate::util::rng::Rng;
+
+use super::executor::{Executor, LaunchTicket};
+use super::scheduler::{Allocation, Continuous, ResourceRequest, Scheduler};
+
+/// One scheduling outcome, handed to the mode-specific callback.
+pub enum SchedDecision {
+    /// Allocated and launched: the caller owns the allocation/ticket from
+    /// here (store them, then hand them back via [`SchedCore::release`]).
+    /// `in_flight` is the executor's concurrency right after this launch
+    /// (input to the PRRTE pressure model).
+    Launched {
+        index: u32,
+        alloc: Allocation,
+        ticket: LaunchTicket,
+        in_flight: u64,
+    },
+    /// The request can never be satisfied on this pilot (wrong geometry,
+    /// or capacity lost to DVM death). The task is terminal.
+    Infeasible { index: u32 },
+    /// The launch method refused the task. Only emitted when the core was
+    /// built with `requeue_on_launch_error = false`; otherwise the task
+    /// silently re-enters the queue.
+    LaunchFailed { index: u32, error: RpError },
+}
+
+/// The shared scheduler/executor orchestration state.
+pub struct SchedCore {
+    scheduler: Continuous,
+    executor: Executor,
+    clock: Arc<dyn Clock>,
+    queue: VecDeque<u32>,
+    /// first-fit backfill lookahead: when the queue head does not fit,
+    /// try at most this many further tasks before waiting for a release.
+    /// Bounds the per-wake scheduling cost to O(window) instead of
+    /// O(queue) — the §Perf fix that took exp-4 regeneration from 452 s
+    /// to seconds (EXPERIMENTS.md §Perf).
+    backfill_window: usize,
+    requeue_on_launch_error: bool,
+    /// timestamps of every TaskSchedOk (feeds the Fig-9 sched-span metric)
+    sched_ok_times: Vec<f64>,
+    /// first time an allocation failed with tasks still queued (NaN until
+    /// then) — the end of the initial scheduling ramp
+    t_first_saturation: f64,
+}
+
+impl SchedCore {
+    pub fn new(
+        scheduler: Continuous,
+        executor: Executor,
+        clock: Arc<dyn Clock>,
+        backfill_window: usize,
+        requeue_on_launch_error: bool,
+    ) -> SchedCore {
+        SchedCore {
+            scheduler,
+            executor,
+            clock,
+            queue: VecDeque::new(),
+            backfill_window,
+            requeue_on_launch_error,
+            sched_ok_times: Vec::new(),
+            t_first_saturation: f64::NAN,
+        }
+    }
+
+    /// Add a task (by workload index) to the scheduling queue.
+    pub fn enqueue(&mut self, index: u32) {
+        self.queue.push_back(index);
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn queue_is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Return a finished task's resources to the pilot.
+    pub fn release(&mut self, alloc: &Allocation, ticket: &LaunchTicket) {
+        self.scheduler.release(alloc);
+        self.executor.complete(ticket);
+    }
+
+    pub fn scheduler_mut(&mut self) -> &mut Continuous {
+        &mut self.scheduler
+    }
+
+    pub fn executor_mut(&mut self) -> &mut Executor {
+        &mut self.executor
+    }
+
+    pub fn total_cores(&self) -> u64 {
+        self.scheduler.total_cores()
+    }
+
+    pub fn sched_ok_times(&self) -> &[f64] {
+        &self.sched_ok_times
+    }
+
+    pub fn t_first_saturation(&self) -> f64 {
+        self.t_first_saturation
+    }
+
+    /// One scheduling pass: place up to `budget` tasks (the era-rate knob;
+    /// `usize::MAX` = drain what fits). Records `TaskSchedOk` /
+    /// `TaskExecStart` per placement; everything mode-specific flows
+    /// through `on`. Returns the number placed.
+    pub fn schedule<F>(
+        &mut self,
+        descriptions: &[TaskDescription],
+        pilot_cores: u64,
+        budget: usize,
+        rng: &mut Rng,
+        tracer: &mut Tracer,
+        mut on: F,
+    ) -> usize
+    where
+        F: FnMut(SchedDecision, &mut Rng, &mut Tracer),
+    {
+        let now_s = self.clock.now();
+        let mut placed = 0usize;
+        let mut scanned = 0usize;
+        let mut misses = 0usize;
+        let qlen = self.queue.len();
+        while placed < budget && scanned < qlen && misses <= self.backfill_window {
+            let Some(idx) = self.queue.pop_front() else { break };
+            scanned += 1;
+            let td = &descriptions[idx as usize];
+            let req = ResourceRequest::from_description(td);
+            if !self.scheduler.feasible(&req) {
+                // cannot ever run (e.g. nodes lost to DVM death)
+                on(SchedDecision::Infeasible { index: idx }, rng, tracer);
+                continue;
+            }
+            if !self.executor.can_accept() {
+                self.queue.push_front(idx);
+                break;
+            }
+            match self.scheduler.try_allocate(&req) {
+                Some(alloc) => {
+                    tracer.rec(now_s, idx, Ev::TaskSchedOk);
+                    self.sched_ok_times.push(now_s);
+                    match self.executor.launch(idx, td, &alloc, pilot_cores, rng) {
+                        Ok(ticket) => {
+                            tracer.rec(now_s, idx, Ev::TaskExecStart);
+                            let in_flight = self.executor.in_flight();
+                            on(
+                                SchedDecision::Launched {
+                                    index: idx,
+                                    alloc,
+                                    ticket,
+                                    in_flight,
+                                },
+                                rng,
+                                tracer,
+                            );
+                            placed += 1;
+                        }
+                        Err(error) => {
+                            self.scheduler.release(&alloc);
+                            if self.requeue_on_launch_error {
+                                self.queue.push_back(idx);
+                            } else {
+                                on(SchedDecision::LaunchFailed { index: idx, error }, rng, tracer);
+                            }
+                        }
+                    }
+                }
+                None => {
+                    if self.t_first_saturation.is_nan() {
+                        self.t_first_saturation = now_s;
+                    }
+                    misses += 1;
+                    self.queue.push_back(idx);
+                }
+            }
+        }
+        placed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::agent::executor::ExecutorConfig;
+    use crate::mesh::VirtualClock;
+
+    fn core(nodes: u32, cores: u32) -> (SchedCore, Arc<VirtualClock>) {
+        let clock = Arc::new(VirtualClock::new());
+        let sched = Continuous::new(nodes, cores, 0);
+        let exec = Executor::new(&ExecutorConfig::simple("fork", nodes)).unwrap();
+        (
+            SchedCore::new(sched, exec, clock.clone(), 128, true),
+            clock,
+        )
+    }
+
+    fn descs(n: usize, cores: u32) -> Vec<TaskDescription> {
+        (0..n)
+            .map(|_| TaskDescription::emulated("x", 1, cores, 1.0))
+            .collect()
+    }
+
+    #[test]
+    fn places_what_fits_and_queues_the_rest() {
+        let (mut c, _) = core(1, 4);
+        let ds = descs(6, 1);
+        for i in 0..6 {
+            c.enqueue(i);
+        }
+        let mut rng = Rng::new(1);
+        let mut tr = Tracer::new(true);
+        let mut launched = Vec::new();
+        let placed = c.schedule(&ds, 4, usize::MAX, &mut rng, &mut tr, |d, _, _| {
+            if let SchedDecision::Launched { index, alloc, ticket, .. } = d {
+                launched.push((index, alloc, ticket));
+            }
+        });
+        assert_eq!(placed, 4);
+        assert_eq!(c.queue_len(), 2);
+        // releases make room for the remainder
+        for (_, alloc, ticket) in &launched {
+            c.release(alloc, ticket);
+        }
+        let placed = c.schedule(&ds, 4, usize::MAX, &mut rng, &mut tr, |_, _, _| {});
+        assert_eq!(placed, 2);
+        assert!(c.queue_is_empty());
+    }
+
+    #[test]
+    fn infeasible_tasks_are_reported_not_requeued() {
+        let (mut c, _) = core(1, 4);
+        let ds = descs(1, 16); // 16 cores on a 4-core pilot, non-MPI
+        c.enqueue(0);
+        let mut rng = Rng::new(1);
+        let mut tr = Tracer::new(true);
+        let mut infeasible = Vec::new();
+        c.schedule(&ds, 4, usize::MAX, &mut rng, &mut tr, |d, _, _| {
+            if let SchedDecision::Infeasible { index } = d {
+                infeasible.push(index);
+            }
+        });
+        assert_eq!(infeasible, vec![0]);
+        assert!(c.queue_is_empty());
+    }
+
+    #[test]
+    fn sched_ok_times_follow_the_virtual_clock() {
+        let (mut c, clock) = core(2, 4);
+        let ds = descs(2, 1);
+        let mut rng = Rng::new(1);
+        let mut tr = Tracer::new(true);
+        clock.set(10.0);
+        c.enqueue(0);
+        c.schedule(&ds, 8, usize::MAX, &mut rng, &mut tr, |_, _, _| {});
+        clock.set(25.0);
+        c.enqueue(1);
+        c.schedule(&ds, 8, usize::MAX, &mut rng, &mut tr, |_, _, _| {});
+        assert_eq!(c.sched_ok_times(), &[10.0, 25.0]);
+        assert_eq!(tr.time_of(1, Ev::TaskSchedOk), Some(25.0));
+    }
+
+    #[test]
+    fn budget_limits_placements_per_pass() {
+        let (mut c, _) = core(4, 4);
+        let ds = descs(8, 1);
+        for i in 0..8 {
+            c.enqueue(i);
+        }
+        let mut rng = Rng::new(1);
+        let mut tr = Tracer::new(true);
+        let placed = c.schedule(&ds, 16, 1, &mut rng, &mut tr, |_, _, _| {});
+        assert_eq!(placed, 1);
+        assert_eq!(c.queue_len(), 7);
+    }
+}

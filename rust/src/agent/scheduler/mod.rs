@@ -73,9 +73,17 @@ impl Allocation {
     pub fn gpus(&self) -> u64 {
         self.slots.iter().map(|s| s.gpus as u64).sum()
     }
-    /// node indices spanned (for launch-command rendering)
+    /// node indices spanned (for launch-command rendering), deduplicated
+    /// in slot order: several slots on one node must not render the host
+    /// twice in `mpirun -host`-style lists
     pub fn nodes(&self) -> Vec<u32> {
-        self.slots.iter().map(|s| s.node_idx).collect()
+        let mut nodes: Vec<u32> = Vec::with_capacity(self.slots.len());
+        for s in &self.slots {
+            if !nodes.contains(&s.node_idx) {
+                nodes.push(s.node_idx);
+            }
+        }
+        nodes
     }
 }
 

@@ -3,16 +3,27 @@
 //! shared-FS contention) under virtual time, producing the traces the
 //! analytics module turns into the paper's figures.
 //!
+//! The scheduling loop itself is the shared
+//! [`SchedCore`](crate::agent::pipeline::SchedCore) — the *same* code the
+//! real-mode Agent runs under wall-clock time. The harness advances a
+//! [`VirtualClock`](crate::mesh::VirtualClock) to each event's timestamp
+//! before calling into the core, so per-hop trace events land at virtual
+//! times; mode-specific consequences (virtual-time delays, the PRRTE
+//! pressure-failure model, shared-FS charges) are applied in the
+//! [`SchedDecision`](crate::agent::pipeline::SchedDecision) callback.
+//!
 //! The scheduler-rate knob reproduces the paper's implementation eras:
 //! ~6 task/s (exp 1–2, 2018 Python scheduler), ~300 task/s (exp 3–4,
 //! improved scheduler), or unlimited (`native`, our Rust scheduler — used
 //! by the ablation benches).
 
-use std::collections::VecDeque;
+use std::sync::Arc;
 
 use crate::agent::executor::{Executor, ExecutorConfig, LaunchTicket};
-use crate::agent::scheduler::{Allocation, Continuous, ResourceRequest, Scheduler};
+use crate::agent::pipeline::{SchedCore, SchedDecision};
+use crate::agent::scheduler::{Allocation, Continuous};
 use crate::launch::prrte::{DvmPolicy, Prrte};
+use crate::mesh::VirtualClock;
 use crate::platform::{Platform, PlatformKind, SharedFs};
 use crate::sim::{secs, Engine};
 use crate::task::TaskDescription;
@@ -130,7 +141,7 @@ impl AgentSim {
         let mut engine: Engine<SimEv> = Engine::new();
 
         let sched_nodes = cfg.n_nodes - cfg.agent_nodes;
-        let mut scheduler = Continuous::new(sched_nodes, p.cores_per_node, p.gpus_per_node);
+        let scheduler = Continuous::new(sched_nodes, p.cores_per_node, p.gpus_per_node);
         let pilot_cores = cfg.n_nodes as u64 * p.cores_per_node as u64;
         let pilot_gpus = cfg.n_nodes as u64 * p.gpus_per_node as u64;
 
@@ -138,13 +149,24 @@ impl AgentSim {
             .launch_method
             .clone()
             .unwrap_or_else(|| p.launch_methods.first().cloned().unwrap_or("fork".into()));
-        let mut executor = Executor::new(&ExecutorConfig {
+        let executor = Executor::new(&ExecutorConfig {
             launch_method: launch_method.clone(),
             node_ids: (0..sched_nodes).collect(),
             nodes_per_dvm: cfg.nodes_per_dvm,
             dvm_policy: DvmPolicy::RoundRobin,
         })
         .expect("executor");
+
+        // the shared pipeline core, under virtual time; launch errors
+        // requeue (the DES models transient launcher refusal as retry)
+        let vclock = Arc::new(VirtualClock::new());
+        let mut core = SchedCore::new(
+            scheduler,
+            executor,
+            vclock.clone(),
+            cfg.backfill_window,
+            /* requeue_on_launch_error */ true,
+        );
 
         // shared-FS capacity degrades with client (node) count — the
         // §IV-D finding: "the distributed filesystem … was not designed
@@ -163,14 +185,11 @@ impl AgentSim {
         // --- state --------------------------------------------------------
         let n = tasks.len();
         let task_cores: Vec<u64> = tasks.iter().map(|t| t.cores()).collect();
-        let mut queue: VecDeque<u32> = VecDeque::new();
         let mut inflight: Vec<Option<InFlight>> = (0..n).map(|_| None).collect();
         let mut terminal = vec![false; n];
         let mut n_done = 0usize;
         let mut n_failed = 0usize;
         let mut tick_scheduled = false;
-        let mut sched_ok_times: Vec<f64> = Vec::with_capacity(n);
-        let mut t_first_saturation = f64::NAN;
         let mut t_bootstrap_done = 0.0;
         let mut t_last_terminal = 0.0;
 
@@ -202,6 +221,7 @@ impl AgentSim {
         // drive the event loop
         while let Some((t, ev)) = engine.next() {
             let now_s = crate::sim::to_secs(t);
+            vclock.set(now_s);
             match ev {
                 SimEv::BootstrapDone => {
                     t_bootstrap_done = now_s;
@@ -209,15 +229,15 @@ impl AgentSim {
                     // DVM deaths materialize here
                     for d in dvm_deaths.clone() {
                         tracer.rec(now_s, d, Ev::DvmFailed);
-                        for node in executor.fail_dvm(d) {
-                            scheduler.drain_node(node);
+                        for node in core.executor_mut().fail_dvm(d) {
+                            core.scheduler_mut().drain_node(node);
                         }
                     }
                     // bulk DB pull: all tasks enter the scheduler queue
                     for i in 0..n {
                         tracer.rec(now_s, i as u32, Ev::TaskDbPull);
                         tracer.rec(now_s, i as u32, Ev::TaskSchedQueue);
-                        queue.push_back(i as u32);
+                        core.enqueue(i as u32);
                     }
                     engine.schedule_in_secs(0.0, SimEv::SchedTick);
                     tick_scheduled = true;
@@ -228,81 +248,53 @@ impl AgentSim {
                     // one scheduling decision per tick at the era rate;
                     // native (rate 0) drains the queue in one event.
                     let budget = if sched_cost == 0.0 { usize::MAX } else { 1 };
-                    let mut placed = 0usize;
-                    let mut scanned = 0usize;
-                    let mut misses = 0usize;
-                    let qlen = queue.len();
-                    while placed < budget
-                        && scanned < qlen
-                        && misses <= cfg.backfill_window
-                    {
-                        let Some(idx) = queue.pop_front() else { break };
-                        scanned += 1;
-                        let td = &tasks[idx as usize];
-                        let req = ResourceRequest::from_description(td);
-                        if !scheduler.feasible(&req) {
-                            // cannot ever run (e.g. nodes lost to DVM death)
-                            tracer.rec(now_s, idx, Ev::TaskFailed);
-                            terminal[idx as usize] = true;
-                            n_failed += 1;
-                            t_last_terminal = now_s;
-                            continue;
-                        }
-                        if !executor.can_accept() {
-                            queue.push_front(idx);
-                            break;
-                        }
-                        match scheduler.try_allocate(&req) {
-                            Some(alloc) => {
-                                tracer.rec(now_s, idx, Ev::TaskSchedOk);
-                                sched_ok_times.push(now_s);
-                                match executor.launch(
-                                    idx,
-                                    td,
-                                    &alloc,
-                                    pilot_cores,
-                                    &mut rng,
-                                ) {
-                                    Ok(mut ticket) => {
-                                        tracer.rec(now_s, idx, Ev::TaskExecStart);
-                                        // PRRTE task-failure pressure model
-                                        if is_prrte && cfg.task_failures {
-                                            let conc = executor.in_flight();
-                                            ticket.sample.failed =
-                                                rng.bool(prrte_model.task_failure_p(conc));
-                                        } else if !cfg.task_failures {
-                                            ticket.sample.failed = false;
-                                        }
-                                        // launcher prep + shared-FS charge
-                                        let mut ready = t + secs(ticket.sample.prep_s);
-                                        if fs_ops > 0.0 && is_prrte {
-                                            ready = ready.max(fs.request(t, fs_ops));
-                                        }
-                                        let failed = ticket.sample.failed;
-                                        inflight[idx as usize] = Some(InFlight {
-                                            alloc,
-                                            ticket,
-                                            failed,
-                                        });
-                                        engine.schedule_at(ready, SimEv::Prepared(idx));
-                                        placed += 1;
-                                    }
-                                    Err(_) => {
-                                        scheduler.release(&alloc);
-                                        queue.push_back(idx);
-                                    }
+                    let placed = core.schedule(
+                        tasks,
+                        pilot_cores,
+                        budget,
+                        &mut rng,
+                        &mut tracer,
+                        |decision, rng, tracer| match decision {
+                            SchedDecision::Launched {
+                                index,
+                                alloc,
+                                mut ticket,
+                                in_flight,
+                            } => {
+                                // PRRTE task-failure pressure model
+                                if is_prrte && cfg.task_failures {
+                                    ticket.sample.failed =
+                                        rng.bool(prrte_model.task_failure_p(in_flight));
+                                } else if !cfg.task_failures {
+                                    ticket.sample.failed = false;
                                 }
-                            }
-                            None => {
-                                if t_first_saturation.is_nan() {
-                                    t_first_saturation = now_s;
+                                // launcher prep + shared-FS charge
+                                let mut ready = t + secs(ticket.sample.prep_s);
+                                if fs_ops > 0.0 && is_prrte {
+                                    ready = ready.max(fs.request(t, fs_ops));
                                 }
-                                misses += 1;
-                                queue.push_back(idx)
+                                let failed = ticket.sample.failed;
+                                inflight[index as usize] = Some(InFlight {
+                                    alloc,
+                                    ticket,
+                                    failed,
+                                });
+                                engine.schedule_at(ready, SimEv::Prepared(index));
                             }
-                        }
-                    }
-                    if !queue.is_empty() && placed > 0 {
+                            SchedDecision::Infeasible { index } => {
+                                // cannot ever run (e.g. nodes lost to DVM
+                                // death)
+                                tracer.rec(now_s, index, Ev::TaskFailed);
+                                terminal[index as usize] = true;
+                                n_failed += 1;
+                                t_last_terminal = now_s;
+                            }
+                            SchedDecision::LaunchFailed { .. } => {
+                                unreachable!("core runs in requeue mode")
+                            }
+                        },
+                    );
+                    if !core.queue_is_empty() && placed > 0 {
                         engine.schedule_in_secs(sched_cost.max(1e-6), SimEv::SchedTick);
                         tick_scheduled = true;
                     }
@@ -338,8 +330,7 @@ impl AgentSim {
                 SimEv::Acked(idx) => {
                     let fl = inflight[idx as usize].take().expect("in flight");
                     tracer.rec(now_s, idx, Ev::TaskSpawnReturn);
-                    scheduler.release(&fl.alloc);
-                    executor.complete(&fl.ticket);
+                    core.release(&fl.alloc, &fl.ticket);
                     if fl.failed {
                         tracer.rec(now_s, idx, Ev::TaskFailed);
                         n_failed += 1;
@@ -349,7 +340,7 @@ impl AgentSim {
                     }
                     terminal[idx as usize] = true;
                     t_last_terminal = now_s;
-                    if !queue.is_empty() && !tick_scheduled {
+                    if !core.queue_is_empty() && !tick_scheduled {
                         engine.schedule_in_secs(sched_cost, SimEv::SchedTick);
                         tick_scheduled = true;
                     }
@@ -361,6 +352,8 @@ impl AgentSim {
         let t_end = t_last_terminal.max(t_bootstrap_done);
         tracer.rec(t_end, 0, Ev::PilotDone);
         let ttx = crate::analytics::ttx(&tracer).unwrap_or(0.0);
+        let sched_ok_times = core.sched_ok_times();
+        let t_first_saturation = core.t_first_saturation();
         let (sched_span, sched_span_full) = if sched_ok_times.is_empty() {
             (0.0, 0.0)
         } else {
@@ -369,7 +362,7 @@ impl AgentSim {
             let ramp_end = if t_first_saturation.is_nan() {
                 // never saturated: the ramp is the p95 placement (packing
                 // stragglers excluded)
-                crate::util::stats::percentile(&sched_ok_times, 95.0)
+                crate::util::stats::percentile(sched_ok_times, 95.0)
             } else {
                 t_first_saturation
             };

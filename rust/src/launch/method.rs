@@ -1,5 +1,6 @@
 //! The `LaunchMethod` trait: placement command rendering + overhead model.
 
+use crate::util::error::{Result, RpError};
 use crate::util::rng::Rng;
 
 /// Where/how one task is placed (derived by the Executor from the task
@@ -66,19 +67,22 @@ pub trait LaunchMethod: Send {
     fn render_cmd(&self, p: &Placement) -> String;
 
     /// Validate that this method can launch the placement.
-    fn check(&self, p: &Placement) -> Result<(), String> {
+    fn check(&self, p: &Placement) -> Result<()> {
         if p.uses_mpi && !self.supports_mpi() {
-            return Err(format!("{} cannot launch MPI tasks", self.name()));
+            return Err(RpError::Launch(format!(
+                "{} cannot launch MPI tasks",
+                self.name()
+            )));
         }
         if p.ranks == 0 || p.cores_per_rank == 0 {
-            return Err("placement with zero ranks/cores".into());
+            return Err(RpError::Launch("placement with zero ranks/cores".into()));
         }
         Ok(())
     }
 }
 
 /// Factory keyed on the resource-config launch-method names.
-pub fn method_for(name: &str, seed_nodes: u32) -> Result<Box<dyn LaunchMethod>, String> {
+pub fn method_for(name: &str, seed_nodes: u32) -> Result<Box<dyn LaunchMethod>> {
     use super::{Aprun, Fork, Jsrun, Mpirun, Orte, Prrte, Srun, Ssh};
     match name {
         "orte" => Ok(Box::new(Orte::new())),
@@ -94,7 +98,7 @@ pub fn method_for(name: &str, seed_nodes: u32) -> Result<Box<dyn LaunchMethod>, 
         }
         "ssh" | "rsh" => Ok(Box::new(Ssh)),
         "fork" => Ok(Box::new(Fork)),
-        other => Err(format!("unknown launch method '{other}'")),
+        other => Err(RpError::Invalid(format!("unknown launch method '{other}'"))),
     }
 }
 

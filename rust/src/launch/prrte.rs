@@ -15,6 +15,7 @@
 //!    PRRTE can fail tasks under concurrency pressure (1148 of 12,276).
 
 use super::method::{LaunchMethod, LaunchSample, Placement};
+use crate::util::error::{Result, RpError};
 use crate::util::rng::Rng;
 
 pub const MAX_NODES_PER_DVM: u32 = 256;
@@ -69,20 +70,20 @@ impl DvmMap {
     /// policy); RoundRobin skips dead DVMs (the paper's fault-tolerance:
     /// "due to RP fault-tolerance, all the tasks were executed on the
     /// remaining DVMs").
-    pub fn route(&mut self, tag: Option<u32>) -> Result<u32, String> {
+    pub fn route(&mut self, tag: Option<u32>) -> Result<u32> {
         if self.n_alive() == 0 {
-            return Err("all DVMs have failed".into());
+            return Err(RpError::Launch("all DVMs have failed".into()));
         }
         match (self.policy, tag) {
             (DvmPolicy::Tagged, Some(t)) => {
                 let dvm = self
                     .dvms
                     .get(t as usize)
-                    .ok_or_else(|| format!("tag {t} out of range"))?;
+                    .ok_or_else(|| RpError::Launch(format!("tag {t} out of range")))?;
                 if dvm.alive {
                     Ok(t)
                 } else {
-                    Err(format!("tagged DVM {t} is dead"))
+                    Err(RpError::Launch(format!("tagged DVM {t} is dead")))
                 }
             }
             _ => {

@@ -1,0 +1,100 @@
+//! Pluggable time source for the unified pipeline (DESIGN.md §3).
+//!
+//! The same Component code runs under wall-clock time (real-mode Agent)
+//! and under virtual time (the DES harness): components read time through
+//! `Clock` and never call `Instant::now()` directly, so a trace recorded
+//! in either mode carries comparable timestamps.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+/// Seconds since an epoch chosen by the implementation.
+pub trait Clock: Send + Sync {
+    fn now(&self) -> f64;
+}
+
+/// Wall-clock time, anchored at construction.
+pub struct WallClock {
+    t0: Instant,
+}
+
+impl WallClock {
+    pub fn new() -> Self {
+        WallClock { t0: Instant::now() }
+    }
+}
+
+impl Default for WallClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clock for WallClock {
+    fn now(&self) -> f64 {
+        self.t0.elapsed().as_secs_f64()
+    }
+}
+
+/// Virtual time, advanced explicitly by a DES engine. Stores the f64
+/// bit pattern in an atomic so readers on any thread see a coherent
+/// value without locking.
+pub struct VirtualClock {
+    bits: AtomicU64,
+}
+
+impl VirtualClock {
+    pub fn new() -> Self {
+        VirtualClock {
+            bits: AtomicU64::new(0f64.to_bits()),
+        }
+    }
+
+    /// Advance (or rewind — the engine owns monotonicity) to `t` seconds.
+    pub fn set(&self, t: f64) {
+        self.bits.store(t.to_bits(), Ordering::Release);
+    }
+}
+
+impl Default for VirtualClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clock for VirtualClock {
+    fn now(&self) -> f64 {
+        f64::from_bits(self.bits.load(Ordering::Acquire))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wall_clock_is_monotone() {
+        let c = WallClock::new();
+        let a = c.now();
+        let b = c.now();
+        assert!(b >= a);
+        assert!(a >= 0.0);
+    }
+
+    #[test]
+    fn virtual_clock_reads_what_was_set() {
+        let c = VirtualClock::new();
+        assert_eq!(c.now(), 0.0);
+        c.set(42.5);
+        assert_eq!(c.now(), 42.5);
+    }
+
+    #[test]
+    fn virtual_clock_is_shareable_across_threads() {
+        let c = std::sync::Arc::new(VirtualClock::new());
+        c.set(7.0);
+        let c2 = c.clone();
+        let h = std::thread::spawn(move || c2.now());
+        assert_eq!(h.join().unwrap(), 7.0);
+    }
+}

@@ -1,0 +1,365 @@
+//! `Component` — RP's unit of pipeline composition (§III-A: "Components
+//! … exchange messages via the communication mesh"; DESIGN.md §3).
+//!
+//! A Component is a named processing stage with a typed input and output
+//! `WorkQueue`. `spawn` gives every stage the same run loop RP's Python
+//! components get from `rpu.Component.work()`:
+//!
+//!  * block on the input queue, then drain up to `bulk` items per wake
+//!    (bulk-pull amortizes lock traffic — the same §Perf reasoning as the
+//!    Agent's bulk DB pulls);
+//!  * hand the batch to `Component::process`, which pushes results into
+//!    the output queue (possibly zero or many per input — stages are not
+//!    forced to be 1:1);
+//!  * on input close (producer side torn down) or `Flow::Done` (stage
+//!    decided the workload is complete), run `Component::finish` and —
+//!    when this stage owns the output — close it, cascading shutdown
+//!    downstream exactly like RP's ZMQ bridge teardown.
+//!
+//! Per-hop `Tracer` events are recorded inside `process` by the concrete
+//! stages (each hop owns its event kinds — DbPull, SchedOk, ExecStart, …),
+//! reading time from a shared [`Clock`](super::clock::Clock) so the same
+//! stage code traces coherently under wall-clock and virtual time.
+
+use super::queue::WorkQueue;
+use crate::util::error::{Result, RpError};
+
+/// What the stage wants after processing a batch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Flow {
+    /// Keep pulling input.
+    Continue,
+    /// Workload complete: finish and shut down (even though the input
+    /// queue may still be open).
+    Done,
+}
+
+/// A named pipeline stage with typed ends.
+pub trait Component: Send {
+    type In: Send + 'static;
+    type Out: Send + 'static;
+
+    fn name(&self) -> &str;
+
+    /// Process one bulk of inputs, pushing any results to `out`.
+    fn process(&mut self, batch: Vec<Self::In>, out: &WorkQueue<Self::Out>) -> Result<Flow>;
+
+    /// Called once after the last `process` (input closed or `Flow::Done`),
+    /// before the output is closed. Flush buffered state here.
+    fn finish(&mut self, _out: &WorkQueue<Self::Out>) -> Result<()> {
+        Ok(())
+    }
+}
+
+/// Per-spawn knobs.
+pub struct SpawnOpts {
+    /// Max items handed to one `process` call (≥ 1).
+    pub bulk: usize,
+    /// Whether this stage closes its output on shutdown. Set false when
+    /// several stages produce into the same queue and only the *last*
+    /// one to shut down may cascade the close.
+    pub close_output: bool,
+}
+
+impl Default for SpawnOpts {
+    fn default() -> Self {
+        SpawnOpts {
+            bulk: 64,
+            close_output: true,
+        }
+    }
+}
+
+/// A running component; `join` returns its terminal result.
+pub struct ComponentHandle {
+    name: String,
+    handle: std::thread::JoinHandle<Result<()>>,
+}
+
+impl ComponentHandle {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn join(self) -> Result<()> {
+        match self.handle.join() {
+            Ok(r) => r,
+            Err(_) => Err(RpError::Msg(format!("component {} panicked", self.name))),
+        }
+    }
+}
+
+/// Run `component` on its own thread, pulling bulks from `input` until it
+/// closes (or the stage returns [`Flow::Done`]), then finishing and —
+/// if `opts.close_output` — closing `output` to cascade shutdown.
+pub fn spawn<C>(
+    mut component: C,
+    input: WorkQueue<C::In>,
+    output: WorkQueue<C::Out>,
+    opts: SpawnOpts,
+) -> ComponentHandle
+where
+    C: Component + 'static,
+{
+    let name = component.name().to_string();
+    let bulk = opts.bulk.max(1);
+    let handle = std::thread::spawn(move || {
+        let run = (|| -> Result<()> {
+            while let Some(first) = input.pop() {
+                let mut batch = vec![first];
+                if bulk > 1 {
+                    batch.extend(input.pop_bulk(bulk - 1));
+                }
+                if component.process(batch, &output)? == Flow::Done {
+                    break;
+                }
+            }
+            component.finish(&output)
+        })();
+        // Shutdown must cascade even on error, or downstream stages hang
+        // on a queue nobody will close.
+        if opts.close_output {
+            output.close();
+        }
+        run
+    });
+    ComponentHandle { name, handle }
+}
+
+/// Scoped variant of [`spawn`]: runs the component on a thread inside
+/// `scope`, so the component may borrow stack data (the Agent's shared
+/// task table, tracer, DB handle) instead of `Arc`-wrapping everything.
+/// Same run loop and shutdown cascade as [`spawn`].
+pub fn spawn_scoped<'scope, C>(
+    scope: &'scope std::thread::Scope<'scope, '_>,
+    mut component: C,
+    input: WorkQueue<C::In>,
+    output: WorkQueue<C::Out>,
+    opts: SpawnOpts,
+) -> ScopedComponentHandle<'scope>
+where
+    C: Component + 'scope,
+{
+    let name = component.name().to_string();
+    let bulk = opts.bulk.max(1);
+    let handle = scope.spawn(move || {
+        let run = (|| -> Result<()> {
+            while let Some(first) = input.pop() {
+                let mut batch = vec![first];
+                if bulk > 1 {
+                    batch.extend(input.pop_bulk(bulk - 1));
+                }
+                if component.process(batch, &output)? == Flow::Done {
+                    break;
+                }
+            }
+            component.finish(&output)
+        })();
+        if opts.close_output {
+            output.close();
+        }
+        run
+    });
+    ScopedComponentHandle { name, handle }
+}
+
+/// Handle for a component spawned with [`spawn_scoped`].
+pub struct ScopedComponentHandle<'scope> {
+    name: String,
+    handle: std::thread::ScopedJoinHandle<'scope, Result<()>>,
+}
+
+impl ScopedComponentHandle<'_> {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn join(self) -> Result<()> {
+        match self.handle.join() {
+            Ok(r) => r,
+            Err(_) => Err(RpError::Msg(format!("component {} panicked", self.name))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// x → x * k, counting how many bulks it saw.
+    struct Scale {
+        k: u64,
+        bulks: usize,
+    }
+
+    impl Component for Scale {
+        type In = u64;
+        type Out = u64;
+        fn name(&self) -> &str {
+            "scale"
+        }
+        fn process(&mut self, batch: Vec<u64>, out: &WorkQueue<u64>) -> Result<Flow> {
+            self.bulks += 1;
+            for v in batch {
+                out.push(v * self.k).map_err(|_| "output closed under us")?;
+            }
+            Ok(Flow::Continue)
+        }
+    }
+
+    #[test]
+    fn close_cascades_through_a_two_stage_pipeline() {
+        let q_in: WorkQueue<u64> = WorkQueue::new(0);
+        let q_mid: WorkQueue<u64> = WorkQueue::new(0);
+        let q_out: WorkQueue<u64> = WorkQueue::new(0);
+        let h1 = spawn(
+            Scale { k: 2, bulks: 0 },
+            q_in.clone(),
+            q_mid.clone(),
+            SpawnOpts::default(),
+        );
+        let h2 = spawn(
+            Scale { k: 10, bulks: 0 },
+            q_mid.clone(),
+            q_out.clone(),
+            SpawnOpts::default(),
+        );
+        for i in 0..100u64 {
+            q_in.push(i).unwrap();
+        }
+        q_in.close();
+        // both stages drain, close their outputs, and exit cleanly
+        h1.join().unwrap();
+        h2.join().unwrap();
+        let mut got = Vec::new();
+        while let Some(v) = q_out.pop() {
+            got.push(v);
+        }
+        got.sort();
+        assert_eq!(got, (0..100).map(|i| i * 20).collect::<Vec<_>>());
+    }
+
+    /// Stops itself after seeing `limit` items, input still open.
+    struct TakeN {
+        limit: usize,
+        seen: usize,
+    }
+
+    impl Component for TakeN {
+        type In = u64;
+        type Out = u64;
+        fn name(&self) -> &str {
+            "take_n"
+        }
+        fn process(&mut self, batch: Vec<u64>, out: &WorkQueue<u64>) -> Result<Flow> {
+            for v in batch {
+                if self.seen == self.limit {
+                    return Ok(Flow::Done);
+                }
+                self.seen += 1;
+                out.push(v).map_err(|_| "closed")?;
+            }
+            if self.seen == self.limit {
+                Ok(Flow::Done)
+            } else {
+                Ok(Flow::Continue)
+            }
+        }
+    }
+
+    #[test]
+    fn flow_done_shuts_down_without_input_close() {
+        let q_in: WorkQueue<u64> = WorkQueue::new(0);
+        let q_out: WorkQueue<u64> = WorkQueue::new(0);
+        // bulk=1 so the take-limit is exact
+        let h = spawn(
+            TakeN { limit: 5, seen: 0 },
+            q_in.clone(),
+            q_out.clone(),
+            SpawnOpts {
+                bulk: 1,
+                close_output: true,
+            },
+        );
+        for i in 0..6u64 {
+            q_in.push(i).unwrap();
+        }
+        h.join().unwrap();
+        let mut got = Vec::new();
+        while let Some(v) = q_out.pop() {
+            got.push(v);
+        }
+        assert_eq!(got.len(), 5);
+        q_in.close();
+    }
+
+    #[test]
+    fn shared_output_closes_only_via_the_owning_stage() {
+        let q_a: WorkQueue<u64> = WorkQueue::new(0);
+        let q_b: WorkQueue<u64> = WorkQueue::new(0);
+        let q_out: WorkQueue<u64> = WorkQueue::new(0);
+        // two producers into q_out; only `b` owns the close
+        let ha = spawn(
+            Scale { k: 1, bulks: 0 },
+            q_a.clone(),
+            q_out.clone(),
+            SpawnOpts {
+                bulk: 8,
+                close_output: false,
+            },
+        );
+        let hb = spawn(
+            Scale { k: 1, bulks: 0 },
+            q_b.clone(),
+            q_out.clone(),
+            SpawnOpts {
+                bulk: 8,
+                close_output: true,
+            },
+        );
+        for i in 0..10u64 {
+            q_a.push(i).unwrap();
+        }
+        q_a.close();
+        ha.join().unwrap();
+        // q_out still open: stage a exited without closing it
+        q_out.push(999).unwrap();
+        for i in 10..20u64 {
+            q_b.push(i).unwrap();
+        }
+        q_b.close();
+        hb.join().unwrap();
+        // now closed: drain gives everything, then None
+        let mut n = 0;
+        while q_out.pop().is_some() {
+            n += 1;
+        }
+        assert_eq!(n, 21);
+        assert!(q_out.push(0).is_err());
+    }
+
+    #[test]
+    fn bulk_pull_batches_when_input_is_backed_up() {
+        let q_in: WorkQueue<u64> = WorkQueue::new(0);
+        let q_out: WorkQueue<u64> = WorkQueue::new(0);
+        for i in 0..64u64 {
+            q_in.push(i).unwrap();
+        }
+        q_in.close();
+        let h = spawn(
+            Scale { k: 1, bulks: 0 },
+            q_in,
+            q_out.clone(),
+            SpawnOpts {
+                bulk: 32,
+                close_output: true,
+            },
+        );
+        h.join().unwrap();
+        let mut n = 0;
+        while q_out.pop().is_some() {
+            n += 1;
+        }
+        assert_eq!(n, 64);
+    }
+}

@@ -9,9 +9,21 @@
 //!
 //! Built on std mutex/condvar channels so the real-mode agent can run its
 //! components on threads exactly as RP runs them as processes.
+//!
+//! On top of the bridges sits the [`component`] layer: a `Component` is a
+//! named stage with typed input/output queues and a shared run loop
+//! (bulk pull, per-hop trace events, cascading close on shutdown) — the
+//! unit both the real-mode Agent and the DES harness are built from,
+//! with time abstracted behind [`clock::Clock`].
 
+pub mod clock;
+pub mod component;
 pub mod pubsub;
 pub mod queue;
 
+pub use clock::{Clock, VirtualClock, WallClock};
+pub use component::{
+    spawn, spawn_scoped, Component, ComponentHandle, Flow, ScopedComponentHandle, SpawnOpts,
+};
 pub use pubsub::{PubSub, Subscription};
 pub use queue::WorkQueue;

@@ -254,4 +254,75 @@ mod tests {
         assert_eq!(q.pop_bulk(100).len(), 6);
         assert!(q.pop_bulk(4).is_empty());
     }
+
+    #[test]
+    fn pop_timeout_returns_item_delivered_before_deadline() {
+        let q: WorkQueue<u32> = WorkQueue::new(0);
+        let q2 = q.clone();
+        let producer = thread::spawn(move || {
+            thread::sleep(std::time::Duration::from_millis(30));
+            q2.push(7).unwrap();
+        });
+        // the wait must survive wakeups that find the queue still empty
+        // (condvars may wake spuriously; the loop re-checks and re-arms
+        // with the remaining time)
+        let got = q.pop_timeout(std::time::Duration::from_secs(5));
+        producer.join().unwrap();
+        assert_eq!(got, Some(7));
+    }
+
+    #[test]
+    fn pop_timeout_expires_empty_and_queue_stays_usable() {
+        let q: WorkQueue<u32> = WorkQueue::new(0);
+        let t0 = std::time::Instant::now();
+        assert_eq!(q.pop_timeout(std::time::Duration::from_millis(20)), None);
+        assert!(t0.elapsed() >= std::time::Duration::from_millis(20));
+        // a timeout is not a close: the queue still works
+        q.push(1).unwrap();
+        assert_eq!(q.pop_timeout(std::time::Duration::from_millis(20)), Some(1));
+    }
+
+    #[test]
+    fn push_and_try_push_fail_after_close_returning_the_item() {
+        let q: WorkQueue<String> = WorkQueue::new(2);
+        q.push("kept".into()).unwrap();
+        q.close();
+        // both push flavors must hand the rejected item back intact
+        assert_eq!(q.push("a".into()), Err("a".to_string()));
+        assert_eq!(q.try_push("b".into()), Err("b".to_string()));
+        // close is idempotent and draining still works
+        q.close();
+        assert_eq!(q.pop(), Some("kept".into()));
+        assert_eq!(q.pop(), None);
+        assert_eq!(q.pop_timeout(std::time::Duration::from_millis(5)), None);
+    }
+
+    #[test]
+    fn pop_bulk_unblocks_producers_waiting_on_a_full_queue() {
+        let q: WorkQueue<u32> = WorkQueue::new(4);
+        for i in 0..4 {
+            q.push(i).unwrap();
+        }
+        // three producers block on the full queue
+        let producers: Vec<_> = (10..13)
+            .map(|v| {
+                let q = q.clone();
+                thread::spawn(move || q.push(v).unwrap())
+            })
+            .collect();
+        thread::sleep(std::time::Duration::from_millis(20));
+        assert_eq!(q.len(), 4);
+        // bulk drain frees several slots at once; notify_all must wake
+        // every blocked producer, not just one
+        assert_eq!(q.pop_bulk(4), vec![0, 1, 2, 3]);
+        for p in producers {
+            p.join().unwrap();
+        }
+        let mut rest = Vec::new();
+        while let Some(v) = q.try_pop() {
+            rest.push(v);
+        }
+        rest.sort();
+        assert_eq!(rest, vec![10, 11, 12]);
+    }
 }

@@ -2,6 +2,7 @@
 //! `radical.pilot.PilotDescription` / `radical.pilot.Pilot`).
 
 use crate::platform::{NodeMap, Platform, PlatformKind};
+use crate::util::error::{Result, RpError};
 
 #[derive(Clone, Debug)]
 pub struct PilotDescription {
@@ -47,32 +48,39 @@ impl PilotDescription {
 
     /// Resolve the node count against a platform (cores → nodes rounding
     /// up, as RP does).
-    pub fn resolve_nodes(&self, platform: &Platform) -> Result<u32, String> {
+    pub fn resolve_nodes(&self, platform: &Platform) -> Result<u32> {
         let nodes = if self.nodes > 0 {
             self.nodes
         } else if self.cores > 0 {
             self.cores.div_ceil(platform.cores_per_node as u64) as u32
         } else {
-            return Err("pilot description has neither nodes nor cores".into());
+            return Err(RpError::Invalid(
+                "pilot description has neither nodes nor cores".into(),
+            ));
         };
         if nodes > platform.nodes {
-            return Err(format!(
+            return Err(RpError::Invalid(format!(
                 "pilot requests {} nodes; {} has {}",
                 nodes, platform.name, platform.nodes
-            ));
+            )));
         }
         Ok(nodes)
     }
 
-    pub fn verify(&self) -> Result<(), String> {
+    pub fn verify(&self) -> Result<()> {
         if PlatformKind::parse(&self.resource).is_none() {
-            return Err(format!("unknown resource '{}'", self.resource));
+            return Err(RpError::Invalid(format!(
+                "unknown resource '{}'",
+                self.resource
+            )));
         }
         if self.nodes == 0 && self.cores == 0 {
-            return Err("pilot description has neither nodes nor cores".into());
+            return Err(RpError::Invalid(
+                "pilot description has neither nodes nor cores".into(),
+            ));
         }
         if self.runtime_s <= 0.0 {
-            return Err("pilot runtime must be positive".into());
+            return Err(RpError::Invalid("pilot runtime must be positive".into()));
         }
         Ok(())
     }

@@ -7,6 +7,7 @@ use crate::launch::prrte::MAX_NODES_PER_DVM;
 use crate::platform::{BatchSystem, NodeMap, Platform, PlatformKind};
 use crate::saga::{adapter_for, JobDescription};
 use crate::sim::SimTime;
+use crate::util::error::{Result, RpError};
 use crate::util::ids::Counter;
 
 /// The Agent layout the Launcher derives for a pilot (how many DVMs, which
@@ -45,10 +46,10 @@ impl PilotManager {
     }
 
     /// Validate + register a pilot (state New).
-    pub fn submit(&mut self, pd: PilotDescription) -> Result<usize, String> {
+    pub fn submit(&mut self, pd: PilotDescription) -> Result<usize> {
         pd.verify()?;
         let platform_kind = PlatformKind::parse(&pd.resource)
-            .ok_or_else(|| format!("unknown resource '{}'", pd.resource))?;
+            .ok_or_else(|| RpError::Invalid(format!("unknown resource '{}'", pd.resource)))?;
         let platform = Platform::load(platform_kind);
         let nodes = pd.resolve_nodes(&platform)?;
         let uid = self.counter.next("pilot", 4);
@@ -71,7 +72,7 @@ impl PilotManager {
         idx: usize,
         batch: &mut BatchSystem,
         now: SimTime,
-    ) -> Result<SimTime, String> {
+    ) -> Result<SimTime> {
         let pilot = &mut self.pilots[idx];
         assert_eq!(pilot.state, PilotState::New, "pilot already launched");
         let platform = Platform::load(pilot.platform);

@@ -5,153 +5,18 @@
 //! only thing that touches the compiled computations at run time. See
 //! DESIGN.md §1 and /opt/xla-example/load_hlo for the interchange rationale
 //! (HLO *text*, not serialized protos).
+//!
+//! The PJRT execution path needs the environment-provided `xla` crate and
+//! is gated behind the off-by-default `pjrt` cargo feature so the crate
+//! builds offline (tier-1 CI has no PJRT toolchain). Without the feature,
+//! the same API is exported as a stub: `Runtime::cpu` succeeds, artifact
+//! discovery (`available`, `load_expected`) does real filesystem work, and
+//! `load`/`call*` return typed errors. Binaries and tests that need real
+//! artifacts probe at run time and skip cleanly.
 
-use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-use std::sync::Mutex;
 
-use anyhow::{anyhow, Context, Result};
-
-/// A compiled computation: shape metadata + the loaded PJRT executable.
-pub struct Executable {
-    pub name: String,
-    exe: xla::PjRtLoadedExecutable,
-    /// serialize PJRT calls per executable (the CPU client is not
-    /// documented thread-safe for concurrent executions of one handle)
-    lock: Mutex<()>,
-}
-
-// SAFETY: the xla crate wraps raw PJRT pointers without Send/Sync markers.
-// All mutation of an Executable goes through `lock`, and the PJRT CPU
-// client itself is internally synchronized for compile/execute. The same
-// reasoning applies to Runtime (guarded by `cache`'s Mutex for loads).
-unsafe impl Send for Executable {}
-unsafe impl Sync for Executable {}
-
-impl Executable {
-    /// Execute with f32 inputs; returns all tuple outputs flattened to
-    /// f32 vecs. Inputs are (data, dims) pairs.
-    pub fn call_f32(&self, inputs: &[(&[f32], &[i64])]) -> Result<Vec<Vec<f32>>> {
-        let literals: Vec<xla::Literal> = inputs
-            .iter()
-            .map(|(data, dims)| {
-                let lit = xla::Literal::vec1(data);
-                if dims.is_empty() {
-                    Ok(lit)
-                } else {
-                    lit.reshape(dims).map_err(|e| anyhow!("reshape: {e:?}"))
-                }
-            })
-            .collect::<Result<_>>()?;
-        let _g = self.lock.lock().unwrap();
-        let result = self
-            .exe
-            .execute::<xla::Literal>(&literals)
-            .map_err(|e| anyhow!("execute {}: {e:?}", self.name))?;
-        let out = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
-        // aot.py lowers with return_tuple=True
-        let parts = out.to_tuple().map_err(|e| anyhow!("to_tuple: {e:?}"))?;
-        parts
-            .into_iter()
-            .map(|p| {
-                // outputs may be f32 or need conversion
-                let p = p
-                    .convert(xla::PrimitiveType::F32)
-                    .map_err(|e| anyhow!("convert: {e:?}"))?;
-                p.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))
-            })
-            .collect()
-    }
-
-    /// Single-output convenience.
-    pub fn call1_f32(&self, inputs: &[(&[f32], &[i64])]) -> Result<Vec<f32>> {
-        let mut outs = self.call_f32(inputs)?;
-        if outs.len() != 1 {
-            return Err(anyhow!(
-                "{} returned {} outputs, expected 1",
-                self.name,
-                outs.len()
-            ));
-        }
-        Ok(outs.pop().unwrap())
-    }
-}
-
-/// The runtime: one PJRT CPU client + a cache of compiled executables
-/// (compile-once, execute-many — the §Perf hot path).
-pub struct Runtime {
-    client: xla::PjRtClient,
-    cache: Mutex<HashMap<String, std::sync::Arc<Executable>>>,
-    artifacts_dir: PathBuf,
-}
-
-// SAFETY: see Executable above.
-unsafe impl Send for Runtime {}
-unsafe impl Sync for Runtime {}
-
-impl Runtime {
-    pub fn cpu(artifacts_dir: impl AsRef<Path>) -> Result<Runtime> {
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
-        Ok(Runtime {
-            client,
-            cache: Mutex::new(HashMap::new()),
-            artifacts_dir: artifacts_dir.as_ref().to_path_buf(),
-        })
-    }
-
-    pub fn platform_name(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Load + compile `<artifacts_dir>/<name>.hlo.txt` (cached).
-    pub fn load(&self, name: &str) -> Result<std::sync::Arc<Executable>> {
-        if let Some(e) = self.cache.lock().unwrap().get(name) {
-            return Ok(e.clone());
-        }
-        let path = self.artifacts_dir.join(format!("{name}.hlo.txt"));
-        if !path.exists() {
-            return Err(anyhow!(
-                "artifact {} not found — run `make artifacts` first",
-                path.display()
-            ));
-        }
-        let proto = xla::HloModuleProto::from_text_file(&path)
-            .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
-        let executable = std::sync::Arc::new(Executable {
-            name: name.to_string(),
-            exe,
-            lock: Mutex::new(()),
-        });
-        self.cache
-            .lock()
-            .unwrap()
-            .insert(name.to_string(), executable.clone());
-        Ok(executable)
-    }
-
-    /// Names of artifacts present on disk.
-    pub fn available(&self) -> Vec<String> {
-        let mut names = Vec::new();
-        if let Ok(entries) = std::fs::read_dir(&self.artifacts_dir) {
-            for e in entries.flatten() {
-                if let Some(n) = e.file_name().to_str() {
-                    if let Some(base) = n.strip_suffix(".hlo.txt") {
-                        names.push(base.to_string());
-                    }
-                }
-            }
-        }
-        names.sort();
-        names
-    }
-}
+use crate::util::error::{Result, RpError};
 
 /// Default artifacts dir: $RP_ARTIFACTS or ./artifacts.
 pub fn default_artifacts_dir() -> PathBuf {
@@ -165,16 +30,252 @@ pub fn default_artifacts_dir() -> PathBuf {
 pub fn load_expected(artifacts_dir: impl AsRef<Path>) -> Result<crate::util::json::Json> {
     let path = artifacts_dir.as_ref().join("expected.json");
     let text = std::fs::read_to_string(&path)
-        .with_context(|| format!("reading {}", path.display()))?;
-    crate::util::json::Json::parse(&text).map_err(|e| anyhow!("expected.json: {e}"))
+        .map_err(|e| RpError::Runtime(format!("reading {}: {e}", path.display())))?;
+    crate::util::json::Json::parse(&text)
+        .map_err(|e| RpError::Runtime(format!("expected.json: {e}")))
 }
+
+/// Names of `.hlo.txt` artifacts present in a directory, sorted.
+fn list_artifacts(dir: &Path) -> Vec<String> {
+    let mut names = Vec::new();
+    if let Ok(entries) = std::fs::read_dir(dir) {
+        for e in entries.flatten() {
+            if let Some(n) = e.file_name().to_str() {
+                if let Some(base) = n.strip_suffix(".hlo.txt") {
+                    names.push(base.to_string());
+                }
+            }
+        }
+    }
+    names.sort();
+    names
+}
+
+#[cfg(feature = "pjrt")]
+mod pjrt_impl {
+    use std::collections::HashMap;
+    use std::path::{Path, PathBuf};
+    use std::sync::Mutex;
+
+    use crate::util::error::{Result, RpError};
+
+    fn rt_err(msg: String) -> RpError {
+        RpError::Runtime(msg)
+    }
+
+    /// A compiled computation: shape metadata + the loaded PJRT executable.
+    pub struct Executable {
+        pub name: String,
+        exe: xla::PjRtLoadedExecutable,
+        /// serialize PJRT calls per executable (the CPU client is not
+        /// documented thread-safe for concurrent executions of one handle)
+        lock: Mutex<()>,
+    }
+
+    // SAFETY: the xla crate wraps raw PJRT pointers without Send/Sync
+    // markers. All mutation of an Executable goes through `lock`, and the
+    // PJRT CPU client itself is internally synchronized for
+    // compile/execute. The same reasoning applies to Runtime (guarded by
+    // `cache`'s Mutex for loads).
+    unsafe impl Send for Executable {}
+    unsafe impl Sync for Executable {}
+
+    impl Executable {
+        /// Execute with f32 inputs; returns all tuple outputs flattened to
+        /// f32 vecs. Inputs are (data, dims) pairs.
+        pub fn call_f32(&self, inputs: &[(&[f32], &[i64])]) -> Result<Vec<Vec<f32>>> {
+            let literals: Vec<xla::Literal> = inputs
+                .iter()
+                .map(|(data, dims)| {
+                    let lit = xla::Literal::vec1(data);
+                    if dims.is_empty() {
+                        Ok(lit)
+                    } else {
+                        lit.reshape(dims).map_err(|e| rt_err(format!("reshape: {e:?}")))
+                    }
+                })
+                .collect::<Result<_>>()?;
+            let _g = self.lock.lock().unwrap();
+            let result = self
+                .exe
+                .execute::<xla::Literal>(&literals)
+                .map_err(|e| rt_err(format!("execute {}: {e:?}", self.name)))?;
+            let out = result[0][0]
+                .to_literal_sync()
+                .map_err(|e| rt_err(format!("to_literal: {e:?}")))?;
+            // aot.py lowers with return_tuple=True
+            let parts = out
+                .to_tuple()
+                .map_err(|e| rt_err(format!("to_tuple: {e:?}")))?;
+            parts
+                .into_iter()
+                .map(|p| {
+                    // outputs may be f32 or need conversion
+                    let p = p
+                        .convert(xla::PrimitiveType::F32)
+                        .map_err(|e| rt_err(format!("convert: {e:?}")))?;
+                    p.to_vec::<f32>()
+                        .map_err(|e| rt_err(format!("to_vec: {e:?}")))
+                })
+                .collect()
+        }
+
+        /// Single-output convenience.
+        pub fn call1_f32(&self, inputs: &[(&[f32], &[i64])]) -> Result<Vec<f32>> {
+            let mut outs = self.call_f32(inputs)?;
+            if outs.len() != 1 {
+                return Err(rt_err(format!(
+                    "{} returned {} outputs, expected 1",
+                    self.name,
+                    outs.len()
+                )));
+            }
+            Ok(outs.pop().unwrap())
+        }
+    }
+
+    /// The runtime: one PJRT CPU client + a cache of compiled executables
+    /// (compile-once, execute-many — the §Perf hot path).
+    pub struct Runtime {
+        client: xla::PjRtClient,
+        cache: Mutex<HashMap<String, std::sync::Arc<Executable>>>,
+        artifacts_dir: PathBuf,
+    }
+
+    // SAFETY: see Executable above.
+    unsafe impl Send for Runtime {}
+    unsafe impl Sync for Runtime {}
+
+    impl Runtime {
+        pub fn cpu(artifacts_dir: impl AsRef<Path>) -> Result<Runtime> {
+            let client = xla::PjRtClient::cpu()
+                .map_err(|e| rt_err(format!("pjrt cpu client: {e:?}")))?;
+            Ok(Runtime {
+                client,
+                cache: Mutex::new(HashMap::new()),
+                artifacts_dir: artifacts_dir.as_ref().to_path_buf(),
+            })
+        }
+
+        pub fn platform_name(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Load + compile `<artifacts_dir>/<name>.hlo.txt` (cached).
+        pub fn load(&self, name: &str) -> Result<std::sync::Arc<Executable>> {
+            if let Some(e) = self.cache.lock().unwrap().get(name) {
+                return Ok(e.clone());
+            }
+            let path = self.artifacts_dir.join(format!("{name}.hlo.txt"));
+            if !path.exists() {
+                return Err(rt_err(format!(
+                    "artifact {} not found — run `make artifacts` first",
+                    path.display()
+                )));
+            }
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| rt_err(format!("parse {}: {e:?}", path.display())))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| rt_err(format!("compile {name}: {e:?}")))?;
+            let executable = std::sync::Arc::new(Executable {
+                name: name.to_string(),
+                exe,
+                lock: Mutex::new(()),
+            });
+            self.cache
+                .lock()
+                .unwrap()
+                .insert(name.to_string(), executable.clone());
+            Ok(executable)
+        }
+
+        /// Names of artifacts present on disk.
+        pub fn available(&self) -> Vec<String> {
+            super::list_artifacts(&self.artifacts_dir)
+        }
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+mod stub_impl {
+    use std::path::{Path, PathBuf};
+
+    use crate::util::error::{Result, RpError};
+
+    /// Stub executable: exists so downstream code compiles without the
+    /// `pjrt` feature; every call reports the missing feature.
+    pub struct Executable {
+        pub name: String,
+    }
+
+    impl Executable {
+        pub fn call_f32(&self, _inputs: &[(&[f32], &[i64])]) -> Result<Vec<Vec<f32>>> {
+            Err(RpError::Runtime(format!(
+                "executing '{}' requires the `pjrt` cargo feature",
+                self.name
+            )))
+        }
+
+        pub fn call1_f32(&self, _inputs: &[(&[f32], &[i64])]) -> Result<Vec<f32>> {
+            Err(RpError::Runtime(format!(
+                "executing '{}' requires the `pjrt` cargo feature",
+                self.name
+            )))
+        }
+    }
+
+    /// Stub runtime: artifact discovery works (filesystem only); loading
+    /// reports either the missing artifact (same "make artifacts" hint as
+    /// the real path) or the missing feature.
+    pub struct Runtime {
+        artifacts_dir: PathBuf,
+    }
+
+    impl Runtime {
+        pub fn cpu(artifacts_dir: impl AsRef<Path>) -> Result<Runtime> {
+            Ok(Runtime {
+                artifacts_dir: artifacts_dir.as_ref().to_path_buf(),
+            })
+        }
+
+        pub fn platform_name(&self) -> String {
+            "stub (build with --features pjrt for PJRT execution)".to_string()
+        }
+
+        pub fn load(&self, name: &str) -> Result<std::sync::Arc<Executable>> {
+            let path = self.artifacts_dir.join(format!("{name}.hlo.txt"));
+            if !path.exists() {
+                return Err(RpError::Runtime(format!(
+                    "artifact {} not found — run `make artifacts` first",
+                    path.display()
+                )));
+            }
+            Err(RpError::Runtime(format!(
+                "artifact {name} present, but executing it requires the `pjrt` cargo feature"
+            )))
+        }
+
+        pub fn available(&self) -> Vec<String> {
+            super::list_artifacts(&self.artifacts_dir)
+        }
+    }
+}
+
+#[cfg(feature = "pjrt")]
+pub use pjrt_impl::{Executable, Runtime};
+#[cfg(not(feature = "pjrt"))]
+pub use stub_impl::{Executable, Runtime};
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
     // Full numeric round-trip tests live in rust/tests/runtime_artifacts.rs
-    // (they need `make artifacts`). Here: offline behaviour.
+    // (they need `make artifacts` and the `pjrt` feature). Here: offline
+    // behaviour, identical for the stub and the real client.
 
     #[test]
     fn missing_artifact_is_a_clean_error() {

@@ -10,6 +10,7 @@ use crate::pilot::{PilotDescription, PilotManager};
 use crate::platform::{Platform, PlatformKind};
 use crate::task::TaskDescription;
 use crate::tmgr::TaskManager;
+use crate::util::error::Result;
 use crate::util::ids;
 
 pub struct Session {
@@ -40,7 +41,7 @@ impl Session {
     /// Register a function implementation for Function tasks.
     pub fn register_function<F>(&mut self, name: &str, f: F)
     where
-        F: Fn(&crate::util::json::Json) -> Result<f64, String> + Send + Sync + 'static,
+        F: Fn(&crate::util::json::Json) -> Result<f64> + Send + Sync + 'static,
     {
         self.registry.register(name, f);
     }
@@ -55,7 +56,7 @@ impl Session {
         &mut self,
         descriptions: Vec<TaskDescription>,
         concurrency: usize,
-    ) -> Result<AgentResult, String> {
+    ) -> Result<AgentResult> {
         let platform = Platform::load(PlatformKind::Local);
         let cores = platform.cores_per_node;
         let pd = PilotDescription::new("local.localhost", 1, 3600.0);

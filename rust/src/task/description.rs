@@ -8,6 +8,7 @@
 //!   4. size        — ranks × cores_per_rank (+ gpus), 1 HW thread … many nodes
 //!   5. duration    — seconds (emulated in DES mode; wall time in real mode)
 
+use crate::util::error::{Result, RpError};
 use crate::util::json::Json;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -100,20 +101,22 @@ impl TaskDescription {
     }
 
     /// Sanity-check the description (mirrors RP's attribute verification).
-    pub fn verify(&self) -> Result<(), String> {
+    pub fn verify(&self) -> Result<()> {
         if self.ranks == 0 {
-            return Err("task requires at least one rank".into());
+            return Err(RpError::Invalid("task requires at least one rank".into()));
         }
         if self.cores_per_rank == 0 {
-            return Err("task requires at least one core per rank".into());
+            return Err(RpError::Invalid(
+                "task requires at least one core per rank".into(),
+            ));
         }
         match self.kind {
-            TaskKind::Executable if self.executable.is_empty() => {
-                Err("executable task without executable".into())
-            }
-            TaskKind::Function if self.function.is_empty() => {
-                Err("function task without function name".into())
-            }
+            TaskKind::Executable if self.executable.is_empty() => Err(RpError::Invalid(
+                "executable task without executable".into(),
+            )),
+            TaskKind::Function if self.function.is_empty() => Err(RpError::Invalid(
+                "function task without function name".into(),
+            )),
             _ => Ok(()),
         }
     }

@@ -6,6 +6,7 @@
 //! Canceled.
 
 use super::description::TaskDescription;
+use crate::util::error::{Result, RpError};
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub enum TaskState {
@@ -98,14 +99,12 @@ impl Task {
     }
 
     /// Advance the state, enforcing legality.
-    pub fn advance(&mut self, next: TaskState) -> Result<(), String> {
+    pub fn advance(&mut self, next: TaskState) -> Result<()> {
         if !self.state.can_advance_to(next) {
-            return Err(format!(
-                "illegal task transition {} → {} ({})",
-                self.state.name(),
-                next.name(),
-                self.uid
-            ));
+            return Err(RpError::Transition {
+                from: self.state.name().to_string(),
+                to: format!("{} ({})", next.name(), self.uid),
+            });
         }
         self.state = next;
         Ok(())

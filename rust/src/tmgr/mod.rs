@@ -4,6 +4,7 @@
 
 use crate::db::{Db, TaskRecord};
 use crate::task::{Task, TaskDescription, TaskState};
+use crate::util::error::{Result, RpError};
 use crate::util::ids::Counter;
 
 pub struct TaskManager {
@@ -30,7 +31,7 @@ impl TaskManager {
     }
 
     /// Register descriptions; returns the dense indices assigned.
-    pub fn submit(&mut self, descriptions: Vec<TaskDescription>) -> Result<Vec<u32>, String> {
+    pub fn submit(&mut self, descriptions: Vec<TaskDescription>) -> Result<Vec<u32>> {
         let mut indices = Vec::with_capacity(descriptions.len());
         for td in descriptions {
             td.verify()?;
@@ -44,9 +45,9 @@ impl TaskManager {
 
     /// Route tasks to pilots round-robin (RP's default multi-pilot
     /// policy) and insert the records into the DB in bulk.
-    pub fn schedule_to_pilots(&mut self, db: &Db, pilot_uids: &[String]) -> Result<(), String> {
+    pub fn schedule_to_pilots(&mut self, db: &Db, pilot_uids: &[String]) -> Result<()> {
         if pilot_uids.is_empty() {
-            return Err("no pilots to schedule to".into());
+            return Err(RpError::Scheduling("no pilots to schedule to".into()));
         }
         let mut per_pilot: Vec<Vec<TaskRecord>> = vec![Vec::new(); pilot_uids.len()];
         for task in self.tasks.iter_mut() {

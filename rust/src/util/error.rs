@@ -1,0 +1,128 @@
+//! `RpError` — the typed error for the RP control plane (DESIGN.md §2).
+//!
+//! Every public API between workload submission and task completion
+//! (`task/`, `pilot/`, `tmgr/`, `launch/`, `agent/`, `session/`) returns
+//! `util::error::Result<T>`. Variants mirror the layers of the stack so
+//! callers can match on *where* a failure originated instead of parsing
+//! strings; `From` conversions keep `?` working across the remaining
+//! string-error substrates (saga adapters, batch models, io).
+
+use std::fmt;
+
+/// The unified control-plane error.
+#[derive(Debug)]
+pub enum RpError {
+    /// A description failed validation (TaskDescription::verify,
+    /// PilotDescription::verify, unknown platform/launch-method names).
+    Invalid(String),
+    /// An illegal task state transition (task/state.rs state model).
+    Transition { from: String, to: String },
+    /// The scheduler could not place a task that will never fit
+    /// (infeasible request, exhausted partition).
+    Scheduling(String),
+    /// A launch method refused or failed to launch (placement check,
+    /// DVM routing, spawn failure).
+    Launch(String),
+    /// The runtime layer (PJRT artifacts) failed.
+    Runtime(String),
+    /// An OS-level I/O failure (staging, spawn, trace files).
+    Io(std::io::Error),
+    /// Uncategorized — the `From<String>` landing pad for legacy
+    /// string-error layers crossing into typed code via `?`.
+    Msg(String),
+}
+
+/// Control-plane result alias; `rp::util::error::Result<T>`.
+pub type Result<T> = std::result::Result<T, RpError>;
+
+impl fmt::Display for RpError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            RpError::Invalid(m) => write!(f, "invalid description: {m}"),
+            RpError::Transition { from, to } => {
+                write!(f, "illegal state transition {from} -> {to}")
+            }
+            RpError::Scheduling(m) => write!(f, "scheduling: {m}"),
+            RpError::Launch(m) => write!(f, "launch: {m}"),
+            RpError::Runtime(m) => write!(f, "runtime: {m}"),
+            RpError::Io(e) => write!(f, "io: {e}"),
+            RpError::Msg(m) => write!(f, "{m}"),
+        }
+    }
+}
+
+impl std::error::Error for RpError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            RpError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<String> for RpError {
+    fn from(m: String) -> Self {
+        RpError::Msg(m)
+    }
+}
+
+impl From<&str> for RpError {
+    fn from(m: &str) -> Self {
+        RpError::Msg(m.to_string())
+    }
+}
+
+impl From<std::io::Error> for RpError {
+    fn from(e: std::io::Error) -> Self {
+        RpError::Io(e)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn string_layer() -> std::result::Result<u32, String> {
+        Err("legacy failure".to_string())
+    }
+
+    fn typed_layer() -> Result<u32> {
+        // `?` across a String-error boundary lands in Msg
+        let v = string_layer()?;
+        Ok(v)
+    }
+
+    #[test]
+    fn from_string_and_str_land_in_msg() {
+        let e: RpError = "plain".into();
+        assert_eq!(e.to_string(), "plain");
+        let e: RpError = String::from("owned").into();
+        assert_eq!(e.to_string(), "owned");
+    }
+
+    #[test]
+    fn question_mark_crosses_string_boundary() {
+        let e = typed_layer().unwrap_err();
+        assert!(matches!(e, RpError::Msg(_)));
+        assert_eq!(e.to_string(), "legacy failure");
+    }
+
+    #[test]
+    fn io_errors_keep_their_source() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: RpError = io.into();
+        assert!(std::error::Error::source(&e).is_some());
+        assert!(e.to_string().contains("gone"));
+    }
+
+    #[test]
+    fn variants_render_their_layer() {
+        let e = RpError::Transition {
+            from: "NEW".into(),
+            to: "DONE".into(),
+        };
+        assert_eq!(e.to_string(), "illegal state transition NEW -> DONE");
+        assert!(RpError::Scheduling("no fit".into()).to_string().starts_with("scheduling:"));
+        assert!(RpError::Launch("dvm dead".into()).to_string().starts_with("launch:"));
+    }
+}

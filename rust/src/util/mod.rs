@@ -3,6 +3,7 @@
 
 pub mod args;
 pub mod bench;
+pub mod error;
 pub mod ids;
 pub mod json;
 pub mod prop;

@@ -59,10 +59,13 @@ impl Gen {
 }
 
 /// Run `cases` random cases of the property. Panics (with seed + case
-/// context) on the first failure.
-pub fn prop<F>(seed: u64, cases: usize, mut f: F)
+/// context) on the first failure. Generic over the closure's error type
+/// (anything `Display` — `String`, `RpError`, …) so properties can `?`
+/// straight through typed control-plane APIs.
+pub fn prop<F, E>(seed: u64, cases: usize, mut f: F)
 where
-    F: FnMut(&mut Gen) -> Result<(), String>,
+    F: FnMut(&mut Gen) -> Result<(), E>,
+    E: std::fmt::Display,
 {
     for case in 0..cases {
         let case_seed = seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
