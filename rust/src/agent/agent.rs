@@ -20,7 +20,13 @@ use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
 use crate::db::{Db, TaskRecord};
-use crate::mesh::{spawn_scoped, Clock, Component, Flow, SpawnOpts, WallClock, WorkQueue};
+use crate::mesh::{
+    spawn, spawn_scoped, Clock, Component, Flow, PubSub, SpawnOpts, WallClock, WorkQueue,
+};
+use crate::resilience::{
+    bridge_beats, Beat, FaultInjector, FaultKind, FaultSpec, HealthEvent, HeartbeatMonitor,
+    RetryDecision,
+};
 use crate::task::{Task, TaskDescription, TaskKind, TaskState};
 use crate::tracer::{Ev, Tracer};
 use crate::util::error::Result;
@@ -77,6 +83,15 @@ pub struct AgentConfig {
     /// DB bulk-pull size
     pub bulk_size: usize,
     pub trace: bool,
+    /// heartbeat cadence of workers / DB bridge (s); also the scheduler
+    /// tick that re-examines backed-off retries
+    pub heartbeat_interval_s: f64,
+    /// intervals of silence before a source is declared dead
+    pub heartbeat_missed: u32,
+    /// deterministic fault schedule (None = no injected faults)
+    pub faults: Option<FaultSpec>,
+    /// seed for the fault schedule and retry backoff jitter
+    pub fault_seed: u64,
 }
 
 impl AgentConfig {
@@ -91,28 +106,44 @@ impl AgentConfig {
             n_executor_threads: cores as usize,
             bulk_size: 1024,
             trace: true,
+            heartbeat_interval_s: 0.05,
+            heartbeat_missed: 40,
+            faults: None,
+            fault_seed: 0,
         }
     }
 }
 
-/// Messages into the scheduler stage: tasks becoming schedulable, and
-/// resources returning from finished tasks (the release feedback loop).
+/// Messages into the scheduler stage: tasks becoming schedulable,
+/// resources returning from finished tasks (the release feedback loop),
+/// failed attempts seeking a retry verdict, and resilience verdicts
+/// (DVM collapse, node death) from the heartbeat/fault machinery.
+/// `Freed`/`Failed` carry the attempt they refer to so stale messages
+/// from superseded attempts are ignored.
 enum SchedMsg {
     Ready(u32),
-    Freed(u32),
+    Freed { index: u32, attempt: u32 },
+    Failed { index: u32, attempt: u32, error: String },
+    DvmFailed(u32),
+    NodeDead(u32),
+    /// wake the scheduler with no payload (backoff gates, heartbeats)
+    Tick,
 }
 
 /// A scheduled task handed to an executor worker.
 struct WorkItem {
     index: u32,
+    attempt: u32,
     td: TaskDescription,
 }
 
 /// A task's terminal record flowing into Stager-Out. `ran == false`
 /// marks synthetic completions for tasks that never launched (stage-in
-/// failure, infeasible request, launch refusal).
+/// failure, infeasible request, launch refusal, retry budget exhausted).
 struct Completion {
     index: u32,
+    /// which attempt produced this record (stale ones are dropped)
+    attempt: u32,
     exit_code: i32,
     result: Option<f64>,
     error: String,
@@ -123,9 +154,10 @@ struct Completion {
 }
 
 impl Completion {
-    fn unran(index: u32, error: String) -> Completion {
+    fn unran(index: u32, attempt: u32, error: String) -> Completion {
         Completion {
             index,
+            attempt,
             exit_code: 1,
             result: None,
             error,
@@ -189,7 +221,7 @@ impl Component for StagerIn<'_> {
                 }
                 if let Err(e) = self.stager.stage_real(&input_staging) {
                     self.q_done
-                        .push(Completion::unran(idx, format!("stage-in failed: {e}")))
+                        .push(Completion::unran(idx, 1, format!("stage-in failed: {e}")))
                         .ok();
                     continue;
                 }
@@ -208,16 +240,65 @@ impl Component for StagerIn<'_> {
 }
 
 /// Scheduler stage: drives the shared `SchedCore` on every wake —
-/// enqueues newly-ready tasks, returns freed resources, then places
-/// whatever fits and emits `WorkItem`s to the executor workers.
+/// enqueues newly-ready tasks, returns freed resources, applies retry
+/// policies to failed attempts, absorbs DVM/node failure verdicts, then
+/// places whatever fits and emits `WorkItem`s to the executor workers.
 struct SchedStage<'a> {
     core: SchedCore,
     descriptions: &'a [TaskDescription],
     tasks: &'a Mutex<Vec<Task>>,
     tracer: &'a Mutex<Tracer>,
+    clock: Arc<WallClock>,
     q_done: WorkQueue<Completion>,
-    tickets: HashMap<u32, (Allocation, LaunchTicket)>,
+    tickets: HashMap<u32, (u32, Allocation, LaunchTicket)>,
     rng: Rng,
+}
+
+impl SchedStage<'_> {
+    /// A task's current attempt, as the Task table sees it.
+    fn current_attempt(&self, index: u32) -> u32 {
+        self.tasks.lock().unwrap()[index as usize].current_attempt()
+    }
+
+    /// Run the task's retry policy over a failed attempt: either resubmit
+    /// it through the scheduler queue (with backoff) or hand Stager-Out a
+    /// terminal completion. The attempt's resources must already be back
+    /// in the pool (Freed message or explicit ticket release).
+    fn handle_failure(&mut self, index: u32, error: &str) {
+        let policy = self.descriptions[index as usize].retry;
+        let now = self.clock.now();
+        match self.core.report_failure(index, &policy) {
+            RetryDecision::Retry { delay_s, .. } => {
+                let resubmitted = {
+                    let mut ts = self.tasks.lock().unwrap();
+                    ts[index as usize].resubmit(now, error).is_ok()
+                };
+                if resubmitted {
+                    self.tracer.lock().unwrap().rec(now, index, Ev::TaskResubmit);
+                    self.core.enqueue_after(index, delay_s);
+                }
+            }
+            RetryDecision::GiveUp { attempts } => {
+                let attempt = self.current_attempt(index);
+                self.q_done
+                    .push(Completion::unran(
+                        index,
+                        attempt,
+                        format!("failed after {attempts} attempt(s): {error}"),
+                    ))
+                    .ok();
+            }
+        }
+    }
+
+    /// Release the ticket of an in-flight attempt orphaned by a DVM or
+    /// node failure, then route it through the retry policy.
+    fn orphan(&mut self, index: u32, error: &str) {
+        if let Some((_attempt, alloc, ticket)) = self.tickets.remove(&index) {
+            self.core.release(&alloc, &ticket);
+        }
+        self.handle_failure(index, error);
+    }
 }
 
 impl Component for SchedStage<'_> {
@@ -232,11 +313,40 @@ impl Component for SchedStage<'_> {
         for msg in batch {
             match msg {
                 SchedMsg::Ready(idx) => self.core.enqueue(idx),
-                SchedMsg::Freed(idx) => {
-                    if let Some((alloc, ticket)) = self.tickets.remove(&idx) {
-                        self.core.release(&alloc, &ticket);
+                SchedMsg::Freed { index, attempt } => {
+                    // release only if the ticket belongs to this attempt;
+                    // orphaned attempts were already released explicitly
+                    if let Some(&(t_attempt, _, _)) = self.tickets.get(&index) {
+                        if t_attempt == attempt {
+                            let (_, alloc, ticket) = self.tickets.remove(&index).unwrap();
+                            self.core.release(&alloc, &ticket);
+                        }
                     }
                 }
+                SchedMsg::Failed { index, attempt, error } => {
+                    // stale verdicts about superseded attempts are dropped
+                    if attempt == self.current_attempt(index) {
+                        self.handle_failure(index, &error);
+                    }
+                }
+                SchedMsg::DvmFailed(d) => {
+                    let now = self.clock.now();
+                    self.tracer.lock().unwrap().rec(now, d, Ev::DvmFailed);
+                    let f = self.core.fail_dvm(d);
+                    for index in f.orphaned_tasks {
+                        self.orphan(index, &format!("dvm {d} collapsed"));
+                    }
+                }
+                SchedMsg::NodeDead(n) => {
+                    let now = self.clock.now();
+                    self.tracer.lock().unwrap().rec(now, n, Ev::NodeFailed);
+                    self.core.blacklist_node(n);
+                    let orphans = self.core.executor_mut().fail_node(n);
+                    for index in orphans {
+                        self.orphan(index, &format!("node {n} died"));
+                    }
+                }
+                SchedMsg::Tick => {}
             }
         }
         let pilot_cores = self.core.total_cores();
@@ -244,48 +354,59 @@ impl Component for SchedStage<'_> {
         let tasks = self.tasks;
         let tickets = &mut self.tickets;
         let q_done = &self.q_done;
-        let mut tracer = self.tracer.lock().unwrap();
-        self.core.schedule(
-            descriptions,
-            pilot_cores,
-            usize::MAX,
-            &mut self.rng,
-            &mut tracer,
-            |decision, _rng, _tracer| match decision {
-                SchedDecision::Launched {
-                    index,
-                    alloc,
-                    ticket,
-                    ..
-                } => {
-                    {
-                        let mut ts = tasks.lock().unwrap();
-                        let task = &mut ts[index as usize];
-                        let _ = task.advance(TaskState::AgentScheduling);
-                        let _ = task.advance(TaskState::AgentExecutingPending);
-                    }
-                    tickets.insert(index, (alloc, ticket));
-                    out.push(WorkItem {
+        let mut launch_failures: Vec<(u32, String)> = Vec::new();
+        {
+            let mut tracer = self.tracer.lock().unwrap();
+            let launch_failures = &mut launch_failures;
+            self.core.schedule(
+                descriptions,
+                pilot_cores,
+                usize::MAX,
+                &mut self.rng,
+                &mut tracer,
+                |decision, _rng, _tracer| match decision {
+                    SchedDecision::Launched {
                         index,
-                        td: descriptions[index as usize].clone(),
-                    })
-                    .ok();
-                }
-                SchedDecision::Infeasible { index } => {
-                    q_done
-                        .push(Completion::unran(
+                        alloc,
+                        ticket,
+                        ..
+                    } => {
+                        let attempt = {
+                            let mut ts = tasks.lock().unwrap();
+                            let task = &mut ts[index as usize];
+                            let _ = task.advance(TaskState::AgentScheduling);
+                            let _ = task.advance(TaskState::AgentExecutingPending);
+                            task.current_attempt()
+                        };
+                        tickets.insert(index, (attempt, alloc, ticket));
+                        out.push(WorkItem {
                             index,
-                            "infeasible resource request for this pilot".into(),
-                        ))
+                            attempt,
+                            td: descriptions[index as usize].clone(),
+                        })
                         .ok();
-                }
-                SchedDecision::LaunchFailed { index, error } => {
-                    q_done
-                        .push(Completion::unran(index, format!("launch failed: {error}")))
-                        .ok();
-                }
-            },
-        );
+                    }
+                    SchedDecision::Infeasible { index } => {
+                        // geometry can never fit: no retry policy helps
+                        q_done
+                            .push(Completion::unran(
+                                index,
+                                1,
+                                "infeasible resource request for this pilot".into(),
+                            ))
+                            .ok();
+                    }
+                    SchedDecision::LaunchFailed { index, error } => {
+                        launch_failures.push((index, error.to_string()));
+                    }
+                },
+            );
+        }
+        // launch failures walk the same retry policy as run failures;
+        // handled outside the closure because they need `&mut core`
+        for (index, error) in launch_failures {
+            self.handle_failure(index, &format!("launch failed: {error}"));
+        }
         Ok(Flow::Continue)
     }
 }
@@ -323,7 +444,22 @@ impl Component for StagerOut<'_> {
             if c.ran {
                 // resources return to the scheduler before finalization,
                 // exactly as the monolithic loop released first
-                out.push(SchedMsg::Freed(c.index)).ok();
+                out.push(SchedMsg::Freed {
+                    index: c.index,
+                    attempt: c.attempt,
+                })
+                .ok();
+                let (current, terminal) = {
+                    let tasks = self.tasks.lock().unwrap();
+                    let task = &tasks[c.index as usize];
+                    (task.current_attempt(), task.state.is_terminal())
+                };
+                if c.attempt != current || terminal {
+                    // a reaped attempt the pipeline already moved past
+                    // (orphaned by a node/DVM failure, or the task gave
+                    // up); the Freed above is all it still owes
+                    continue;
+                }
                 {
                     let mut tracer = self.tracer.lock().unwrap();
                     tracer.rec(c.t_run_start, c.index, Ev::TaskRunStart);
@@ -369,6 +505,26 @@ impl Component for StagerOut<'_> {
                         }
                     }
                 } else {
+                    let retryable = {
+                        let tasks = self.tasks.lock().unwrap();
+                        tasks[c.index as usize].description.retry.retries()
+                    };
+                    if retryable {
+                        // not terminal yet: the scheduler stage owns the
+                        // retry-or-give-up verdict (it has the SchedCore)
+                        let error = if c.error.is_empty() {
+                            format!("exit code {}", c.exit_code)
+                        } else {
+                            c.error.clone()
+                        };
+                        out.push(SchedMsg::Failed {
+                            index: c.index,
+                            attempt: c.attempt,
+                            error,
+                        })
+                        .ok();
+                        continue;
+                    }
                     {
                         let mut tasks = self.tasks.lock().unwrap();
                         tasks[c.index as usize].fail(&c.error);
@@ -433,31 +589,138 @@ impl Agent {
             .expect("executor config");
         // unbounded backfill, fail (don't requeue) on launch errors — the
         // real-mode policy; the DES harness picks the opposite knobs
-        let core = SchedCore::new(scheduler, executor, clock.clone(), usize::MAX, false);
+        let core = SchedCore::new(
+            scheduler,
+            executor,
+            clock.clone(),
+            usize::MAX,
+            false,
+            cfg.fault_seed,
+        );
 
         let q_records: WorkQueue<TaskRecord> = WorkQueue::new(0);
         let q_sched: WorkQueue<SchedMsg> = WorkQueue::new(0);
         let q_work: WorkQueue<WorkItem> = WorkQueue::new(0);
         let q_done: WorkQueue<Completion> = WorkQueue::new(0);
 
+        // heartbeat fabric: workers and the DB bridge publish beats on a
+        // shared bus; a HeartbeatMonitor component turns silence into
+        // SourceDead verdicts, which an adapter folds into SchedMsgs
+        let hb_interval = cfg.heartbeat_interval_s.max(0.01);
+        let beats: PubSub<Beat> = PubSub::new();
+        let q_beats: WorkQueue<Beat> = WorkQueue::new(0);
+        let q_health: WorkQueue<HealthEvent> = WorkQueue::new(0);
+        let monitor = HeartbeatMonitor::new(
+            clock.clone(),
+            hb_interval,
+            cfg.heartbeat_missed.max(1),
+            core.health(),
+        );
+        let _beat_bridge = bridge_beats(beats.subscribe(""), q_beats.clone());
+        let monitor_handle = spawn(
+            monitor,
+            q_beats.clone(),
+            q_health.clone(),
+            SpawnOpts {
+                bulk: 64,
+                close_output: true,
+            },
+        );
+
         std::thread::scope(|s| {
             // DB bridge: the TaskManager→DB→Agent hop onto the mesh
-            s.spawn(|| {
-                let mut pulled = 0usize;
-                while pulled < expected {
-                    let batch = db.pull_tasks_blocking(&cfg.pilot_uid, cfg.bulk_size);
-                    if batch.is_empty() {
-                        break; // DB closed under us
-                    }
-                    for record in batch {
-                        pulled += 1;
-                        if q_records.push(record).is_err() {
-                            return;
+            {
+                let beats = beats.clone();
+                let clock = clock.clone();
+                let q_records = q_records.clone();
+                s.spawn(move || {
+                    let mut pulled = 0usize;
+                    while pulled < expected {
+                        let batch = db.pull_tasks_blocking(&cfg.pilot_uid, cfg.bulk_size);
+                        if batch.is_empty() {
+                            break; // DB closed under us
+                        }
+                        beats.publish(
+                            "hb.db",
+                            Beat {
+                                source: "db-bridge".into(),
+                                t: clock.now(),
+                            },
+                        );
+                        for record in batch {
+                            pulled += 1;
+                            if q_records.push(record).is_err() {
+                                return;
+                            }
                         }
                     }
-                }
-                q_records.close();
-            });
+                    q_records.close();
+                });
+            }
+
+            // health adapter: SourceDead verdicts → scheduler messages
+            {
+                let q_sched = q_sched.clone();
+                let q_health = q_health.clone();
+                s.spawn(move || {
+                    while let Some(ev) = q_health.pop() {
+                        let HealthEvent::SourceDead { source, .. } = ev;
+                        let msg = match source.strip_prefix("node.") {
+                            Some(n) => match n.parse::<u32>() {
+                                Ok(node) => SchedMsg::NodeDead(node),
+                                Err(_) => SchedMsg::Tick,
+                            },
+                            // non-node sources (workers, DB bridge) carry
+                            // no placement capacity; just wake the core
+                            None => SchedMsg::Tick,
+                        };
+                        if q_sched.push(msg).is_err() {
+                            break;
+                        }
+                    }
+                });
+            }
+
+            // scheduler ticker: periodic wakes so backed-off retries get
+            // re-examined even when no completion is in flight
+            {
+                let q_sched = q_sched.clone();
+                s.spawn(move || loop {
+                    std::thread::sleep(std::time::Duration::from_secs_f64(hb_interval));
+                    if q_sched.push(SchedMsg::Tick).is_err() {
+                        break;
+                    }
+                });
+            }
+
+            // deterministic fault driver (only with an injection schedule)
+            if let Some(spec) = &cfg.faults {
+                let n_dvms = cfg.n_nodes.div_ceil(256);
+                let injector = FaultInjector::from_spec(spec, cfg.fault_seed, cfg.n_nodes, n_dvms);
+                let q_sched = q_sched.clone();
+                let clock = clock.clone();
+                s.spawn(move || {
+                    let mut injector = injector;
+                    loop {
+                        if injector.remaining() == 0 || q_sched.is_closed() {
+                            break;
+                        }
+                        for fault in injector.pop_due(clock.now()) {
+                            let msg = match fault.kind {
+                                FaultKind::NodeDeath { node } => SchedMsg::NodeDead(node),
+                                FaultKind::DvmCollapse { dvm } => SchedMsg::DvmFailed(dvm),
+                                // task crashes & DB stalls manifest on
+                                // their own in real mode; just wake
+                                _ => SchedMsg::Tick,
+                            };
+                            if q_sched.push(msg).is_err() {
+                                return;
+                            }
+                        }
+                        std::thread::sleep(std::time::Duration::from_secs_f64(hb_interval));
+                    }
+                });
+            }
 
             let h_in = spawn_scoped(
                 s,
@@ -485,6 +748,7 @@ impl Agent {
                     descriptions,
                     tasks: &tasks,
                     tracer: &tracer,
+                    clock: clock.clone(),
                     q_done: q_done.clone(),
                     tickets: HashMap::new(),
                     rng: Rng::new(0xA6E47),
@@ -497,19 +761,42 @@ impl Agent {
                 },
             );
 
-            // executor worker pool (the Executor component's rank pool)
-            for _ in 0..cfg.n_executor_threads.max(1) {
+            // executor worker pool (the Executor component's rank pool);
+            // workers heartbeat per completed item and on idle timeouts
+            for w in 0..cfg.n_executor_threads.max(1) {
                 let q_work = q_work.clone();
                 let q_done = q_done.clone();
                 let clock = clock.clone();
-                s.spawn(move || {
-                    while let Some(item) = q_work.pop() {
-                        let t_start = clock.now();
-                        let mut completion = execute_one(item, registry);
-                        completion.t_run_start = t_start;
-                        completion.t_run_stop = clock.now();
-                        if q_done.push(completion).is_err() {
-                            break;
+                let beats = beats.clone();
+                s.spawn(move || loop {
+                    match q_work.pop_timeout(std::time::Duration::from_secs_f64(hb_interval)) {
+                        Some(item) => {
+                            let t_start = clock.now();
+                            let mut completion = execute_one(item, registry);
+                            completion.t_run_start = t_start;
+                            completion.t_run_stop = clock.now();
+                            beats.publish(
+                                "hb.worker",
+                                Beat {
+                                    source: format!("worker.{w}"),
+                                    t: clock.now(),
+                                },
+                            );
+                            if q_done.push(completion).is_err() {
+                                break;
+                            }
+                        }
+                        None => {
+                            if q_work.is_closed() {
+                                break;
+                            }
+                            beats.publish(
+                                "hb.worker",
+                                Beat {
+                                    source: format!("worker.{w}"),
+                                    t: clock.now(),
+                                },
+                            );
                         }
                     }
                 });
@@ -537,7 +824,12 @@ impl Agent {
             let _ = h_in.join();
             let _ = h_sched.join();
             let _ = h_out.join();
+            // tear down the heartbeat fabric: closing the bus stops the
+            // beat bridge, which closes q_beats, which finishes the
+            // monitor, whose output close releases the health adapter
+            beats.close();
         });
+        let _ = monitor_handle.join();
 
         AgentResult {
             tasks: tasks.into_inner().unwrap(),
@@ -552,6 +844,7 @@ impl Agent {
 fn execute_one(item: WorkItem, registry: &FunctionRegistry) -> Completion {
     let base = |exit_code: i32, result: Option<f64>, error: String| Completion {
         index: item.index,
+        attempt: item.attempt,
         exit_code,
         result,
         error,
@@ -620,6 +913,10 @@ mod tests {
             n_executor_threads: 4,
             bulk_size: 64,
             trace: true,
+            heartbeat_interval_s: 0.02,
+            heartbeat_missed: 100,
+            faults: None,
+            fault_seed: 0,
         };
         Agent::run(&cfg, &db, &descriptions, &registry)
     }
@@ -689,13 +986,71 @@ mod tests {
         assert!(res.tasks.is_empty());
     }
 
+    fn fast_retry(max_attempts: u32) -> crate::resilience::RetryPolicy {
+        crate::resilience::RetryPolicy {
+            max_attempts,
+            backoff_base_s: 0.01,
+            backoff_factor: 1.0,
+            backoff_max_s: 0.05,
+            jitter_frac: 0.0,
+            deadline_s: 0.0,
+        }
+    }
+
+    #[test]
+    fn flaky_task_retries_to_done() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        static CALLS: AtomicUsize = AtomicUsize::new(0);
+        let mut reg = FunctionRegistry::new();
+        reg.register("flaky", |_| {
+            if CALLS.fetch_add(1, Ordering::SeqCst) == 0 {
+                Err("transient fault".into())
+            } else {
+                Ok(42.0)
+            }
+        });
+        let res = run_agent(
+            vec![TaskDescription::func("flaky", Json::Null, 0.0).with_retry(fast_retry(3))],
+            reg,
+        );
+        let t = &res.tasks[0];
+        assert_eq!(t.state, TaskState::Done, "stderr: {}", t.stderr);
+        assert_eq!(t.result, Some(42.0));
+        assert_eq!(t.attempts, 1, "exactly one failed attempt recorded");
+        assert_eq!(t.failure_history.len(), 1);
+        assert!(t.failure_history[0].reason.contains("transient fault"));
+        assert!(res.tracer.time_of(0, Ev::TaskResubmit).is_some());
+    }
+
+    #[test]
+    fn retry_budget_exhaustion_is_terminal() {
+        let res = run_agent(
+            vec![TaskDescription::emulated("/bin/false", 1, 1, 0.0).with_retry(fast_retry(2))],
+            FunctionRegistry::new(),
+        );
+        let t = &res.tasks[0];
+        assert_eq!(t.state, TaskState::Failed);
+        assert!(
+            t.stderr.contains("failed after 2 attempt(s)"),
+            "stderr: {}",
+            t.stderr
+        );
+        assert_eq!(t.failure_history.len(), 1);
+    }
+
     #[test]
     fn trace_has_full_pipeline_events() {
         let res = run_agent(
             vec![TaskDescription::emulated("/bin/true", 1, 1, 0.0)],
             FunctionRegistry::new(),
         );
-        for ev in [Ev::TaskDbPull, Ev::TaskSchedOk, Ev::TaskExecStart, Ev::TaskRunStop, Ev::TaskDone] {
+        for ev in [
+            Ev::TaskDbPull,
+            Ev::TaskSchedOk,
+            Ev::TaskExecStart,
+            Ev::TaskRunStop,
+            Ev::TaskDone,
+        ] {
             assert!(
                 res.tracer.time_of(0, ev).is_some(),
                 "missing event {:?}",

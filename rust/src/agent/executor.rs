@@ -3,8 +3,12 @@
 //! in-flight concurrency (incl. per-method caps and multi-DVM routing),
 //! and reports completions back to the Scheduler.
 
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
 use crate::launch::method::{method_for, LaunchMethod, LaunchSample, Placement};
 use crate::launch::prrte::{DvmMap, DvmPolicy, MAX_NODES_PER_DVM};
+use crate::resilience::NodeHealth;
 use crate::task::TaskDescription;
 use crate::util::error::{Result, RpError};
 use crate::util::rng::Rng;
@@ -40,12 +44,28 @@ pub struct LaunchTicket {
     pub sample: LaunchSample,
 }
 
+/// What a DVM collapse took with it: the nodes (for scheduler
+/// blacklisting) and the in-flight tasks that were running under the DVM
+/// (for resubmission through the retry path).
+#[derive(Clone, Debug, Default)]
+pub struct DvmFailure {
+    pub dvm: u32,
+    pub lost_nodes: Vec<u32>,
+    pub orphaned_tasks: Vec<u32>,
+}
+
 pub struct Executor {
     method: Box<dyn LaunchMethod>,
     dvms: Option<DvmMap>,
     in_flight: u64,
     launched_total: u64,
     failed_total: u64,
+    /// in-flight task → DVM it was routed to
+    routed: HashMap<u32, u32>,
+    /// in-flight task → nodes of its allocation
+    on_nodes: HashMap<u32, Vec<u32>>,
+    /// shared blacklist consulted before launch (None = no health checks)
+    health: Option<Arc<Mutex<NodeHealth>>>,
 }
 
 impl Executor {
@@ -66,7 +86,16 @@ impl Executor {
             in_flight: 0,
             launched_total: 0,
             failed_total: 0,
+            routed: HashMap::new(),
+            on_nodes: HashMap::new(),
+            health: None,
         })
+    }
+
+    /// Attach the shared health blacklist; `launch` then refuses
+    /// placements touching blacklisted nodes.
+    pub fn set_health(&mut self, health: Arc<Mutex<NodeHealth>>) {
+        self.health = Some(health);
     }
 
     pub fn method_name(&self) -> &'static str {
@@ -129,6 +158,16 @@ impl Executor {
             )));
         }
         let placement = self.place(td, alloc);
+        if let Some(health) = &self.health {
+            let h = health.lock().unwrap();
+            for &node in &placement.nodes {
+                if h.is_node_blacklisted(node) {
+                    return Err(RpError::Launch(format!(
+                        "placement touches blacklisted node {node}"
+                    )));
+                }
+            }
+        }
         self.method.check(&placement)?;
         let dvm = match &mut self.dvms {
             Some(map) => Some(map.route(td.dvm_tag)?),
@@ -141,6 +180,10 @@ impl Executor {
         if sample.failed {
             self.failed_total += 1;
         }
+        if let Some(d) = dvm {
+            self.routed.insert(task_index, d);
+        }
+        self.on_nodes.insert(task_index, placement.nodes.clone());
         Ok(LaunchTicket {
             task_index,
             dvm,
@@ -151,15 +194,19 @@ impl Executor {
 
     /// A launched task finished (successfully or not); frees the
     /// concurrency slot.
-    pub fn complete(&mut self, _ticket: &LaunchTicket) {
+    pub fn complete(&mut self, ticket: &LaunchTicket) {
         assert!(self.in_flight > 0, "complete without launch");
         self.in_flight -= 1;
+        self.routed.remove(&ticket.task_index);
+        self.on_nodes.remove(&ticket.task_index);
     }
 
-    /// Kill a DVM (fault injection / bootstrap failure). Returns the node
-    /// ids lost, so the scheduler can be drained of them.
-    pub fn fail_dvm(&mut self, dvm_id: u32) -> Vec<u32> {
-        if let Some(map) = &mut self.dvms {
+    /// Kill a DVM (fault injection / bootstrap failure). Returns the
+    /// nodes lost — so the scheduler can blacklist them — and the
+    /// in-flight tasks that were routed through the DVM — so the agent
+    /// can resubmit them via the retry path instead of leaking them.
+    pub fn fail_dvm(&mut self, dvm_id: u32) -> DvmFailure {
+        let lost_nodes = if let Some(map) = &mut self.dvms {
             let lost: Vec<u32> = map
                 .dvms
                 .get(dvm_id as usize)
@@ -169,7 +216,36 @@ impl Executor {
             lost
         } else {
             Vec::new()
+        };
+        let mut orphaned_tasks: Vec<u32> = self
+            .routed
+            .iter()
+            .filter(|(_, d)| **d == dvm_id)
+            .map(|(t, _)| *t)
+            .collect();
+        orphaned_tasks.sort_unstable(); // deterministic resubmit order
+        DvmFailure {
+            dvm: dvm_id,
+            lost_nodes,
+            orphaned_tasks,
         }
+    }
+
+    /// A single node died (heartbeat verdict). Returns the in-flight
+    /// tasks whose allocation touches the node, in deterministic order;
+    /// the node is also removed from its DVM's routing set.
+    pub fn fail_node(&mut self, node: u32) -> Vec<u32> {
+        if let Some(map) = &mut self.dvms {
+            map.remove_node(node);
+        }
+        let mut orphans: Vec<u32> = self
+            .on_nodes
+            .iter()
+            .filter(|(_, nodes)| nodes.contains(&node))
+            .map(|(t, _)| *t)
+            .collect();
+        orphans.sort_unstable();
+        orphans
     }
 
     pub fn dvms(&self) -> Option<&DvmMap> {
@@ -241,13 +317,78 @@ mod tests {
         })
         .unwrap();
         let lost = ex.fail_dvm(0);
-        assert_eq!(lost.len(), 256);
+        assert_eq!(lost.dvm, 0);
+        assert_eq!(lost.lost_nodes.len(), 256);
+        assert!(lost.orphaned_tasks.is_empty()); // nothing was in flight
         let mut rng = Rng::new(3);
         for i in 0..4 {
             let t = ex.launch(i, &td(), &alloc(), 512 * 42, &mut rng).unwrap();
             assert_eq!(t.dvm, Some(1));
             ex.complete(&t);
         }
+    }
+
+    #[test]
+    fn dvm_failure_reports_orphaned_tasks() {
+        let mut ex = Executor::new(&ExecutorConfig {
+            launch_method: "prrte".into(),
+            node_ids: (0..512).collect(),
+            nodes_per_dvm: 256,
+            dvm_policy: DvmPolicy::RoundRobin,
+        })
+        .unwrap();
+        let mut rng = Rng::new(9);
+        // round-robin: even indexes land on dvm 0, odd on dvm 1
+        let tickets: Vec<LaunchTicket> = (0..6)
+            .map(|i| ex.launch(i, &td(), &alloc(), 512 * 42, &mut rng).unwrap())
+            .collect();
+        let on0: Vec<u32> = tickets
+            .iter()
+            .filter(|t| t.dvm == Some(0))
+            .map(|t| t.task_index)
+            .collect();
+        // one task on dvm 0 completes before the collapse: not an orphan
+        let finished = tickets.iter().find(|t| t.dvm == Some(0)).unwrap();
+        ex.complete(finished);
+        let f = ex.fail_dvm(0);
+        let expected: Vec<u32> = on0
+            .iter()
+            .copied()
+            .filter(|i| *i != finished.task_index)
+            .collect();
+        assert_eq!(f.orphaned_tasks, expected);
+        assert!(f.orphaned_tasks.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn health_blacklist_blocks_launch() {
+        let mut ex = Executor::new(&ExecutorConfig::simple("mpirun", 4)).unwrap();
+        let health = Arc::new(Mutex::new(NodeHealth::new()));
+        ex.set_health(health.clone());
+        let mut rng = Rng::new(11);
+        assert!(ex.launch(0, &td(), &alloc(), 64, &mut rng).is_ok());
+        health.lock().unwrap().blacklist_node(0);
+        let err = ex.launch(1, &td(), &alloc(), 64, &mut rng);
+        assert!(matches!(err, Err(RpError::Launch(_))));
+        assert_eq!(ex.in_flight(), 1); // refused launch left no residue
+    }
+
+    #[test]
+    fn node_failure_orphans_tasks_touching_it() {
+        let mut ex = Executor::new(&ExecutorConfig::simple("mpirun", 4)).unwrap();
+        let mut rng = Rng::new(12);
+        let t0 = ex.launch(0, &td(), &alloc(), 64, &mut rng).unwrap(); // node 0
+        let other = Allocation {
+            slots: vec![Slot {
+                node_idx: 2,
+                cores: 4,
+                gpus: 0,
+            }],
+        };
+        let _t1 = ex.launch(1, &td(), &other, 64, &mut rng).unwrap(); // node 2
+        assert_eq!(ex.fail_node(0), vec![0]);
+        ex.complete(&t0);
+        assert_eq!(ex.fail_node(2), vec![1]);
     }
 
     #[test]

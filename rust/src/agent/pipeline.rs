@@ -19,16 +19,17 @@
 //! single deterministic RNG/trace stream — the DES determinism tests pin
 //! the exact decision sequence this loop produces.
 
-use std::collections::VecDeque;
-use std::sync::Arc;
+use std::collections::{HashMap, VecDeque};
+use std::sync::{Arc, Mutex};
 
 use crate::mesh::Clock;
+use crate::resilience::{NodeHealth, RetryDecision, RetryPolicy};
 use crate::task::TaskDescription;
 use crate::tracer::{Ev, Tracer};
 use crate::util::error::RpError;
 use crate::util::rng::Rng;
 
-use super::executor::{Executor, LaunchTicket};
+use super::executor::{DvmFailure, Executor, LaunchTicket};
 use super::scheduler::{Allocation, Continuous, ResourceRequest, Scheduler};
 
 /// One scheduling outcome, handed to the mode-specific callback.
@@ -70,16 +71,30 @@ pub struct SchedCore {
     /// first time an allocation failed with tasks still queued (NaN until
     /// then) — the end of the initial scheduling ramp
     t_first_saturation: f64,
+    /// shared node/DVM blacklist (heartbeat monitor writes, we read)
+    health: Arc<Mutex<NodeHealth>>,
+    /// seed for deterministic backoff jitter (DESIGN.md §Resilience)
+    retry_seed: u64,
+    /// completed failed attempts per task (absent = still on attempt 1)
+    attempts: HashMap<u32, u32>,
+    /// first-enqueue time per task (feeds the retry deadline)
+    first_seen: HashMap<u32, f64>,
+    /// backoff gate: do not place before this clock time
+    not_before: HashMap<u32, f64>,
+    n_resubmits: u64,
 }
 
 impl SchedCore {
     pub fn new(
         scheduler: Continuous,
-        executor: Executor,
+        mut executor: Executor,
         clock: Arc<dyn Clock>,
         backfill_window: usize,
         requeue_on_launch_error: bool,
+        retry_seed: u64,
     ) -> SchedCore {
+        let health = Arc::new(Mutex::new(NodeHealth::new()));
+        executor.set_health(health.clone());
         SchedCore {
             scheduler,
             executor,
@@ -89,11 +104,30 @@ impl SchedCore {
             requeue_on_launch_error,
             sched_ok_times: Vec::new(),
             t_first_saturation: f64::NAN,
+            health,
+            retry_seed,
+            attempts: HashMap::new(),
+            first_seen: HashMap::new(),
+            not_before: HashMap::new(),
+            n_resubmits: 0,
         }
     }
 
     /// Add a task (by workload index) to the scheduling queue.
     pub fn enqueue(&mut self, index: u32) {
+        let now = self.clock.now();
+        self.first_seen.entry(index).or_insert(now);
+        self.queue.push_back(index);
+    }
+
+    /// Re-enqueue a retried task behind a backoff gate: it re-enters the
+    /// shared queue immediately but is not placed before `delay_s` passes.
+    pub fn enqueue_after(&mut self, index: u32, delay_s: f64) {
+        let now = self.clock.now();
+        self.first_seen.entry(index).or_insert(now);
+        if delay_s > 0.0 {
+            self.not_before.insert(index, now + delay_s);
+        }
         self.queue.push_back(index);
     }
 
@@ -131,6 +165,70 @@ impl SchedCore {
         self.t_first_saturation
     }
 
+    /// The shared health blacklist (for wiring heartbeat monitors).
+    pub fn health(&self) -> Arc<Mutex<NodeHealth>> {
+        self.health.clone()
+    }
+
+    /// The attempt (1-based) the task is currently on.
+    pub fn current_attempt(&self, index: u32) -> u32 {
+        self.attempts.get(&index).copied().unwrap_or(0) + 1
+    }
+
+    /// Tasks that re-entered the queue via the retry path.
+    pub fn n_resubmits(&self) -> u64 {
+        self.n_resubmits
+    }
+
+    /// Record a failed attempt and ask the policy what to do. On `Retry`
+    /// the attempt counter advances; the caller performs the actual
+    /// re-enqueue (via [`enqueue_after`](Self::enqueue_after) in real
+    /// mode, or a virtual-time resubmit event in the DES harness).
+    pub fn report_failure(&mut self, index: u32, policy: &RetryPolicy) -> RetryDecision {
+        let failed_attempt = self.current_attempt(index);
+        let elapsed = self.clock.now() - self.first_seen.get(&index).copied().unwrap_or(0.0);
+        let decision = policy.decide(failed_attempt, elapsed, self.retry_seed, index);
+        if let RetryDecision::Retry { .. } = decision {
+            self.attempts.insert(index, failed_attempt);
+            self.n_resubmits += 1;
+        }
+        decision
+    }
+
+    /// Blacklist one node everywhere: health map (executor refuses it) and
+    /// scheduler (capacity drained, never placed again).
+    pub fn blacklist_node(&mut self, node: u32) {
+        self.health.lock().unwrap().blacklist_node(node);
+        self.scheduler.blacklist_node(node);
+    }
+
+    /// A DVM collapsed: kill it in the executor, blacklist every node it
+    /// spanned, and return the failure record — `orphaned_tasks` are the
+    /// in-flight tasks the caller must route into the retry path.
+    pub fn fail_dvm(&mut self, dvm: u32) -> DvmFailure {
+        let f = self.executor.fail_dvm(dvm);
+        {
+            let mut h = self.health.lock().unwrap();
+            h.blacklist_dvm(f.dvm);
+            for &n in &f.lost_nodes {
+                h.blacklist_node(n);
+            }
+        }
+        for &n in &f.lost_nodes {
+            self.scheduler.blacklist_node(n);
+        }
+        f
+    }
+
+    /// Pull heartbeat verdicts into the scheduler: every node blacklisted
+    /// since the last pass loses its capacity before placement starts.
+    fn sync_health(&mut self) {
+        let fresh = self.health.lock().unwrap().drain_fresh_nodes();
+        for node in fresh {
+            self.scheduler.blacklist_node(node);
+        }
+    }
+
     /// One scheduling pass: place up to `budget` tasks (the era-rate knob;
     /// `usize::MAX` = drain what fits). Records `TaskSchedOk` /
     /// `TaskExecStart` per placement; everything mode-specific flows
@@ -147,6 +245,7 @@ impl SchedCore {
     where
         F: FnMut(SchedDecision, &mut Rng, &mut Tracer),
     {
+        self.sync_health();
         let now_s = self.clock.now();
         let mut placed = 0usize;
         let mut scanned = 0usize;
@@ -155,6 +254,14 @@ impl SchedCore {
         while placed < budget && scanned < qlen && misses <= self.backfill_window {
             let Some(idx) = self.queue.pop_front() else { break };
             scanned += 1;
+            if let Some(&gate) = self.not_before.get(&idx) {
+                if gate > now_s {
+                    // still backing off: stays queued, not a capacity miss
+                    self.queue.push_back(idx);
+                    continue;
+                }
+                self.not_before.remove(&idx);
+            }
             let td = &descriptions[idx as usize];
             let req = ResourceRequest::from_description(td);
             if !self.scheduler.feasible(&req) {
@@ -220,7 +327,7 @@ mod tests {
         let sched = Continuous::new(nodes, cores, 0);
         let exec = Executor::new(&ExecutorConfig::simple("fork", nodes)).unwrap();
         (
-            SchedCore::new(sched, exec, clock.clone(), 128, true),
+            SchedCore::new(sched, exec, clock.clone(), 128, true, 0),
             clock,
         )
     }
@@ -302,5 +409,87 @@ mod tests {
         let placed = c.schedule(&ds, 16, 1, &mut rng, &mut tr, |_, _, _| {});
         assert_eq!(placed, 1);
         assert_eq!(c.queue_len(), 7);
+    }
+
+    #[test]
+    fn report_failure_walks_the_policy_then_gives_up() {
+        use crate::resilience::{RetryDecision, RetryPolicy};
+        let (mut c, _) = core(1, 4);
+        c.enqueue(0);
+        let mut policy = RetryPolicy::transient(3);
+        policy.jitter_frac = 0.0;
+        assert_eq!(c.current_attempt(0), 1);
+        match c.report_failure(0, &policy) {
+            RetryDecision::Retry { attempt, delay_s } => {
+                assert_eq!(attempt, 2);
+                assert!((delay_s - 1.0).abs() < 1e-12);
+            }
+            _ => panic!("expected retry"),
+        }
+        assert_eq!(c.current_attempt(0), 2);
+        assert!(matches!(c.report_failure(0, &policy), RetryDecision::Retry { attempt: 3, .. }));
+        assert_eq!(
+            c.report_failure(0, &policy),
+            RetryDecision::GiveUp { attempts: 3 }
+        );
+        assert_eq!(c.current_attempt(0), 3); // give-up starts no new attempt
+        assert_eq!(c.n_resubmits(), 2);
+    }
+
+    #[test]
+    fn backoff_gate_defers_placement_until_the_clock_passes() {
+        let (mut c, clock) = core(1, 4);
+        let ds = descs(1, 1);
+        let mut rng = Rng::new(1);
+        let mut tr = Tracer::new(true);
+        clock.set(10.0);
+        c.enqueue_after(0, 5.0); // eligible at t=15
+        assert_eq!(c.schedule(&ds, 4, usize::MAX, &mut rng, &mut tr, |_, _, _| {}), 0);
+        assert_eq!(c.queue_len(), 1); // deferred, not dropped
+        clock.set(14.9);
+        assert_eq!(c.schedule(&ds, 4, usize::MAX, &mut rng, &mut tr, |_, _, _| {}), 0);
+        clock.set(15.0);
+        assert_eq!(c.schedule(&ds, 4, usize::MAX, &mut rng, &mut tr, |_, _, _| {}), 1);
+        assert!(c.queue_is_empty());
+    }
+
+    #[test]
+    fn fail_dvm_blacklists_nodes_and_reports_orphans() {
+        let clock = Arc::new(VirtualClock::new());
+        let sched = Continuous::new(8, 4, 0);
+        let exec = Executor::new(&crate::agent::executor::ExecutorConfig {
+            launch_method: "prrte".into(),
+            node_ids: (0..8).collect(),
+            nodes_per_dvm: 4,
+            dvm_policy: crate::launch::prrte::DvmPolicy::RoundRobin,
+        })
+        .unwrap();
+        let mut c = SchedCore::new(sched, exec, clock, 128, true, 0);
+        let ds = descs(4, 4);
+        for i in 0..4 {
+            c.enqueue(i);
+        }
+        let mut rng = Rng::new(1);
+        let mut tr = Tracer::new(true);
+        let mut live = Vec::new();
+        c.schedule(&ds, 32, usize::MAX, &mut rng, &mut tr, |d, _, _| {
+            if let SchedDecision::Launched { index, alloc, ticket, .. } = d {
+                live.push((index, alloc, ticket));
+            }
+        });
+        assert_eq!(live.len(), 4);
+        let f = c.fail_dvm(0);
+        assert_eq!(f.lost_nodes, vec![0, 1, 2, 3]);
+        // round-robin routed even indexes through dvm 0
+        assert_eq!(f.orphaned_tasks, vec![0, 2]);
+        assert!(c.health().lock().unwrap().is_node_blacklisted(2));
+        // orphans release without resurrecting dead capacity
+        let free_before = c.scheduler_mut().free_cores();
+        for (i, alloc, ticket) in &live {
+            if f.orphaned_tasks.contains(i) {
+                c.release(alloc, ticket);
+            }
+        }
+        assert_eq!(c.scheduler_mut().free_cores(), free_before);
     }
 }

@@ -26,6 +26,10 @@ pub struct Continuous {
     free_cores: u64,
     free_gpus: u64,
     cursor: usize,
+    /// dead nodes (heartbeat verdict or DVM collapse): capacity drained,
+    /// releases swallowed, excluded from feasibility
+    blacklisted: Vec<bool>,
+    n_blacklisted: usize,
 }
 
 impl Continuous {
@@ -44,11 +48,22 @@ impl Continuous {
             free_cores: n_nodes as u64 * cores_per_node as u64,
             free_gpus: n_nodes as u64 * gpus_per_node as u64,
             cursor: 0,
+            blacklisted: vec![false; n_nodes as usize],
+            n_blacklisted: 0,
         }
     }
 
     fn n_nodes(&self) -> usize {
         self.free.len()
+    }
+
+    /// Nodes still eligible for placement.
+    pub fn n_alive_nodes(&self) -> usize {
+        self.n_nodes() - self.n_blacklisted
+    }
+
+    pub fn is_blacklisted(&self, node: u32) -> bool {
+        self.blacklisted[node as usize]
     }
 
     pub fn cores_per_node(&self) -> u32 {
@@ -59,10 +74,18 @@ impl Continuous {
         self.gpus_per_node
     }
 
-    /// Permanently remove a node's remaining capacity (DVM failure: the
-    /// nodes are lost to the pilot; RP's fault tolerance keeps executing
-    /// on the remaining resources — §IV-D). Returns (cores, gpus) drained.
-    pub fn drain_node(&mut self, node: u32) -> (u32, u32) {
+    /// Permanently remove a node from placement (heartbeat verdict or DVM
+    /// failure: the nodes are lost to the pilot; RP's fault tolerance
+    /// keeps executing on the remaining resources — §IV-D). Remaining
+    /// capacity is drained, later releases of in-flight work on the node
+    /// are swallowed, and feasibility counts only alive nodes. Idempotent;
+    /// returns the (cores, gpus) drained.
+    pub fn blacklist_node(&mut self, node: u32) -> (u32, u32) {
+        if self.blacklisted[node as usize] {
+            return (0, 0);
+        }
+        self.blacklisted[node as usize] = true;
+        self.n_blacklisted += 1;
         let nf = &mut self.free[node as usize];
         let c = nf.cores;
         let g = nf.gpus;
@@ -71,6 +94,11 @@ impl Continuous {
         self.free_cores -= c as u64;
         self.free_gpus -= g as u64;
         (c, g)
+    }
+
+    /// Back-compat alias: draining a node now blacklists it.
+    pub fn drain_node(&mut self, node: u32) -> (u32, u32) {
+        self.blacklist_node(node)
     }
 
     /// Allocate the whole request on one specific node (Tagged pinning).
@@ -201,6 +229,11 @@ impl Scheduler for Continuous {
 
     fn release(&mut self, alloc: &Allocation) {
         for s in &alloc.slots {
+            if self.blacklisted[s.node_idx as usize] {
+                // dead capacity never resurrects: a task completing (or
+                // being reaped) on a blacklisted node frees nothing
+                continue;
+            }
             let nf = &mut self.free[s.node_idx as usize];
             nf.cores += s.cores;
             nf.gpus += s.gpus;
@@ -252,7 +285,9 @@ impl Scheduler for Continuous {
             self.gpus_per_node / req.gpus_per_rank
         };
         let ranks_per_node = by_cores.min(by_gpus) as u64;
-        req.ranks as u64 <= ranks_per_node * self.n_nodes() as u64
+        // only alive nodes count: a task that needs more than the
+        // surviving capacity is infeasible, not queued forever
+        req.ranks as u64 <= ranks_per_node * self.n_alive_nodes() as u64
     }
 }
 
@@ -359,5 +394,52 @@ mod tests {
         let a = s.try_allocate(&req(1, 4, 0, false)).unwrap();
         s.release(&a);
         s.release(&a); // over-fill panics
+    }
+
+    #[test]
+    fn blacklisted_node_is_never_chosen() {
+        let mut s = Continuous::new(4, 8, 0);
+        let (c, g) = s.blacklist_node(1);
+        assert_eq!((c, g), (8, 0));
+        assert!(s.is_blacklisted(1));
+        assert_eq!(s.n_alive_nodes(), 3);
+        assert_eq!(s.blacklist_node(1), (0, 0)); // idempotent
+        assert_eq!(s.n_alive_nodes(), 3);
+        // hundreds of placements: node 1 never appears
+        let mut allocs = Vec::new();
+        for _ in 0..300 {
+            if let Some(a) = s.try_allocate(&req(1, 4, 0, false)) {
+                assert!(a.nodes().iter().all(|&n| n != 1));
+                allocs.push(a);
+            } else {
+                for a in allocs.drain(..) {
+                    s.release(&a);
+                }
+            }
+        }
+        // multi-node MPI packs around the dead node too
+        for a in allocs.drain(..) {
+            s.release(&a);
+        }
+        let a = s.try_allocate(&req(3, 8, 0, true)).unwrap();
+        let nodes = a.nodes();
+        assert_eq!(nodes.len(), 3);
+        assert!(nodes.iter().all(|&n| n != 1));
+        // pinned placement on the dead node refuses
+        assert!(s.try_allocate_on_node(1, &req(1, 1, 0, false)).is_none());
+    }
+
+    #[test]
+    fn release_after_blacklist_does_not_resurrect_capacity() {
+        let mut s = Continuous::new(2, 4, 0);
+        let a = s.try_allocate(&req(1, 4, 0, false)).unwrap();
+        let node = a.slots[0].node_idx;
+        s.blacklist_node(node);
+        let free_before = s.free_cores();
+        s.release(&a); // in-flight work reaped off a dead node
+        assert_eq!(s.free_cores(), free_before);
+        assert!(s.try_allocate(&req(2, 4, 0, true)).is_none()); // only 1 node alive
+        assert!(!s.feasible(&req(2, 4, 0, true)));
+        assert!(s.feasible(&req(1, 4, 0, false)));
     }
 }

@@ -15,9 +15,11 @@
 //!   {"op":"pending","pilot":P}                                → {"pending":n}
 
 use std::io::{BufRead, BufReader, Write};
-use std::net::{TcpListener, TcpStream};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
+use crate::resilience::RetryPolicy;
 use crate::task::TaskState;
 use crate::util::json::Json;
 
@@ -46,9 +48,10 @@ fn state_parse(s: &str) -> TaskState {
 
 /// The server: wraps a shared `Db`, one thread per connection.
 pub struct DbServer {
-    pub addr: std::net::SocketAddr,
+    pub addr: SocketAddr,
     db: Arc<Db>,
     shutdown: Arc<std::sync::atomic::AtomicBool>,
+    dropped: Arc<AtomicU64>,
 }
 
 impl DbServer {
@@ -57,23 +60,29 @@ impl DbServer {
         let listener = TcpListener::bind("127.0.0.1:0")?;
         let addr = listener.local_addr()?;
         let shutdown = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let dropped = Arc::new(AtomicU64::new(0));
         let db2 = db.clone();
         let stop = shutdown.clone();
+        let drops = dropped.clone();
         std::thread::spawn(move || {
             listener.set_nonblocking(true).ok();
             loop {
-                if stop.load(std::sync::atomic::Ordering::Relaxed) {
+                if stop.load(Ordering::Relaxed) {
                     break;
                 }
                 match listener.accept() {
                     Ok((stream, _)) => {
                         let db = db2.clone();
-                        std::thread::spawn(move || serve_conn(stream, db));
+                        let drops = drops.clone();
+                        std::thread::spawn(move || serve_conn(stream, db, drops));
                     }
                     Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                         std::thread::sleep(std::time::Duration::from_millis(5));
                     }
-                    Err(_) => break,
+                    Err(e) => {
+                        eprintln!("db server: accept failed, listener closing: {e}");
+                        break;
+                    }
                 }
             }
         });
@@ -81,35 +90,52 @@ impl DbServer {
             addr,
             db,
             shutdown,
+            dropped,
         })
     }
 
+    /// Connections that ended on an I/O error (as opposed to a clean EOF).
+    /// Exposed so operators / tests can distinguish "client went away
+    /// mid-request" from normal session teardown.
+    pub fn dropped_connections(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
     pub fn stop(&self) {
-        self.shutdown
-            .store(true, std::sync::atomic::Ordering::Relaxed);
+        self.shutdown.store(true, Ordering::Relaxed);
         self.db.close();
     }
 }
 
-fn serve_conn(stream: TcpStream, db: Arc<Db>) {
-    let mut writer = match stream.try_clone() {
-        Ok(w) => w,
-        Err(_) => return,
-    };
+/// Per-connection wrapper: the inner loop surfaces I/O failures as
+/// `io::Error` instead of silently swallowing them; this layer counts the
+/// drop and logs it exactly once per connection.
+fn serve_conn(stream: TcpStream, db: Arc<Db>, dropped: Arc<AtomicU64>) {
+    let peer = stream
+        .peer_addr()
+        .map(|a| a.to_string())
+        .unwrap_or_else(|_| "<unknown>".into());
+    if let Err(e) = serve_conn_inner(stream, &db) {
+        dropped.fetch_add(1, Ordering::Relaxed);
+        eprintln!("db server: connection from {peer} dropped: {e}");
+    }
+}
+
+fn serve_conn_inner(stream: TcpStream, db: &Db) -> std::io::Result<()> {
+    let mut writer = stream.try_clone()?;
     let reader = BufReader::new(stream);
     for line in reader.lines() {
-        let Ok(line) = line else { break };
+        let line = line?;
         if line.trim().is_empty() {
             continue;
         }
         let resp = match Json::parse(&line) {
-            Ok(req) => handle(&req, &db),
+            Ok(req) => handle(&req, db),
             Err(e) => Json::obj(vec![("error", Json::Str(format!("bad request: {e}")))]),
         };
-        if writeln!(writer, "{resp}").is_err() {
-            break;
-        }
+        writeln!(writer, "{resp}")?;
     }
+    Ok(()) // clean EOF: the client closed its end
 }
 
 fn handle(req: &Json, db: &Db) -> Json {
@@ -170,26 +196,111 @@ fn handle(req: &Json, db: &Db) -> Json {
 }
 
 /// The client side: what a remote Agent / TaskManager holds.
+///
+/// The paper's deployment keeps this link up for the lifetime of a run
+/// (§III-A); a dropped DB connection used to surface only as a parse
+/// error downstream. The client now remembers its address and an optional
+/// `RetryPolicy`, reconnecting with deterministic exponential backoff when
+/// a call fails mid-stream.
 pub struct DbClient {
+    addr: SocketAddr,
+    retry: RetryPolicy,
+    reconnects: u64,
     writer: TcpStream,
     reader: BufReader<TcpStream>,
 }
 
 impl DbClient {
-    pub fn connect(addr: std::net::SocketAddr) -> std::io::Result<DbClient> {
-        let stream = TcpStream::connect(addr)?;
-        stream.set_nodelay(true).ok();
-        let reader = BufReader::new(stream.try_clone()?);
+    pub fn connect(addr: SocketAddr) -> std::io::Result<DbClient> {
+        let (writer, reader) = Self::open(addr)?;
         Ok(DbClient {
-            writer: stream,
+            addr,
+            retry: RetryPolicy::none(),
+            reconnects: 0,
+            writer,
             reader,
         })
     }
 
+    /// Connect to a server that may not be listening yet, retrying with the
+    /// policy's backoff schedule (the seed/task inputs are fixed so the
+    /// schedule is deterministic for a given address).
+    pub fn connect_with_retry(addr: SocketAddr, retry: RetryPolicy) -> std::io::Result<DbClient> {
+        let mut attempt = 1u32;
+        loop {
+            match Self::open(addr) {
+                Ok((writer, reader)) => {
+                    return Ok(DbClient {
+                        addr,
+                        retry,
+                        reconnects: 0,
+                        writer,
+                        reader,
+                    })
+                }
+                Err(e) => {
+                    if attempt >= retry.max_attempts.max(1) {
+                        return Err(e);
+                    }
+                    let delay = retry.backoff_s(attempt + 1, 0, addr.port() as u32);
+                    std::thread::sleep(std::time::Duration::from_secs_f64(delay));
+                    attempt += 1;
+                }
+            }
+        }
+    }
+
+    /// Adopt a retry policy for subsequent `call`s: on an I/O failure the
+    /// client re-dials the server and replays the request.
+    pub fn with_retry(mut self, retry: RetryPolicy) -> DbClient {
+        self.retry = retry;
+        self
+    }
+
+    /// How many times this client has had to re-dial the server.
+    pub fn reconnects(&self) -> u64 {
+        self.reconnects
+    }
+
+    fn open(addr: SocketAddr) -> std::io::Result<(TcpStream, BufReader<TcpStream>)> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true).ok();
+        let reader = BufReader::new(stream.try_clone()?);
+        Ok((stream, reader))
+    }
+
     fn call(&mut self, req: Json) -> std::io::Result<Json> {
+        let mut attempt = 1u32;
+        loop {
+            match self.try_call(&req) {
+                Ok(resp) => return Ok(resp),
+                Err(e) => {
+                    if attempt >= self.retry.max_attempts.max(1) {
+                        return Err(e);
+                    }
+                    let delay = self.retry.backoff_s(attempt + 1, 0, self.addr.port() as u32);
+                    std::thread::sleep(std::time::Duration::from_secs_f64(delay));
+                    if let Ok((writer, reader)) = Self::open(self.addr) {
+                        self.writer = writer;
+                        self.reader = reader;
+                        self.reconnects += 1;
+                    }
+                    attempt += 1;
+                }
+            }
+        }
+    }
+
+    fn try_call(&mut self, req: &Json) -> std::io::Result<Json> {
         writeln!(self.writer, "{req}")?;
         let mut line = String::new();
-        self.reader.read_line(&mut line)?;
+        let n = self.reader.read_line(&mut line)?;
+        if n == 0 {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::UnexpectedEof,
+                "db server closed the connection",
+            ));
+        }
         Json::parse(&line).map_err(|e| {
             std::io::Error::new(std::io::ErrorKind::InvalidData, format!("bad response: {e}"))
         })
@@ -350,6 +461,95 @@ mod tests {
             .read_line(&mut line)
             .unwrap();
         assert!(line.contains("unknown op"));
+        server.stop();
+    }
+
+    fn fast_retry(max_attempts: u32) -> RetryPolicy {
+        RetryPolicy {
+            max_attempts,
+            backoff_base_s: 0.01,
+            backoff_factor: 1.0,
+            backoff_max_s: 0.05,
+            jitter_frac: 0.0,
+            deadline_s: 0.0,
+        }
+    }
+
+    #[test]
+    fn connect_with_retry_waits_for_late_server() {
+        // Reserve an ephemeral port, release it, and bring the listener up
+        // only after the client has started dialing.
+        let probe = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = probe.local_addr().unwrap();
+        drop(probe);
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(std::time::Duration::from_millis(60));
+            TcpListener::bind(addr).unwrap()
+        });
+        let client = DbClient::connect_with_retry(addr, fast_retry(50));
+        let _listener = h.join().unwrap();
+        assert!(client.is_ok(), "client should dial until the server is up");
+        // an immediate single-attempt connect to a dead port still errors
+        let probe = TcpListener::bind("127.0.0.1:0").unwrap();
+        let dead = probe.local_addr().unwrap();
+        drop(probe);
+        assert!(DbClient::connect_with_retry(dead, fast_retry(1)).is_err());
+    }
+
+    #[test]
+    fn call_reconnects_after_connection_drop() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let h = std::thread::spawn(move || {
+            // first connection: accepted, then dropped before answering
+            let (c1, _) = listener.accept().unwrap();
+            drop(c1);
+            // second connection: serve exactly one request
+            let (c2, _) = listener.accept().unwrap();
+            let mut w = c2.try_clone().unwrap();
+            let mut r = BufReader::new(c2);
+            let mut line = String::new();
+            r.read_line(&mut line).unwrap();
+            writeln!(w, r#"{{"pending":3}}"#).unwrap();
+        });
+        let mut client = DbClient::connect(addr).unwrap().with_retry(fast_retry(5));
+        assert_eq!(client.pending("p").unwrap(), 3);
+        assert!(client.reconnects() >= 1, "the dropped link forced a re-dial");
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn without_retry_a_dropped_connection_is_an_unexpected_eof() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let h = std::thread::spawn(move || {
+            let (c, _) = listener.accept().unwrap();
+            drop(c); // hang up without answering
+        });
+        let mut client = DbClient::connect(addr).unwrap();
+        h.join().unwrap();
+        let err = client.pending("p").expect_err("dead link must error");
+        // either the read sees EOF or the write sees a reset — both are
+        // I/O errors now, never a silent empty parse
+        assert!(
+            err.kind() == std::io::ErrorKind::UnexpectedEof
+                || err.kind() == std::io::ErrorKind::BrokenPipe
+                || err.kind() == std::io::ErrorKind::ConnectionReset,
+            "unexpected error kind: {:?}",
+            err.kind()
+        );
+    }
+
+    #[test]
+    fn clean_disconnect_is_not_counted_as_dropped() {
+        let db = Arc::new(Db::new());
+        let server = DbServer::start(db).unwrap();
+        {
+            let mut client = DbClient::connect(server.addr).unwrap();
+            assert_eq!(client.pending("p").unwrap(), 0);
+        } // client hangs up cleanly
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        assert_eq!(server.dropped_connections(), 0);
         server.stop();
     }
 

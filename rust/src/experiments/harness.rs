@@ -25,6 +25,10 @@ use crate::agent::scheduler::{Allocation, Continuous};
 use crate::launch::prrte::{DvmPolicy, Prrte};
 use crate::mesh::VirtualClock;
 use crate::platform::{Platform, PlatformKind, SharedFs};
+use crate::resilience::{
+    Beat, FaultEvent, FaultInjector, FaultKind, FaultSpec, HealthEvent, HeartbeatMonitor,
+    RetryDecision, RetryPolicy,
+};
 use crate::sim::{secs, Engine};
 use crate::task::TaskDescription;
 use crate::tracer::{Ev, Tracer};
@@ -53,6 +57,12 @@ pub struct SimConfig {
     /// O(queue) — the §Perf fix that took exp-4 regeneration from 452 s
     /// to seconds (EXPERIMENTS.md §Perf).
     pub backfill_window: usize,
+    /// deterministic fault injection (None → no faults, no heartbeat
+    /// machinery — byte-identical to the pre-resilience harness)
+    pub faults: Option<FaultSpec>,
+    /// retry policy override for every task (None → each task's own
+    /// `TaskDescription::retry`, which defaults to no retries)
+    pub retry: Option<RetryPolicy>,
 }
 
 impl SimConfig {
@@ -69,6 +79,8 @@ impl SimConfig {
             dvm_failures: false,
             agent_nodes: 0,
             backfill_window: 128,
+            faults: None,
+            retry: None,
         }
     }
 }
@@ -97,6 +109,12 @@ pub struct SimOutcome {
     pub sched_span: f64,
     /// first sched-ok → last sched-ok, including later generations
     pub sched_span_full: f64,
+    /// failed attempts that re-entered the scheduler queue via retry
+    pub n_resubmitted: usize,
+    /// tasks that experienced at least one failed attempt
+    pub n_affected: usize,
+    /// affected tasks that nevertheless reached Done
+    pub n_recovered: usize,
 }
 
 #[derive(Clone, Copy, Debug)]
@@ -106,6 +124,12 @@ enum SimEv {
     Prepared(u32),
     RunDone(u32),
     Acked(u32),
+    /// an injected fault fires
+    Fault(FaultEvent),
+    /// periodic heartbeat round: alive nodes beat, the monitor checks
+    HealthCheck,
+    /// a retried task re-enters the scheduler queue after its backoff
+    Resubmit(u32),
 }
 
 struct InFlight {
@@ -166,7 +190,25 @@ impl AgentSim {
             vclock.clone(),
             cfg.backfill_window,
             /* requeue_on_launch_error */ true,
+            cfg.seed,
         );
+
+        // heartbeat detection, only when faults are injected: simulated
+        // nodes beat every interval, the *same* HeartbeatMonitor the
+        // real-mode Agent spawns turns silence into blacklist verdicts
+        let hb_interval = cfg
+            .faults
+            .as_ref()
+            .map(|s| s.heartbeat_interval_s.max(1e-3))
+            .unwrap_or(0.0);
+        let mut monitor = cfg.faults.as_ref().map(|spec| {
+            HeartbeatMonitor::new(
+                vclock.clone(),
+                spec.heartbeat_interval_s.max(1e-3),
+                spec.missed_threshold,
+                core.health(),
+            )
+        });
 
         // shared-FS capacity degrades with client (node) count — the
         // §IV-D finding: "the distributed filesystem … was not designed
@@ -192,6 +234,12 @@ impl AgentSim {
         let mut tick_scheduled = false;
         let mut t_bootstrap_done = 0.0;
         let mut t_last_terminal = 0.0;
+        // resilience bookkeeping
+        let mut node_alive = vec![true; sched_nodes as usize];
+        let mut affected = vec![false; n];
+        let mut n_resubmitted = 0usize;
+        let mut n_recovered = 0usize;
+        let mut db_stalled_until = 0.0f64;
 
         // task-failure model needs the Prrte parameters even though the
         // executor owns the method object
@@ -226,12 +274,23 @@ impl AgentSim {
                 SimEv::BootstrapDone => {
                     t_bootstrap_done = now_s;
                     tracer.rec(now_s, 0, Ev::AgentBootstrapDone);
-                    // DVM deaths materialize here
+                    // DVM deaths materialize here; nothing is in flight
+                    // yet, so the failure record carries no orphans
                     for d in dvm_deaths.clone() {
                         tracer.rec(now_s, d, Ev::DvmFailed);
-                        for node in core.executor_mut().fail_dvm(d) {
-                            core.scheduler_mut().drain_node(node);
+                        let _ = core.fail_dvm(d);
+                    }
+                    // seeded fault schedule: times are relative to
+                    // bootstrap so the window lands on running tasks
+                    if let Some(spec) = &cfg.faults {
+                        let n_dvms = sched_nodes.div_ceil(cfg.nodes_per_dvm);
+                        let injector =
+                            FaultInjector::from_spec(spec, cfg.seed, sched_nodes, n_dvms);
+                        for fault in injector.schedule() {
+                            engine.schedule_in_secs(fault.t, SimEv::Fault(*fault));
                         }
+                        // first heartbeat round registers every node
+                        engine.schedule_in_secs(0.0, SimEv::HealthCheck);
                     }
                     // bulk DB pull: all tasks enter the scheduler queue
                     for i in 0..n {
@@ -244,6 +303,16 @@ impl AgentSim {
                 }
 
                 SimEv::SchedTick => {
+                    if now_s < db_stalled_until {
+                        // control plane stalled (injected DB-bridge
+                        // fault): defer the whole pass; the tick stays
+                        // armed so no wake-up is lost
+                        engine.schedule_in_secs(
+                            (db_stalled_until - now_s).max(1e-6),
+                            SimEv::SchedTick,
+                        );
+                        continue;
+                    }
                     tick_scheduled = false;
                     // one scheduling decision per tick at the era rate;
                     // native (rate 0) drains the queue in one event.
@@ -332,17 +401,120 @@ impl AgentSim {
                     tracer.rec(now_s, idx, Ev::TaskSpawnReturn);
                     core.release(&fl.alloc, &fl.ticket);
                     if fl.failed {
-                        tracer.rec(now_s, idx, Ev::TaskFailed);
-                        n_failed += 1;
+                        // the attempt is lost; the retry policy decides
+                        // whether the task re-enters the queue or dies.
+                        // With the default no-retry policy this reduces
+                        // to the pre-resilience terminal failure.
+                        affected[idx as usize] = true;
+                        let policy = cfg.retry.unwrap_or(tasks[idx as usize].retry);
+                        match core.report_failure(idx, &policy) {
+                            RetryDecision::Retry { delay_s, .. } => {
+                                tracer.rec(now_s, idx, Ev::TaskResubmit);
+                                n_resubmitted += 1;
+                                engine.schedule_in_secs(delay_s.max(1e-3), SimEv::Resubmit(idx));
+                            }
+                            RetryDecision::GiveUp { .. } => {
+                                tracer.rec(now_s, idx, Ev::TaskFailed);
+                                n_failed += 1;
+                                terminal[idx as usize] = true;
+                                t_last_terminal = now_s;
+                            }
+                        }
                     } else {
                         tracer.rec(now_s, idx, Ev::TaskDone);
                         n_done += 1;
+                        if affected[idx as usize] {
+                            n_recovered += 1;
+                        }
+                        terminal[idx as usize] = true;
+                        t_last_terminal = now_s;
                     }
-                    terminal[idx as usize] = true;
-                    t_last_terminal = now_s;
                     if !core.queue_is_empty() && !tick_scheduled {
                         engine.schedule_in_secs(sched_cost, SimEv::SchedTick);
                         tick_scheduled = true;
+                    }
+                }
+
+                SimEv::Resubmit(idx) => {
+                    tracer.rec(now_s, idx, Ev::TaskSchedQueue);
+                    core.enqueue(idx);
+                    if !tick_scheduled {
+                        engine.schedule_in_secs(sched_cost, SimEv::SchedTick);
+                        tick_scheduled = true;
+                    }
+                }
+
+                SimEv::Fault(fault) => match fault.kind {
+                    FaultKind::NodeDeath { node } => {
+                        // the node falls silent; the heartbeat monitor
+                        // declares it dead after the missed-beat deadline
+                        if let Some(alive) = node_alive.get_mut(node as usize) {
+                            *alive = false;
+                        }
+                    }
+                    FaultKind::DvmCollapse { dvm } => {
+                        tracer.rec(now_s, dvm, Ev::DvmFailed);
+                        let f = core.fail_dvm(dvm);
+                        for node in &f.lost_nodes {
+                            if let Some(alive) = node_alive.get_mut(*node as usize) {
+                                *alive = false;
+                            }
+                        }
+                        // in-flight tasks on the collapsed DVM never
+                        // complete; their acks report failure
+                        for orphan in f.orphaned_tasks {
+                            if let Some(fl) = inflight[orphan as usize].as_mut() {
+                                fl.failed = true;
+                            }
+                        }
+                    }
+                    FaultKind::TaskCrash { ordinal } => {
+                        let running: Vec<usize> = inflight
+                            .iter()
+                            .enumerate()
+                            .filter(|(_, fl)| fl.as_ref().is_some_and(|f| !f.failed))
+                            .map(|(i, _)| i)
+                            .collect();
+                        if !running.is_empty() {
+                            let victim = running[ordinal as usize % running.len()];
+                            inflight[victim].as_mut().unwrap().failed = true;
+                        }
+                    }
+                    FaultKind::DbStall { duration_s } => {
+                        tracer.rec(now_s, 0, Ev::DbStall);
+                        db_stalled_until = db_stalled_until.max(now_s + duration_s);
+                    }
+                },
+
+                SimEv::HealthCheck => {
+                    if let Some(m) = monitor.as_mut() {
+                        for node in 0..sched_nodes {
+                            if node_alive[node as usize] {
+                                m.beat(&Beat {
+                                    source: format!("node.{node}"),
+                                    t: now_s,
+                                });
+                            }
+                        }
+                        for verdict in m.check(now_s) {
+                            let HealthEvent::SourceDead { source, .. } = verdict;
+                            let Some(node) = source
+                                .strip_prefix("node.")
+                                .and_then(|s| s.parse::<u32>().ok())
+                            else {
+                                continue;
+                            };
+                            tracer.rec(now_s, node, Ev::NodeFailed);
+                            core.blacklist_node(node);
+                            for orphan in core.executor_mut().fail_node(node) {
+                                if let Some(fl) = inflight[orphan as usize].as_mut() {
+                                    fl.failed = true;
+                                }
+                            }
+                        }
+                        if n_done + n_failed < n {
+                            engine.schedule_in_secs(hb_interval, SimEv::HealthCheck);
+                        }
                     }
                 }
             }
@@ -381,8 +553,41 @@ impl AgentSim {
             n_failed,
             sched_span,
             sched_span_full,
+            n_resubmitted,
+            n_affected: affected.iter().filter(|&&a| a).count(),
+            n_recovered,
         }
     }
+}
+
+/// The CI fault-injection smoke scenario: a Summit-class pilot carved
+/// into 16 DVMs (as on the paper's 4097-node run), the observed 2-of-16
+/// DVM collapse plus node deaths, task crashes and a DB stall, under a
+/// transient-failure retry policy. Deterministic for a fixed seed —
+/// `rp fault-smoke` runs it twice and compares traces byte-for-byte.
+pub fn fault_smoke(seed: u64) -> SimOutcome {
+    let mut cfg = SimConfig::new(PlatformKind::Summit, 128);
+    cfg.sched_rate = 0.0;
+    cfg.nodes_per_dvm = 8; // 16 DVMs
+    cfg.seed = seed;
+    cfg.launch_method = Some("prrte".into());
+    cfg.task_failures = true; // paper's pressure model (inert below onset)
+    cfg.faults = Some(FaultSpec {
+        n_node_deaths: 2,
+        n_dvm_collapses: 2,
+        n_task_crashes: 8,
+        n_db_stalls: 1,
+        window_start_s: 30.0,
+        window_end_s: 120.0,
+        ..FaultSpec::default()
+    });
+    cfg.retry = Some(RetryPolicy::transient(3));
+    // enough 1–4-core tasks to keep nearly every node busy through the
+    // fault window, so collapses reliably orphan running work
+    let tasks: Vec<TaskDescription> = (0..2048)
+        .map(|i| TaskDescription::emulated("synth", 1, 1 + (i % 4) as u32, 200.0))
+        .collect();
+    AgentSim::new(cfg).run(&tasks)
 }
 
 #[cfg(test)]
@@ -452,6 +657,67 @@ mod tests {
         let b = AgentSim::new(cfg).run(&homog(32, 32, 828.0));
         assert_eq!(a.ttx, b.ttx);
         assert_eq!(a.tracer.len(), b.tracer.len());
+    }
+
+    #[test]
+    fn seeded_faults_recover_and_replay_identically() {
+        let a = fault_smoke(7);
+        let b = fault_smoke(7);
+        assert_eq!(
+            a.tracer.to_csv(),
+            b.tracer.to_csv(),
+            "same seed must replay a byte-identical recovery trace"
+        );
+        assert_eq!(a.n_done + a.n_failed, 2048);
+        assert!(a.n_affected > 0, "faults must hit running tasks");
+        assert!(a.n_resubmitted > 0, "retry policy must resubmit");
+        assert!(
+            a.n_recovered as f64 >= 0.95 * a.n_affected as f64,
+            "recovered {} of {} affected tasks",
+            a.n_recovered,
+            a.n_affected
+        );
+        // a different seed plays a different schedule
+        let c = fault_smoke(8);
+        assert_ne!(a.tracer.to_csv(), c.tracer.to_csv());
+    }
+
+    #[test]
+    fn faults_disabled_leaves_legacy_runs_untouched() {
+        // cfg.faults = None must not change a single trace byte relative
+        // to an identical config (no heartbeat events, no extra RNG)
+        let mut cfg = SimConfig::new(PlatformKind::Titan, 64);
+        cfg.sched_rate = 6.0;
+        let a = AgentSim::new(cfg.clone()).run(&homog(32, 32, 828.0));
+        let b = AgentSim::new(cfg).run(&homog(32, 32, 828.0));
+        assert_eq!(a.tracer.to_csv(), b.tracer.to_csv());
+        assert_eq!(a.n_resubmitted, 0);
+        assert_eq!(a.n_affected, 0);
+    }
+
+    #[test]
+    fn scripted_db_stall_delays_scheduling() {
+        use crate::resilience::{FaultEvent, FaultKind};
+        let mut base = SimConfig::new(PlatformKind::Titan, 64);
+        base.sched_rate = 6.0;
+        let clean = AgentSim::new(base.clone()).run(&homog(32, 32, 100.0));
+        let mut stalled_cfg = base;
+        stalled_cfg.faults = Some(FaultSpec {
+            scripted: vec![FaultEvent {
+                t: 0.5,
+                kind: FaultKind::DbStall { duration_s: 30.0 },
+            }],
+            ..FaultSpec::default()
+        });
+        let stalled = AgentSim::new(stalled_cfg).run(&homog(32, 32, 100.0));
+        assert!(stalled.tracer.of_kind(Ev::DbStall).len() == 1);
+        assert_eq!(stalled.n_done, 32);
+        assert!(
+            stalled.ttx > clean.ttx + 10.0,
+            "stall must delay the workload: {} vs {}",
+            stalled.ttx,
+            clean.ttx
+        );
     }
 
     #[test]

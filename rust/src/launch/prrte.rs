@@ -106,6 +106,30 @@ impl DvmMap {
         }
     }
 
+    /// Which DVM spans `node`, dead or alive.
+    pub fn dvm_of_node(&self, node: u32) -> Option<u32> {
+        self.dvms
+            .iter()
+            .find(|d| d.nodes.contains(&node))
+            .map(|d| d.id)
+    }
+
+    /// Remove a single dead node from its DVM's routing set (heartbeat
+    /// verdict). A DVM that loses all its nodes is dead. Returns the DVM
+    /// id the node belonged to.
+    pub fn remove_node(&mut self, node: u32) -> Option<u32> {
+        for d in &mut self.dvms {
+            if let Some(pos) = d.nodes.iter().position(|&n| n == node) {
+                d.nodes.remove(pos);
+                if d.nodes.is_empty() {
+                    d.alive = false;
+                }
+                return Some(d.id);
+            }
+        }
+        None
+    }
+
     /// Nodes currently usable (alive DVMs only).
     pub fn alive_nodes(&self) -> Vec<u32> {
         self.dvms
@@ -224,6 +248,21 @@ mod tests {
         }
         assert_eq!(m.n_alive(), 2);
         assert_eq!(m.alive_nodes().len(), 512);
+    }
+
+    #[test]
+    fn node_removal_shrinks_then_kills_a_dvm() {
+        let nodes: Vec<u32> = (0..4).collect();
+        let mut m = DvmMap::partition(&nodes, 2, DvmPolicy::RoundRobin);
+        assert_eq!(m.dvm_of_node(3), Some(1));
+        assert_eq!(m.remove_node(0), Some(0));
+        assert_eq!(m.dvm_of_node(0), None);
+        assert_eq!(m.remove_node(0), None); // already gone
+        assert!(m.dvms[0].alive);
+        assert_eq!(m.remove_node(1), Some(0));
+        assert!(!m.dvms[0].alive, "empty DVM must die");
+        assert_eq!(m.n_alive(), 1);
+        assert_eq!(m.alive_nodes(), vec![2, 3]);
     }
 
     #[test]

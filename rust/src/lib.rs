@@ -10,6 +10,7 @@ pub mod launch;
 pub mod db;
 pub mod integration;
 pub mod mesh;
+pub mod resilience;
 pub mod task;
 pub mod pilot;
 pub mod tmgr;

@@ -16,6 +16,7 @@ fn main() {
         Some("experiment") => experiment(&args),
         Some("platforms") => platforms(),
         Some("artifacts") => artifacts(&args),
+        Some("fault-smoke") => fault_smoke(&args),
         _ => usage(),
     }
 }
@@ -29,7 +30,10 @@ fn usage() {
                              ids: exp1 exp2 exp3 exp4 exp5 fig4 fig5 fig8 tracing ablation all\n\
                              options: --seed N --repeats N --scale F --full\n\
            platforms         list embedded platform configs\n\
-           artifacts         list compiled PJRT artifacts (--dir PATH)\n"
+           artifacts         list compiled PJRT artifacts (--dir PATH)\n\
+           fault-smoke       deterministic fault-injection smoke test (--seed N):\n\
+                             runs the seeded DVM-collapse scenario twice and\n\
+                             fails unless the recovery traces are byte-identical\n"
     );
     std::process::exit(2);
 }
@@ -126,6 +130,46 @@ fn experiment(args: &Args) {
         eprintln!("unknown experiment id '{id}'");
         usage();
     }
+}
+
+/// The CI resilience gate: replay the seeded fault scenario twice and
+/// demand a byte-identical recovery trace plus a ≥95 % recovery rate.
+fn fault_smoke(args: &Args) {
+    let seed = args.u64_or("seed", 7);
+    println!("fault-smoke: seeded DVM-collapse scenario, seed={seed}");
+    let a = rp::experiments::harness::fault_smoke(seed);
+    let b = rp::experiments::harness::fault_smoke(seed);
+    println!(
+        "run A: done={} failed={} resubmitted={} affected={} recovered={}",
+        a.n_done, a.n_failed, a.n_resubmitted, a.n_affected, a.n_recovered
+    );
+    println!(
+        "run B: done={} failed={} resubmitted={} affected={} recovered={}",
+        b.n_done, b.n_failed, b.n_resubmitted, b.n_affected, b.n_recovered
+    );
+    let csv_a = a.tracer.to_csv();
+    let csv_b = b.tracer.to_csv();
+    if csv_a != csv_b {
+        eprintln!("FAIL: recovery traces differ between identical seeded runs");
+        std::process::exit(1);
+    }
+    if a.n_affected == 0 {
+        eprintln!("FAIL: fault schedule affected no tasks");
+        std::process::exit(1);
+    }
+    if (a.n_recovered as f64) < 0.95 * a.n_affected as f64 {
+        eprintln!(
+            "FAIL: recovery rate {}/{} below 95 %",
+            a.n_recovered, a.n_affected
+        );
+        std::process::exit(1);
+    }
+    println!(
+        "OK: {} trace events, byte-identical across runs; {}/{} affected tasks recovered",
+        a.tracer.len(),
+        a.n_recovered,
+        a.n_affected
+    );
 }
 
 fn platforms() {

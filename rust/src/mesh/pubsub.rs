@@ -39,6 +39,32 @@ impl<T> Subscription<T> {
         self.inner.0.lock().unwrap().q.pop_front()
     }
 
+    /// Blocking receive with a deadline; None on timeout or once the bus
+    /// is closed and drained. Heartbeat consumers use this to keep their
+    /// own liveness ticks going while the bus is quiet.
+    pub fn recv_timeout(&self, timeout: std::time::Duration) -> Option<(String, T)> {
+        let (m, cv) = &*self.inner;
+        let deadline = std::time::Instant::now() + timeout;
+        let mut g = m.lock().unwrap();
+        loop {
+            if let Some(msg) = g.q.pop_front() {
+                return Some(msg);
+            }
+            if g.closed {
+                return None;
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (guard, res) = cv.wait_timeout(g, deadline - now).unwrap();
+            g = guard;
+            if res.timed_out() && g.q.is_empty() {
+                return None;
+            }
+        }
+    }
+
     /// Drain everything currently queued.
     pub fn drain(&self) -> Vec<(String, T)> {
         self.inner.0.lock().unwrap().q.drain(..).collect()
@@ -160,6 +186,35 @@ mod tests {
         assert_eq!(sub.recv().unwrap().1, 9);
         assert!(sub.recv().is_none()); // closed
         h.join().unwrap();
+    }
+
+    #[test]
+    fn recv_timeout_delivers_expires_and_sees_close() {
+        let bus: PubSub<u32> = PubSub::new();
+        let sub = bus.subscribe("t");
+        // expires empty
+        let t0 = std::time::Instant::now();
+        assert!(sub.recv_timeout(std::time::Duration::from_millis(20)).is_none());
+        assert!(t0.elapsed() >= std::time::Duration::from_millis(20));
+        // delivers a message published before the deadline
+        let bus2 = bus.clone();
+        let h = thread::spawn(move || {
+            thread::sleep(std::time::Duration::from_millis(20));
+            bus2.publish("t", 5);
+        });
+        assert_eq!(
+            sub.recv_timeout(std::time::Duration::from_secs(5)).unwrap().1,
+            5
+        );
+        h.join().unwrap();
+        // close: drain then None immediately
+        bus.publish("t", 6);
+        bus.close();
+        assert_eq!(
+            sub.recv_timeout(std::time::Duration::from_secs(5)).unwrap().1,
+            6
+        );
+        assert!(sub.recv_timeout(std::time::Duration::from_millis(1)).is_none());
     }
 
     #[test]

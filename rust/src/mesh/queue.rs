@@ -167,6 +167,12 @@ impl<T> WorkQueue<T> {
         self.len() == 0
     }
 
+    /// Has `close()` been called? Lets consumers using `pop_timeout`
+    /// distinguish "timed out, keep heartbeating" from "shut down".
+    pub fn is_closed(&self) -> bool {
+        self.inner.0.lock().unwrap().closed
+    }
+
     /// Close: producers fail, consumers drain then get None.
     pub fn close(&self) {
         let (m, not_empty, not_full) = &*self.inner;
@@ -294,6 +300,17 @@ mod tests {
         q.close();
         assert_eq!(q.pop(), Some("kept".into()));
         assert_eq!(q.pop(), None);
+        assert_eq!(q.pop_timeout(std::time::Duration::from_millis(5)), None);
+    }
+
+    #[test]
+    fn is_closed_distinguishes_timeout_from_shutdown() {
+        let q: WorkQueue<u32> = WorkQueue::new(0);
+        assert!(!q.is_closed());
+        assert_eq!(q.pop_timeout(std::time::Duration::from_millis(5)), None);
+        assert!(!q.is_closed()); // a timeout is not a close
+        q.close();
+        assert!(q.is_closed());
         assert_eq!(q.pop_timeout(std::time::Duration::from_millis(5)), None);
     }
 

@@ -1,0 +1,240 @@
+//! Deterministic fault injection (DESIGN.md §Resilience).
+//!
+//! A [`FaultInjector`] holds a fully materialized, sorted schedule of
+//! fault events, derived once from a [`FaultSpec`] and a seed. It is
+//! *passive*: callers ask `pop_due(now)` with time read from a
+//! `mesh::Clock`, so the identical schedule plays out under the DES
+//! harness's `VirtualClock` and the real-mode Agent's `WallClock` —
+//! same seed, same faults, same order.
+
+use crate::util::rng::Rng;
+
+/// What fails.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultKind {
+    /// A compute node dies (stops heartbeating, loses its running tasks).
+    NodeDeath { node: u32 },
+    /// A whole PRRTE DVM collapses (the paper's 2-of-16 Summit failure).
+    DvmCollapse { dvm: u32 },
+    /// One running task crashes; `ordinal` picks among those in flight.
+    TaskCrash { ordinal: u32 },
+    /// The DB bridge stalls for `duration_s` (no pulls/updates).
+    DbStall { duration_s: f64 },
+}
+
+impl FaultKind {
+    fn sort_key(&self) -> (u8, u64) {
+        match *self {
+            FaultKind::NodeDeath { node } => (0, node as u64),
+            FaultKind::DvmCollapse { dvm } => (1, dvm as u64),
+            FaultKind::TaskCrash { ordinal } => (2, ordinal as u64),
+            FaultKind::DbStall { duration_s } => (3, duration_s.to_bits()),
+        }
+    }
+}
+
+/// A fault at a point in (clock) time.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultEvent {
+    pub t: f64,
+    pub kind: FaultKind,
+}
+
+/// Declarative fault workload: how many of each kind, in what window.
+/// `scripted` events are merged in verbatim for hand-written scenarios.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultSpec {
+    pub n_node_deaths: u32,
+    pub n_dvm_collapses: u32,
+    pub n_task_crashes: u32,
+    pub n_db_stalls: u32,
+    /// Random fault times are drawn uniformly from this window.
+    pub window_start_s: f64,
+    pub window_end_s: f64,
+    /// Mean DB stall length (exponential).
+    pub db_stall_mean_s: f64,
+    /// Heartbeat cadence used by whichever mode runs this spec.
+    pub heartbeat_interval_s: f64,
+    pub missed_threshold: u32,
+    pub scripted: Vec<FaultEvent>,
+}
+
+impl Default for FaultSpec {
+    fn default() -> Self {
+        FaultSpec {
+            n_node_deaths: 0,
+            n_dvm_collapses: 0,
+            n_task_crashes: 0,
+            n_db_stalls: 0,
+            window_start_s: 10.0,
+            window_end_s: 300.0,
+            db_stall_mean_s: 5.0,
+            heartbeat_interval_s: 5.0,
+            missed_threshold: 3,
+            scripted: Vec::new(),
+        }
+    }
+}
+
+impl FaultSpec {
+    pub fn n_random(&self) -> u32 {
+        self.n_node_deaths + self.n_dvm_collapses + self.n_task_crashes + self.n_db_stalls
+    }
+}
+
+/// Materialized, sorted fault schedule with a consume cursor.
+#[derive(Debug)]
+pub struct FaultInjector {
+    schedule: Vec<FaultEvent>,
+    cursor: usize,
+}
+
+impl FaultInjector {
+    /// Expand `spec` into a concrete schedule. All randomness comes from
+    /// `Rng::new(seed ^ 0xFA017)`, independent of every other stream in
+    /// the run; the result is sorted by (time, kind, payload) so equal
+    /// timestamps still replay in one canonical order.
+    pub fn from_spec(spec: &FaultSpec, seed: u64, n_nodes: u32, n_dvms: u32) -> FaultInjector {
+        let mut rng = Rng::new(seed ^ 0xFA017);
+        let mut schedule: Vec<FaultEvent> = spec.scripted.clone();
+        let t_in_window = |rng: &mut Rng| {
+            rng.range_f64(spec.window_start_s, spec.window_end_s.max(spec.window_start_s))
+        };
+
+        for _ in 0..spec.n_node_deaths.min(n_nodes) {
+            let node = rng.below(n_nodes.max(1) as u64) as u32;
+            let t = t_in_window(&mut rng);
+            schedule.push(FaultEvent { t, kind: FaultKind::NodeDeath { node } });
+        }
+        // DVM collapses hit *distinct* DVMs (a DVM dies once).
+        let n_collapse = spec.n_dvm_collapses.min(n_dvms) as usize;
+        if n_collapse > 0 {
+            let mut ids: Vec<u32> = (0..n_dvms).collect();
+            rng.shuffle(&mut ids);
+            for &dvm in ids.iter().take(n_collapse) {
+                let t = t_in_window(&mut rng);
+                schedule.push(FaultEvent { t, kind: FaultKind::DvmCollapse { dvm } });
+            }
+        }
+        for k in 0..spec.n_task_crashes {
+            let t = t_in_window(&mut rng);
+            let ordinal = (rng.next_u64() as u32) ^ k;
+            schedule.push(FaultEvent { t, kind: FaultKind::TaskCrash { ordinal } });
+        }
+        for _ in 0..spec.n_db_stalls {
+            let t = t_in_window(&mut rng);
+            let duration_s = rng.exp(spec.db_stall_mean_s).max(0.1);
+            schedule.push(FaultEvent { t, kind: FaultKind::DbStall { duration_s } });
+        }
+
+        schedule.sort_by(|a, b| {
+            a.t.total_cmp(&b.t)
+                .then_with(|| a.kind.sort_key().cmp(&b.kind.sort_key()))
+        });
+        FaultInjector { schedule, cursor: 0 }
+    }
+
+    /// Every event with `t <= now` not yet consumed, in schedule order.
+    pub fn pop_due(&mut self, now: f64) -> Vec<FaultEvent> {
+        let start = self.cursor;
+        while self.cursor < self.schedule.len() && self.schedule[self.cursor].t <= now {
+            self.cursor += 1;
+        }
+        self.schedule[start..self.cursor].to_vec()
+    }
+
+    /// The full schedule (for pre-registering DES events).
+    pub fn schedule(&self) -> &[FaultEvent] {
+        &self.schedule
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.schedule.len() - self.cursor
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> FaultSpec {
+        FaultSpec {
+            n_node_deaths: 4,
+            n_dvm_collapses: 2,
+            n_task_crashes: 3,
+            n_db_stalls: 1,
+            window_start_s: 10.0,
+            window_end_s: 100.0,
+            ..FaultSpec::default()
+        }
+    }
+
+    #[test]
+    fn same_seed_same_schedule() {
+        let a = FaultInjector::from_spec(&spec(), 7, 1024, 16);
+        let b = FaultInjector::from_spec(&spec(), 7, 1024, 16);
+        assert_eq!(a.schedule(), b.schedule());
+        let c = FaultInjector::from_spec(&spec(), 8, 1024, 16);
+        assert_ne!(a.schedule(), c.schedule());
+    }
+
+    #[test]
+    fn schedule_is_sorted_and_windowed() {
+        let inj = FaultInjector::from_spec(&spec(), 42, 256, 16);
+        assert_eq!(inj.schedule().len(), 10);
+        let mut prev = f64::NEG_INFINITY;
+        for ev in inj.schedule() {
+            assert!(ev.t >= prev);
+            assert!((10.0..100.0).contains(&ev.t));
+            prev = ev.t;
+        }
+    }
+
+    #[test]
+    fn dvm_collapses_hit_distinct_dvms() {
+        let s = FaultSpec { n_dvm_collapses: 16, ..FaultSpec::default() };
+        let inj = FaultInjector::from_spec(&s, 3, 4096, 16);
+        let mut dvms: Vec<u32> = inj
+            .schedule()
+            .iter()
+            .map(|e| match e.kind {
+                FaultKind::DvmCollapse { dvm } => dvm,
+                _ => panic!("unexpected kind"),
+            })
+            .collect();
+        dvms.sort();
+        assert_eq!(dvms, (0..16).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn pop_due_consumes_in_order_exactly_once() {
+        let mut inj = FaultInjector::from_spec(&spec(), 7, 1024, 16);
+        let all: Vec<FaultEvent> = inj.schedule().to_vec();
+        assert!(inj.pop_due(9.9).is_empty());
+        let mid_t = all[4].t;
+        let first = inj.pop_due(mid_t);
+        assert_eq!(first.len(), 5);
+        assert!(inj.pop_due(mid_t).is_empty()); // consumed
+        let rest = inj.pop_due(1e9);
+        assert_eq!(first.len() + rest.len(), all.len());
+        assert_eq!(inj.remaining(), 0);
+        let mut merged = first;
+        merged.extend(rest);
+        assert_eq!(merged, all);
+    }
+
+    #[test]
+    fn scripted_events_merge_into_the_schedule() {
+        let s = FaultSpec {
+            scripted: vec![
+                FaultEvent { t: 50.0, kind: FaultKind::DbStall { duration_s: 2.0 } },
+                FaultEvent { t: 1.0, kind: FaultKind::NodeDeath { node: 0 } },
+            ],
+            ..FaultSpec::default()
+        };
+        let inj = FaultInjector::from_spec(&s, 7, 64, 4);
+        assert_eq!(inj.schedule().len(), 2);
+        assert_eq!(inj.schedule()[0].t, 1.0);
+        assert_eq!(inj.schedule()[1].t, 50.0);
+    }
+}

@@ -1,0 +1,107 @@
+//! Shared node/DVM health blacklist (DESIGN.md §Resilience).
+//!
+//! `NodeHealth` is the single source of truth for "do not place work
+//! here": the `HeartbeatMonitor` and explicit failure reports write into
+//! it; `SchedCore` drains freshly blacklisted nodes into the continuous
+//! scheduler before every scheduling pass, and the `Executor` consults it
+//! before launching.
+
+use std::collections::HashSet;
+
+/// Blacklist of dead nodes, DVMs and heartbeat sources.
+#[derive(Debug, Default)]
+pub struct NodeHealth {
+    dead_nodes: HashSet<u32>,
+    dead_dvms: HashSet<u32>,
+    dead_sources: HashSet<String>,
+    /// Nodes blacklisted since the last `drain_fresh_nodes` call —
+    /// the scheduler picks these up at the top of its next pass.
+    fresh_nodes: Vec<u32>,
+}
+
+impl NodeHealth {
+    pub fn new() -> NodeHealth {
+        NodeHealth::default()
+    }
+
+    /// Blacklist a node; returns true if it was newly blacklisted.
+    pub fn blacklist_node(&mut self, node: u32) -> bool {
+        if self.dead_nodes.insert(node) {
+            self.fresh_nodes.push(node);
+            true
+        } else {
+            false
+        }
+    }
+
+    pub fn is_node_blacklisted(&self, node: u32) -> bool {
+        self.dead_nodes.contains(&node)
+    }
+
+    pub fn blacklist_dvm(&mut self, dvm: u32) -> bool {
+        self.dead_dvms.insert(dvm)
+    }
+
+    pub fn is_dvm_blacklisted(&self, dvm: u32) -> bool {
+        self.dead_dvms.contains(&dvm)
+    }
+
+    /// Record a dead heartbeat source. Sources named `node.N` / `dvm.N`
+    /// feed the structural blacklists; anything else (e.g. `db-bridge`)
+    /// is only recorded.
+    pub fn mark_source_dead(&mut self, source: &str) {
+        self.dead_sources.insert(source.to_string());
+        if let Some(n) = source.strip_prefix("node.").and_then(|s| s.parse::<u32>().ok()) {
+            self.blacklist_node(n);
+        } else if let Some(d) = source.strip_prefix("dvm.").and_then(|s| s.parse::<u32>().ok()) {
+            self.blacklist_dvm(d);
+        }
+    }
+
+    pub fn is_source_dead(&self, source: &str) -> bool {
+        self.dead_sources.contains(source)
+    }
+
+    /// Nodes blacklisted since the last drain, in blacklist order.
+    pub fn drain_fresh_nodes(&mut self) -> Vec<u32> {
+        std::mem::take(&mut self.fresh_nodes)
+    }
+
+    pub fn n_dead_nodes(&self) -> usize {
+        self.dead_nodes.len()
+    }
+
+    pub fn n_dead_dvms(&self) -> usize {
+        self.dead_dvms.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn blacklist_is_idempotent_and_drains_once() {
+        let mut h = NodeHealth::new();
+        assert!(h.blacklist_node(3));
+        assert!(!h.blacklist_node(3));
+        assert!(h.is_node_blacklisted(3));
+        assert!(!h.is_node_blacklisted(4));
+        assert_eq!(h.drain_fresh_nodes(), vec![3]);
+        assert!(h.drain_fresh_nodes().is_empty());
+        assert_eq!(h.n_dead_nodes(), 1);
+    }
+
+    #[test]
+    fn source_names_feed_structural_blacklists() {
+        let mut h = NodeHealth::new();
+        h.mark_source_dead("node.17");
+        h.mark_source_dead("dvm.2");
+        h.mark_source_dead("db-bridge");
+        assert!(h.is_node_blacklisted(17));
+        assert!(h.is_dvm_blacklisted(2));
+        assert!(h.is_source_dead("db-bridge"));
+        assert!(!h.is_node_blacklisted(2));
+        assert_eq!(h.drain_fresh_nodes(), vec![17]);
+    }
+}

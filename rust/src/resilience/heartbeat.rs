@@ -1,0 +1,236 @@
+//! Heartbeat failure detection (DESIGN.md §Resilience).
+//!
+//! Executor workers, the DB bridge, and (in DES mode) simulated nodes
+//! publish periodic [`Beat`]s on a `mesh::PubSub`. The
+//! [`HeartbeatMonitor`] — a `mesh::Component` in real mode, a plain
+//! struct driven from the event loop in DES mode — declares a source
+//! dead once `missed_threshold` intervals pass without a beat, and
+//! writes the verdict into the shared [`NodeHealth`] blacklist.
+
+use std::collections::{HashMap, HashSet};
+use std::sync::{Arc, Mutex};
+
+use super::health::NodeHealth;
+use crate::mesh::{Clock, Component, Flow, Subscription, WorkQueue};
+use crate::util::error::Result;
+
+/// One heartbeat from a named source (`node.N`, `dvm.N`, `db-bridge`,
+/// `worker.N`, `agent`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Beat {
+    pub source: String,
+    pub t: f64,
+}
+
+/// Verdict emitted when a source misses its beat deadline.
+#[derive(Debug, Clone, PartialEq)]
+pub enum HealthEvent {
+    SourceDead {
+        source: String,
+        last_beat_t: f64,
+        declared_t: f64,
+    },
+}
+
+/// Missed-beat detector feeding the shared blacklist.
+pub struct HeartbeatMonitor {
+    clock: Arc<dyn Clock>,
+    interval_s: f64,
+    missed_threshold: u32,
+    last: HashMap<String, f64>,
+    dead: HashSet<String>,
+    health: Arc<Mutex<NodeHealth>>,
+}
+
+impl HeartbeatMonitor {
+    pub fn new(
+        clock: Arc<dyn Clock>,
+        interval_s: f64,
+        missed_threshold: u32,
+        health: Arc<Mutex<NodeHealth>>,
+    ) -> HeartbeatMonitor {
+        HeartbeatMonitor {
+            clock,
+            interval_s,
+            missed_threshold: missed_threshold.max(1),
+            last: HashMap::new(),
+            dead: HashSet::new(),
+            health,
+        }
+    }
+
+    /// Seconds of silence after which a source is declared dead.
+    pub fn deadline_s(&self) -> f64 {
+        self.interval_s * self.missed_threshold as f64
+    }
+
+    /// Record a beat; sources auto-register on their first beat.
+    pub fn beat(&mut self, b: &Beat) {
+        if self.dead.contains(&b.source) {
+            return; // no resurrection: a dead node stays blacklisted
+        }
+        let e = self.last.entry(b.source.clone()).or_insert(b.t);
+        if b.t > *e {
+            *e = b.t;
+        }
+    }
+
+    /// Declare every source silent past the deadline dead (sorted by
+    /// name for a deterministic verdict order) and return the verdicts.
+    pub fn check(&mut self, now: f64) -> Vec<HealthEvent> {
+        let deadline = self.deadline_s();
+        let mut stale: Vec<(String, f64)> = self
+            .last
+            .iter()
+            .filter(|(s, t)| !self.dead.contains(*s) && now - **t >= deadline)
+            .map(|(s, t)| (s.clone(), *t))
+            .collect();
+        stale.sort_by(|a, b| a.0.cmp(&b.0));
+        let mut events = Vec::with_capacity(stale.len());
+        for (source, last_t) in stale {
+            self.dead.insert(source.clone());
+            self.health.lock().unwrap().mark_source_dead(&source);
+            events.push(HealthEvent::SourceDead {
+                source,
+                last_beat_t: last_t,
+                declared_t: now,
+            });
+        }
+        events
+    }
+
+    pub fn is_dead(&self, source: &str) -> bool {
+        self.dead.contains(source)
+    }
+
+    pub fn n_sources(&self) -> usize {
+        self.last.len()
+    }
+}
+
+impl Component for HeartbeatMonitor {
+    type In = Beat;
+    type Out = HealthEvent;
+
+    fn name(&self) -> &str {
+        "heartbeat-monitor"
+    }
+
+    fn process(&mut self, batch: Vec<Beat>, out: &WorkQueue<HealthEvent>) -> Result<Flow> {
+        for b in &batch {
+            self.beat(b);
+        }
+        let now = self.clock.now();
+        for ev in self.check(now) {
+            out.push(ev).map_err(|_| "health output closed")?;
+        }
+        Ok(Flow::Continue)
+    }
+}
+
+/// Bridge a PubSub subscription into a `WorkQueue` so the monitor can run
+/// as a spawned Component. Returns the feeding thread's handle; the
+/// thread exits (and closes `into`) when the bus closes.
+pub fn bridge_beats(
+    sub: Subscription<Beat>,
+    into: WorkQueue<Beat>,
+) -> std::thread::JoinHandle<()> {
+    std::thread::spawn(move || {
+        while let Some((_topic, beat)) = sub.recv() {
+            if into.push(beat).is_err() {
+                break;
+            }
+        }
+        into.close();
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mesh::VirtualClock;
+
+    fn monitor(clock: Arc<VirtualClock>) -> (HeartbeatMonitor, Arc<Mutex<NodeHealth>>) {
+        let health = Arc::new(Mutex::new(NodeHealth::new()));
+        let m = HeartbeatMonitor::new(clock, 1.0, 3, health.clone());
+        (m, health)
+    }
+
+    #[test]
+    fn silent_source_declared_dead_after_threshold() {
+        let clock = Arc::new(VirtualClock::new());
+        let (mut m, health) = monitor(clock);
+        m.beat(&Beat { source: "node.5".into(), t: 0.0 });
+        assert!(m.check(2.9).is_empty()); // 2.9 < 3 * 1.0
+        let evs = m.check(3.0);
+        assert_eq!(evs.len(), 1);
+        match &evs[0] {
+            HealthEvent::SourceDead { source, last_beat_t, declared_t } => {
+                assert_eq!(source, "node.5");
+                assert_eq!(*last_beat_t, 0.0);
+                assert_eq!(*declared_t, 3.0);
+            }
+        }
+        assert!(m.is_dead("node.5"));
+        assert!(health.lock().unwrap().is_node_blacklisted(5));
+        // verdict is sticky: no duplicate events, late beats ignored
+        assert!(m.check(10.0).is_empty());
+        m.beat(&Beat { source: "node.5".into(), t: 10.0 });
+        assert!(m.is_dead("node.5"));
+    }
+
+    #[test]
+    fn beating_source_stays_alive() {
+        let clock = Arc::new(VirtualClock::new());
+        let (mut m, health) = monitor(clock);
+        for k in 0..10 {
+            m.beat(&Beat { source: "node.1".into(), t: k as f64 });
+            assert!(m.check(k as f64 + 0.5).is_empty());
+        }
+        assert!(!m.is_dead("node.1"));
+        assert_eq!(health.lock().unwrap().n_dead_nodes(), 0);
+    }
+
+    #[test]
+    fn verdict_order_is_sorted_by_source_name() {
+        let clock = Arc::new(VirtualClock::new());
+        let (mut m, _health) = monitor(clock);
+        for s in ["node.9", "node.10", "dvm.1", "node.2"] {
+            m.beat(&Beat { source: s.into(), t: 0.0 });
+        }
+        let names: Vec<String> = m
+            .check(5.0)
+            .into_iter()
+            .map(|e| match e {
+                HealthEvent::SourceDead { source, .. } => source,
+            })
+            .collect();
+        assert_eq!(names, vec!["dvm.1", "node.10", "node.2", "node.9"]);
+    }
+
+    #[test]
+    fn component_run_loop_detects_death() {
+        use crate::mesh::{spawn, PubSub, SpawnOpts};
+        let clock = Arc::new(VirtualClock::new());
+        let health = Arc::new(Mutex::new(NodeHealth::new()));
+        let m = HeartbeatMonitor::new(clock.clone(), 1.0, 2, health.clone());
+        let bus: PubSub<Beat> = PubSub::new();
+        let q_beats: WorkQueue<Beat> = WorkQueue::new(0);
+        let q_health: WorkQueue<HealthEvent> = WorkQueue::new(0);
+        let bridge = bridge_beats(bus.subscribe(""), q_beats.clone());
+        let h = spawn(m, q_beats, q_health.clone(), SpawnOpts { bulk: 16, close_output: true });
+        bus.publish("hb.node.3", Beat { source: "node.3".into(), t: 0.0 });
+        // advance virtual time past the deadline, then poke the monitor
+        // with another source's beat so its run loop wakes and checks
+        clock.set(5.0);
+        bus.publish("hb.agent", Beat { source: "agent".into(), t: 5.0 });
+        let ev = q_health.pop().expect("death verdict");
+        match ev {
+            HealthEvent::SourceDead { source, .. } => assert_eq!(source, "node.3"),
+        }
+        bus.close();
+        bridge.join().unwrap();
+        h.join().unwrap();
+        assert!(health.lock().unwrap().is_node_blacklisted(3));
+    }
+}

@@ -1,0 +1,201 @@
+//! Retry/backoff policy (DESIGN.md §Resilience).
+//!
+//! A `RetryPolicy` rides on every `TaskDescription` and is enforced by
+//! `agent::pipeline::SchedCore`: a failed task is resubmitted through the
+//! shared scheduler queue (after a backoff delay) instead of going
+//! terminal, until its attempts or deadline are exhausted.
+//!
+//! Backoff jitter is deterministic: each (seed, task, attempt) triple
+//! derives a *fresh* RNG, so the delay for a given retry never depends on
+//! how many other tasks retried before it. This keeps the DES harness
+//! byte-identical across runs regardless of event interleaving.
+
+use crate::util::rng::Rng;
+
+/// Outcome of `RetryPolicy::decide` for one failure.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum RetryDecision {
+    /// Resubmit as attempt `attempt` (1-based) after `delay_s`.
+    Retry { attempt: u32, delay_s: f64 },
+    /// No budget left: the failure is terminal after `attempts` tries.
+    GiveUp { attempts: u32 },
+}
+
+/// One recorded failure on a task's history.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FailureRecord {
+    /// The attempt (1-based) that failed.
+    pub attempt: u32,
+    /// Clock time of the failure (mode-specific clock).
+    pub t: f64,
+    /// Why it failed (launch error, non-zero exit, node death, ...).
+    pub reason: String,
+}
+
+/// Retry policy: attempt budget, exponential backoff with deterministic
+/// jitter, and an optional wall-deadline measured from first enqueue.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RetryPolicy {
+    /// Total attempts including the first (>= 1). 1 = never retry.
+    pub max_attempts: u32,
+    /// Backoff before the first retry, seconds.
+    pub backoff_base_s: f64,
+    /// Multiplier per further retry.
+    pub backoff_factor: f64,
+    /// Ceiling on any single backoff, seconds.
+    pub backoff_max_s: f64,
+    /// +/- fraction of the backoff added as deterministic jitter.
+    pub jitter_frac: f64,
+    /// Give up once this much time passed since first enqueue (0 = none).
+    pub deadline_s: f64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy::none()
+    }
+}
+
+impl RetryPolicy {
+    /// No retries: every failure is terminal (the pre-resilience behavior).
+    pub fn none() -> RetryPolicy {
+        RetryPolicy {
+            max_attempts: 1,
+            backoff_base_s: 0.0,
+            backoff_factor: 1.0,
+            backoff_max_s: 0.0,
+            jitter_frac: 0.0,
+            deadline_s: 0.0,
+        }
+    }
+
+    /// Standard policy for transient faults (node death, launch races,
+    /// pressure failures): 1 s base, doubling, 60 s cap, 10 % jitter.
+    pub fn transient(max_attempts: u32) -> RetryPolicy {
+        RetryPolicy {
+            max_attempts: max_attempts.max(1),
+            backoff_base_s: 1.0,
+            backoff_factor: 2.0,
+            backoff_max_s: 60.0,
+            jitter_frac: 0.1,
+            deadline_s: 0.0,
+        }
+    }
+
+    /// Does this policy ever resubmit?
+    pub fn retries(&self) -> bool {
+        self.max_attempts > 1
+    }
+
+    /// Backoff before retry attempt `attempt` (2-based: the delay applied
+    /// after attempt `attempt - 1` failed). Deterministic in
+    /// (seed, task, attempt) and independent of call order.
+    pub fn backoff_s(&self, attempt: u32, seed: u64, task: u32) -> f64 {
+        let exp = attempt.saturating_sub(2);
+        let mut d = self.backoff_base_s * self.backoff_factor.powi(exp as i32);
+        if self.backoff_max_s > 0.0 {
+            d = d.min(self.backoff_max_s);
+        }
+        if self.jitter_frac > 0.0 && d > 0.0 {
+            let mut rng = Rng::new(
+                seed ^ ((task as u64) << 32)
+                    ^ (attempt as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+            );
+            let u = 2.0 * rng.f64() - 1.0; // [-1, 1)
+            d *= 1.0 + self.jitter_frac * u;
+        }
+        d.max(0.0)
+    }
+
+    /// Decide what to do after attempt `attempt` (1-based) failed,
+    /// `elapsed_s` after the task was first enqueued.
+    pub fn decide(&self, attempt: u32, elapsed_s: f64, seed: u64, task: u32) -> RetryDecision {
+        if attempt >= self.max_attempts {
+            return RetryDecision::GiveUp { attempts: attempt };
+        }
+        if self.deadline_s > 0.0 && elapsed_s >= self.deadline_s {
+            return RetryDecision::GiveUp { attempts: attempt };
+        }
+        let next = attempt + 1;
+        RetryDecision::Retry {
+            attempt: next,
+            delay_s: self.backoff_s(next, seed, task),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn none_policy_never_retries() {
+        let p = RetryPolicy::none();
+        assert!(!p.retries());
+        assert_eq!(p.decide(1, 0.0, 7, 0), RetryDecision::GiveUp { attempts: 1 });
+    }
+
+    #[test]
+    fn backoff_grows_and_caps() {
+        let mut p = RetryPolicy::transient(10);
+        p.jitter_frac = 0.0;
+        assert!((p.backoff_s(2, 7, 0) - 1.0).abs() < 1e-12);
+        assert!((p.backoff_s(3, 7, 0) - 2.0).abs() < 1e-12);
+        assert!((p.backoff_s(4, 7, 0) - 4.0).abs() < 1e-12);
+        assert!((p.backoff_s(10, 7, 0) - 60.0).abs() < 1e-12); // 256 capped
+    }
+
+    #[test]
+    fn backoff_deterministic_for_fixed_seed() {
+        let p = RetryPolicy::transient(8);
+        let a: Vec<f64> = (2..8).map(|k| p.backoff_s(k, 42, 13)).collect();
+        let b: Vec<f64> = (2..8).map(|k| p.backoff_s(k, 42, 13)).collect();
+        assert_eq!(a, b);
+        // order-independence: interleaving other (task, attempt) draws
+        // does not perturb the sequence
+        let _ = p.backoff_s(5, 42, 99);
+        let c: Vec<f64> = (2..8).map(|k| p.backoff_s(k, 42, 13)).collect();
+        assert_eq!(a, c);
+        // a different seed gives a different jittered sequence
+        let d: Vec<f64> = (2..8).map(|k| p.backoff_s(k, 43, 13)).collect();
+        assert_ne!(a, d);
+    }
+
+    #[test]
+    fn jitter_stays_within_fraction() {
+        let p = RetryPolicy::transient(10);
+        for task in 0..64u32 {
+            let d = p.backoff_s(2, 7, task);
+            assert!(d >= 1.0 * (1.0 - 0.1) - 1e-9 && d <= 1.0 * (1.0 + 0.1) + 1e-9);
+        }
+    }
+
+    #[test]
+    fn decide_walks_attempts_then_gives_up() {
+        let mut p = RetryPolicy::transient(3);
+        p.jitter_frac = 0.0;
+        match p.decide(1, 0.0, 7, 5) {
+            RetryDecision::Retry { attempt, delay_s } => {
+                assert_eq!(attempt, 2);
+                assert!((delay_s - 1.0).abs() < 1e-12);
+            }
+            _ => panic!("expected retry"),
+        }
+        match p.decide(2, 0.0, 7, 5) {
+            RetryDecision::Retry { attempt, delay_s } => {
+                assert_eq!(attempt, 3);
+                assert!((delay_s - 2.0).abs() < 1e-12);
+            }
+            _ => panic!("expected retry"),
+        }
+        assert_eq!(p.decide(3, 0.0, 7, 5), RetryDecision::GiveUp { attempts: 3 });
+    }
+
+    #[test]
+    fn deadline_overrides_attempt_budget() {
+        let mut p = RetryPolicy::transient(10);
+        p.deadline_s = 100.0;
+        assert!(matches!(p.decide(1, 50.0, 7, 0), RetryDecision::Retry { .. }));
+        assert_eq!(p.decide(1, 100.0, 7, 0), RetryDecision::GiveUp { attempts: 1 });
+    }
+}

@@ -80,6 +80,10 @@ impl Session {
             n_executor_threads: n_threads,
             bulk_size: 4096,
             trace: true,
+            heartbeat_interval_s: 0.05,
+            heartbeat_missed: 40,
+            faults: None,
+            fault_seed: 0,
         };
         let all_descriptions = self.tmgr.descriptions();
         let result = Agent::run(&cfg, &self.db, &all_descriptions, &self.registry);

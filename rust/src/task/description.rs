@@ -8,6 +8,7 @@
 //!   4. size        — ranks × cores_per_rank (+ gpus), 1 HW thread … many nodes
 //!   5. duration    — seconds (emulated in DES mode; wall time in real mode)
 
+use crate::resilience::RetryPolicy;
 use crate::util::error::{Result, RpError};
 use crate::util::json::Json;
 
@@ -61,6 +62,8 @@ pub struct TaskDescription {
     pub dvm_tag: Option<u32>,
     pub input_staging: Vec<StagingDirective>,
     pub output_staging: Vec<StagingDirective>,
+    /// retry/backoff on failure (default: none — failures are terminal)
+    pub retry: RetryPolicy,
 }
 
 impl Default for TaskDescription {
@@ -81,6 +84,7 @@ impl Default for TaskDescription {
             dvm_tag: None,
             input_staging: Vec::new(),
             output_staging: Vec::new(),
+            retry: RetryPolicy::none(),
         }
     }
 }
@@ -135,6 +139,12 @@ impl TaskDescription {
             runtime_s,
             ..Default::default()
         }
+    }
+
+    /// Builder: attach a retry policy.
+    pub fn with_retry(mut self, retry: RetryPolicy) -> Self {
+        self.retry = retry;
+        self
     }
 
     /// Convenience constructor for a function task (RAPTOR).

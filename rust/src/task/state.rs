@@ -6,6 +6,7 @@
 //! Canceled.
 
 use super::description::TaskDescription;
+use crate::resilience::FailureRecord;
 use crate::util::error::{Result, RpError};
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
@@ -83,6 +84,10 @@ pub struct Task {
     pub stderr: String,
     /// result payload of function tasks (real mode)
     pub result: Option<f64>,
+    /// completed retries: 0 while the first attempt runs
+    pub attempts: u32,
+    /// one record per failed attempt, oldest first (DESIGN.md §Resilience)
+    pub failure_history: Vec<FailureRecord>,
 }
 
 impl Task {
@@ -95,7 +100,14 @@ impl Task {
             exit_code: None,
             stderr: String::new(),
             result: None,
+            attempts: 0,
+            failure_history: Vec::new(),
         }
+    }
+
+    /// The attempt currently running / about to run (1-based).
+    pub fn current_attempt(&self) -> u32 {
+        self.attempts + 1
     }
 
     /// Advance the state, enforcing legality.
@@ -115,6 +127,32 @@ impl Task {
             self.state = TaskState::Failed;
             self.stderr = why.to_string();
         }
+    }
+
+    /// Record a failed attempt and re-enter the scheduler pipeline:
+    /// the failure lands in `failure_history`, the attempt counter
+    /// advances, per-attempt outputs reset, and the state returns to
+    /// `AgentSchedulingPending`. Legal from any state except `Done` /
+    /// `Canceled` (successful or canceled work is never re-run) — in
+    /// particular from `Failed`, which stops being a dead end.
+    pub fn resubmit(&mut self, t: f64, why: &str) -> Result<()> {
+        if matches!(self.state, TaskState::Done | TaskState::Canceled) {
+            return Err(RpError::Transition {
+                from: self.state.name().to_string(),
+                to: format!("AGENT_SCHEDULING_PENDING ({})", self.uid),
+            });
+        }
+        self.failure_history.push(FailureRecord {
+            attempt: self.current_attempt(),
+            t,
+            reason: why.to_string(),
+        });
+        self.attempts += 1;
+        self.exit_code = None;
+        self.stderr.clear();
+        self.result = None;
+        self.state = TaskState::AgentSchedulingPending;
+        Ok(())
     }
 }
 
@@ -192,5 +230,54 @@ mod tests {
         let mut t = task();
         t.advance(Canceled).unwrap();
         assert_eq!(t.state, Canceled);
+    }
+
+    #[test]
+    fn failed_resubmit_done_preserves_attempt_history() {
+        use TaskState::*;
+        let mut t = task();
+        t.advance(TmgrScheduling).unwrap();
+        t.advance(AgentSchedulingPending).unwrap();
+        t.advance(AgentScheduling).unwrap();
+        t.advance(AgentExecutingPending).unwrap();
+        t.advance(AgentExecuting).unwrap();
+        t.fail("node died");
+        assert_eq!(t.state, Failed);
+
+        t.resubmit(100.0, "node died").unwrap();
+        assert_eq!(t.state, AgentSchedulingPending);
+        assert_eq!(t.current_attempt(), 2);
+        assert_eq!(t.exit_code, None);
+        assert_eq!(t.stderr, "");
+
+        // attempt 2 runs to completion
+        t.advance(AgentScheduling).unwrap();
+        t.advance(AgentExecutingPending).unwrap();
+        t.advance(AgentExecuting).unwrap();
+        t.advance(Done).unwrap();
+        assert_eq!(t.attempts, 1);
+        assert_eq!(t.failure_history.len(), 1);
+        assert_eq!(t.failure_history[0].attempt, 1);
+        assert_eq!(t.failure_history[0].t, 100.0);
+        assert_eq!(t.failure_history[0].reason, "node died");
+        // success is final: no resubmit out of Done
+        assert!(t.resubmit(200.0, "nope").is_err());
+    }
+
+    #[test]
+    fn resubmit_mid_flight_works_without_terminal_failure() {
+        use TaskState::*;
+        let mut t = task();
+        t.advance(TmgrScheduling).unwrap();
+        t.advance(AgentSchedulingPending).unwrap();
+        t.advance(AgentScheduling).unwrap();
+        t.advance(AgentExecutingPending).unwrap();
+        // orphaned by a DVM collapse before executing: resubmit directly
+        t.resubmit(5.0, "dvm collapsed").unwrap();
+        assert_eq!(t.state, AgentSchedulingPending);
+        assert_eq!(t.failure_history.len(), 1);
+        let mut t2 = task();
+        t2.advance(Canceled).unwrap();
+        assert!(t2.resubmit(1.0, "x").is_err());
     }
 }

@@ -22,6 +22,8 @@ pub enum Ev {
     DvmReady = 3,
     DvmFailed = 4,
     PilotDone = 5,
+    NodeFailed = 6,         // heartbeat verdict: node declared dead
+    DbStall = 7,            // DB bridge stalled (fault injection)
     // task pipeline (Fig. 8 names in comments)
     TaskDbPull = 10,        // "DB Bridge Pulls"
     TaskStageInStart = 11,
@@ -36,6 +38,7 @@ pub enum Ev {
     TaskStageOutStop = 20,
     TaskDone = 21,
     TaskFailed = 22,
+    TaskResubmit = 23,      // retry path: failed attempt re-enters the queue
     // raptor
     MasterReady = 30,
     WorkerReady = 31,
@@ -51,6 +54,8 @@ impl Ev {
             DvmReady => "dvm_ready",
             DvmFailed => "dvm_failed",
             PilotDone => "pilot_done",
+            NodeFailed => "node_failed",
+            DbStall => "db_stall",
             TaskDbPull => "task_db_pull",
             TaskStageInStart => "task_stage_in_start",
             TaskStageInStop => "task_stage_in_stop",
@@ -64,6 +69,7 @@ impl Ev {
             TaskStageOutStop => "task_stage_out_stop",
             TaskDone => "task_done",
             TaskFailed => "task_failed",
+            TaskResubmit => "task_resubmit",
             MasterReady => "master_ready",
             WorkerReady => "worker_ready",
         }
@@ -193,6 +199,8 @@ mod tests {
             Ev::DvmReady,
             Ev::DvmFailed,
             Ev::PilotDone,
+            Ev::NodeFailed,
+            Ev::DbStall,
             Ev::TaskDbPull,
             Ev::TaskStageInStart,
             Ev::TaskStageInStop,
@@ -206,6 +214,7 @@ mod tests {
             Ev::TaskStageOutStop,
             Ev::TaskDone,
             Ev::TaskFailed,
+            Ev::TaskResubmit,
             Ev::MasterReady,
             Ev::WorkerReady,
         ];

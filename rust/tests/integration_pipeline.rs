@@ -69,6 +69,10 @@ fn agent_handles_large_fanout_of_tiny_tasks() {
         n_executor_threads: 8,
         bulk_size: 64,
         trace: true,
+        heartbeat_interval_s: 0.05,
+        heartbeat_missed: 40,
+        faults: None,
+        fault_seed: 0,
     };
     let res = Agent::run(&cfg, &db, &descriptions, &reg);
     assert_eq!(

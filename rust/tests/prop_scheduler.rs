@@ -1,7 +1,7 @@
 //! Property tests on the Agent schedulers: the invariants RP's correctness
 //! rests on — never over-allocate, conserve resources across alloc/free,
 //! honor placement constraints — checked over randomized workloads and
-//! interleavings (see DESIGN.md §7).
+//! interleavings (see DESIGN.md §8).
 
 use rp::agent::scheduler::{
     Allocation, Continuous, ResourceRequest, Scheduler, Tagged, Torus,
