@@ -2,7 +2,8 @@
 //! ran at ~6 task/s (2018) and ~300 task/s (2021); the native Rust
 //! Continuous scheduler is benchmarked here (EXPERIMENTS.md §Perf).
 
-use rp::agent::scheduler::{Continuous, ResourceRequest, Scheduler, Tagged, Torus};
+use rp::agent::scheduler::{Continuous, NaiveContinuous, ResourceRequest, Scheduler, Tagged, Torus};
+use rp::experiments::sched_bench::{self, Scenario};
 use rp::util::bench::bench;
 use rp::util::rng::Rng;
 
@@ -95,4 +96,35 @@ fn main() {
         held.push_back(s.try_allocate(&seg).expect("alloc"));
         s.release(&held.pop_front().unwrap());
     });
+
+    // indexed vs naive head-to-head at the ISSUE-8 acceptance scale:
+    // 10k Frontera-shaped nodes, hole-hunting at high occupancy — the
+    // regime where the naive cursor scan goes O(n_nodes)
+    println!("\n== indexed vs naive (10k nodes, seeded op stream) ==");
+    let sc = Scenario {
+        name: "bench_10k_nodes",
+        nodes: 10_000,
+        cores_per_node: 56,
+        gpus_per_node: 0,
+        n_ops: 20_000,
+        seed: 42,
+    };
+    let ops = sched_bench::op_stream(&sc);
+    let mut naive = NaiveContinuous::new(sc.nodes, sc.cores_per_node, sc.gpus_per_node);
+    let rn = sched_bench::replay(&mut naive, &ops);
+    let mut indexed = Continuous::new(sc.nodes, sc.cores_per_node, sc.gpus_per_node);
+    let ri = sched_bench::replay(&mut indexed, &ops);
+    assert_eq!(rn.digest, ri.digest, "indexed placements must match naive");
+    println!(
+        "naive   {:>10.4} s  ({:.0} ops/s)",
+        rn.secs,
+        sc.n_ops as f64 / rn.secs.max(1e-12)
+    );
+    println!(
+        "indexed {:>10.4} s  ({:.0} ops/s)  speedup {:.1}x  mean_scan {:.2}",
+        ri.secs,
+        sc.n_ops as f64 / ri.secs.max(1e-12),
+        rn.secs / ri.secs.max(1e-12),
+        indexed.take_stats().mean_scan()
+    );
 }

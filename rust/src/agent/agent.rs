@@ -310,7 +310,16 @@ impl Component for SchedStage<'_> {
     }
 
     fn process(&mut self, batch: Vec<SchedMsg>, out: &WorkQueue<WorkItem>) -> Result<Flow> {
+        // consecutive Freed messages are returned in one bulk index repair;
+        // the batch is flushed before any other message kind so a
+        // blacklist/DVM verdict never reorders past a release (a deferred
+        // release would be wrongly swallowed as dead capacity)
+        let mut freed: Vec<(Allocation, LaunchTicket)> = Vec::new();
         for msg in batch {
+            if !freed.is_empty() && !matches!(msg, SchedMsg::Freed { .. }) {
+                self.core.release_bulk(&freed);
+                freed.clear();
+            }
             match msg {
                 SchedMsg::Ready(idx) => self.core.enqueue(idx),
                 SchedMsg::Freed { index, attempt } => {
@@ -319,7 +328,7 @@ impl Component for SchedStage<'_> {
                     if let Some(&(t_attempt, _, _)) = self.tickets.get(&index) {
                         if t_attempt == attempt {
                             let (_, alloc, ticket) = self.tickets.remove(&index).unwrap();
-                            self.core.release(&alloc, &ticket);
+                            freed.push((alloc, ticket));
                         }
                     }
                 }
@@ -349,6 +358,9 @@ impl Component for SchedStage<'_> {
                 SchedMsg::Tick => {}
             }
         }
+        if !freed.is_empty() {
+            self.core.release_bulk(&freed);
+        }
         let pilot_cores = self.core.total_cores();
         let descriptions = self.descriptions;
         let tasks = self.tasks;
@@ -358,7 +370,7 @@ impl Component for SchedStage<'_> {
         {
             let mut tracer = self.tracer.lock().unwrap();
             let launch_failures = &mut launch_failures;
-            self.core.schedule(
+            self.core.schedule_bulk(
                 descriptions,
                 pilot_cores,
                 usize::MAX,

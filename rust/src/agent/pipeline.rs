@@ -82,6 +82,8 @@ pub struct SchedCore {
     /// backoff gate: do not place before this clock time
     not_before: HashMap<u32, f64>,
     n_resubmits: u64,
+    /// lifetime count of successful placements (feeds tasks_scheduled/sec)
+    n_placed_total: u64,
 }
 
 impl SchedCore {
@@ -110,6 +112,7 @@ impl SchedCore {
             first_seen: HashMap::new(),
             not_before: HashMap::new(),
             n_resubmits: 0,
+            n_placed_total: 0,
         }
     }
 
@@ -143,6 +146,16 @@ impl SchedCore {
     pub fn release(&mut self, alloc: &Allocation, ticket: &LaunchTicket) {
         self.scheduler.release(alloc);
         self.executor.complete(ticket);
+    }
+
+    /// Return a batch of finished tasks at once, amortizing index repair
+    /// in the scheduler ([`Continuous::release_bulk`]). Semantically
+    /// identical to calling [`release`](Self::release) per task.
+    pub fn release_bulk(&mut self, items: &[(Allocation, LaunchTicket)]) {
+        self.scheduler.release_bulk(items.iter().map(|(a, _)| a));
+        for (_, ticket) in items {
+            self.executor.complete(ticket);
+        }
     }
 
     pub fn scheduler_mut(&mut self) -> &mut Continuous {
@@ -292,6 +305,7 @@ impl SchedCore {
                                 tracer,
                             );
                             placed += 1;
+                            self.n_placed_total += 1;
                         }
                         Err(error) => {
                             self.scheduler.release(&alloc);
@@ -313,6 +327,60 @@ impl SchedCore {
             }
         }
         placed
+    }
+
+    /// Bulk scheduling pass: drain the queue (up to `budget`) in one call,
+    /// pre-sizing the trace and metric buffers for the whole batch so the
+    /// hot loop never reallocates mid-pass. The decision/trace/RNG stream
+    /// is *identical* to repeated [`schedule`](Self::schedule) calls —
+    /// `bulk_schedule_matches_one_at_a_time_trace` pins this, which is
+    /// what keeps PR 7's fault-replay byte determinism intact.
+    pub fn schedule_bulk<F>(
+        &mut self,
+        descriptions: &[TaskDescription],
+        pilot_cores: u64,
+        budget: usize,
+        rng: &mut Rng,
+        tracer: &mut Tracer,
+        on: F,
+    ) -> usize
+    where
+        F: FnMut(SchedDecision, &mut Rng, &mut Tracer),
+    {
+        let expect = self.queue.len().min(budget);
+        tracer.reserve(2 * expect); // TaskSchedOk + TaskExecStart per task
+        self.sched_ok_times.reserve(expect);
+        self.schedule(descriptions, pilot_cores, budget, rng, tracer, on)
+    }
+
+    /// Export scheduler-throughput metrics as a trace annotation:
+    /// placement rate over the active scheduling span, plus the index
+    /// scan-length statistics ([`SchedStats`](super::scheduler::SchedStats)).
+    /// Deterministic under a
+    /// virtual clock; call once per run (the DES harness does, before
+    /// sealing the trace).
+    pub fn emit_sched_metrics(&mut self, tracer: &mut Tracer) {
+        let stats = self.scheduler.take_stats();
+        let span = match (self.sched_ok_times.first(), self.sched_ok_times.last()) {
+            (Some(first), Some(last)) => last - first,
+            _ => 0.0,
+        };
+        let rate = if span > 0.0 {
+            self.n_placed_total as f64 / span
+        } else {
+            0.0
+        };
+        tracer.annotate(
+            self.clock.now(),
+            "scheduler",
+            format!(
+                "tasks_scheduled={} tasks_scheduled_per_s={:.1} mean_scan={:.2} scan_hist={}",
+                self.n_placed_total,
+                rate,
+                stats.mean_scan(),
+                stats.hist_csv()
+            ),
+        );
     }
 }
 
@@ -451,6 +519,143 @@ mod tests {
         clock.set(15.0);
         assert_eq!(c.schedule(&ds, 4, usize::MAX, &mut rng, &mut tr, |_, _, _| {}), 1);
         assert!(c.queue_is_empty());
+    }
+
+    #[test]
+    fn bulk_schedule_matches_one_at_a_time_trace() {
+        // same queue (with a misfit task mid-queue to exercise backfill),
+        // one core drained in a single bulk pass, the other at budget=1
+        let build = || {
+            let (mut c, _) = core(1, 4);
+            for i in 0..5 {
+                c.enqueue(i);
+            }
+            c
+        };
+        let mut ds = descs(5, 1);
+        ds[1] = TaskDescription::emulated("x", 1, 4, 1.0); // never fits once t0 placed
+
+        let mut bulk = build();
+        let mut rng_a = Rng::new(7);
+        let mut tr_a = Tracer::new(true);
+        let placed_bulk =
+            bulk.schedule_bulk(&ds, 4, usize::MAX, &mut rng_a, &mut tr_a, |_, _, _| {});
+
+        let mut seq = build();
+        let mut rng_b = Rng::new(7);
+        let mut tr_b = Tracer::new(true);
+        let mut placed_seq = 0;
+        loop {
+            let p = seq.schedule(&ds, 4, 1, &mut rng_b, &mut tr_b, |_, _, _| {});
+            if p == 0 {
+                break;
+            }
+            placed_seq += p;
+        }
+
+        assert_eq!(placed_bulk, 4);
+        assert_eq!(placed_seq, placed_bulk);
+        assert_eq!(bulk.queue_len(), seq.queue_len());
+        // identical trace-event sequences, kind by kind
+        assert_eq!(tr_a.of_kind(Ev::TaskSchedOk), tr_b.of_kind(Ev::TaskSchedOk));
+        assert_eq!(
+            tr_a.of_kind(Ev::TaskExecStart),
+            tr_b.of_kind(Ev::TaskExecStart)
+        );
+        // identical scheduler end state
+        assert_eq!(
+            bulk.scheduler_mut().free_cores(),
+            seq.scheduler_mut().free_cores()
+        );
+    }
+
+    #[test]
+    fn bulk_release_frees_capacity_and_slots() {
+        let (mut c, _) = core(2, 4);
+        let ds = descs(8, 1);
+        for i in 0..8 {
+            c.enqueue(i);
+        }
+        let mut rng = Rng::new(1);
+        let mut tr = Tracer::new(true);
+        let mut live = Vec::new();
+        c.schedule(&ds, 8, usize::MAX, &mut rng, &mut tr, |d, _, _| {
+            if let SchedDecision::Launched { alloc, ticket, .. } = d {
+                live.push((alloc, ticket));
+            }
+        });
+        assert_eq!(live.len(), 8);
+        assert_eq!(c.scheduler_mut().free_cores(), 0);
+        c.release_bulk(&live);
+        assert_eq!(c.scheduler_mut().free_cores(), 8);
+        assert_eq!(c.executor_mut().in_flight(), 0);
+    }
+
+    #[test]
+    fn capacity_conserved_across_blacklist_dvm_failure_and_release() {
+        let clock = Arc::new(VirtualClock::new());
+        let sched = Continuous::new(8, 4, 0);
+        let exec = Executor::new(&crate::agent::executor::ExecutorConfig {
+            launch_method: "prrte".into(),
+            node_ids: (0..8).collect(),
+            nodes_per_dvm: 4,
+            dvm_policy: crate::launch::prrte::DvmPolicy::RoundRobin,
+        })
+        .unwrap();
+        let mut c = SchedCore::new(sched, exec, clock, 128, true, 0);
+        let ds = descs(4, 4);
+        for i in 0..4 {
+            c.enqueue(i);
+        }
+        let mut rng = Rng::new(1);
+        let mut tr = Tracer::new(true);
+        let mut live = Vec::new();
+        c.schedule(&ds, 32, usize::MAX, &mut rng, &mut tr, |d, _, _| {
+            if let SchedDecision::Launched { alloc, ticket, .. } = d {
+                live.push((alloc, ticket));
+            }
+        });
+        assert_eq!(live.len(), 4); // tasks hold nodes 0–3
+        // interleave every capacity-removal path, then release everything
+        c.blacklist_node(7); // heartbeat verdict on an idle node
+        let f = c.fail_dvm(0); // takes nodes 0–3 with work in flight
+        assert_eq!(f.lost_nodes, vec![0, 1, 2, 3]);
+        c.release_bulk(&live);
+        // free capacity == alive nodes × node size: dead slots swallowed,
+        // nothing leaked, nothing resurrected
+        let alive = c.scheduler_mut().n_alive_nodes() as u64;
+        assert_eq!(alive, 3);
+        assert_eq!(c.scheduler_mut().free_cores(), alive * 4);
+        assert_eq!(c.executor_mut().in_flight(), 0);
+    }
+
+    #[test]
+    fn emit_sched_metrics_annotates_throughput() {
+        let (mut c, clock) = core(4, 4);
+        let ds = descs(8, 1);
+        let mut rng = Rng::new(1);
+        let mut tr = Tracer::new(true);
+        clock.set(1.0);
+        for i in 0..4 {
+            c.enqueue(i);
+        }
+        c.schedule_bulk(&ds, 16, usize::MAX, &mut rng, &mut tr, |_, _, _| {});
+        clock.set(3.0);
+        for i in 4..8 {
+            c.enqueue(i);
+        }
+        c.schedule_bulk(&ds, 16, usize::MAX, &mut rng, &mut tr, |_, _, _| {});
+        c.emit_sched_metrics(&mut tr);
+        let notes = tr.notes();
+        assert_eq!(notes.len(), 1);
+        assert_eq!(notes[0].entity, "scheduler");
+        // 8 placements over the 2 s span between first and last TaskSchedOk
+        assert!(notes[0].event.contains("tasks_scheduled=8"));
+        assert!(notes[0].event.contains("tasks_scheduled_per_s=4.0"));
+        assert!(notes[0].event.contains("scan_hist="));
+        // the annotation round-trips through RFC-4180 CSV as one record
+        let csv = tr.to_csv();
+        assert!(csv.contains("\"tasks_scheduled=8"));
     }
 
     #[test]

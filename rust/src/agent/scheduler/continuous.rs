@@ -7,22 +7,112 @@
 //!    communication overheads" (§III-A);
 //!  * GPU ranks take node GPUs alongside cores.
 //!
-//! Performance: a rotating cursor makes the common homogeneous-workload
-//! case O(1) amortized per allocation; aggregate free counters give O(1)
-//! rejection when the pilot is full. See EXPERIMENTS.md §Perf.
+//! Performance (DESIGN.md §3): placement is driven by an *indexed*
+//! free-capacity structure — a segment tree over node ids whose internal
+//! nodes hold the per-field maximum of (free cores, free gpus) below
+//! them. "First node at-or-after the cursor with ≥c cores and ≥g GPUs"
+//! resolves by tree descent in O(log n) instead of the naive O(n) cursor
+//! scan, and multi-node MPI packs hop directly between nodes that fit at
+//! least one rank, never touching full/dead/blacklisted nodes. A rotating
+//! cursor keeps the common homogeneous-workload case O(1) amortized and
+//! preserves the fairness of the scan order; aggregate free counters give
+//! O(1) rejection when the pilot is full.
+//!
+//! The pre-index linear-scan implementation survives as
+//! [`NaiveContinuous`](super::reference::NaiveContinuous): it is the
+//! semantic oracle, and `rust/tests/prop_scheduler.rs` proves the two
+//! produce identical feasibility verdicts, free counters and placements
+//! over seeded random allocate/release/blacklist/drain sequences.
 
 use super::{Allocation, ResourceRequest, Scheduler, Slot};
 
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, Default)]
 struct NodeFree {
     cores: u32,
     gpus: u32,
 }
 
+fn merge(a: NodeFree, b: NodeFree) -> NodeFree {
+    NodeFree {
+        cores: a.cores.max(b.cores),
+        gpus: a.gpus.max(b.gpus),
+    }
+}
+
+/// Scan-length histogram buckets (powers of two: 1, 2–3, 4–7, …, ≥128).
+pub const SCAN_BUCKETS: usize = 8;
+
+/// Per-scheduler search statistics: how many index probes (tree nodes
+/// visited, including the O(1) cursor check) each placement attempt
+/// cost. Feeds the scheduler-throughput metrics the tracer exports
+/// (`SchedCore::emit_sched_metrics`) and EXPERIMENTS.md §Perf.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SchedStats {
+    /// placement attempts that reached the index (hit or miss)
+    pub n_searches: u64,
+    /// total tree probes across those searches
+    pub n_probes: u64,
+    /// histogram of probes-per-search, bucketed by powers of two
+    pub scan_hist: [u64; SCAN_BUCKETS],
+}
+
+impl SchedStats {
+    fn record(&mut self, probes: u64) {
+        let p = probes.max(1);
+        self.n_searches += 1;
+        self.n_probes += p;
+        let bucket = ((63 - p.leading_zeros()) as usize).min(SCAN_BUCKETS - 1);
+        self.scan_hist[bucket] += 1;
+    }
+
+    /// Mean probes per placement attempt.
+    pub fn mean_scan(&self) -> f64 {
+        if self.n_searches == 0 {
+            0.0
+        } else {
+            self.n_probes as f64 / self.n_searches as f64
+        }
+    }
+
+    /// Compact `lo-hi:count` rendering of the histogram (CSV-hostile on
+    /// purpose: it contains commas, exercising the tracer's RFC-4180
+    /// escaping).
+    pub fn hist_csv(&self) -> String {
+        let mut parts: Vec<String> = Vec::with_capacity(SCAN_BUCKETS);
+        for (b, &count) in self.scan_hist.iter().enumerate() {
+            let lo = 1u64 << b;
+            let label = if b == SCAN_BUCKETS - 1 {
+                format!(">={lo}")
+            } else if b == 0 {
+                "1".to_string()
+            } else {
+                format!("{lo}-{}", (lo << 1) - 1)
+            };
+            parts.push(format!("{label}:{count}"));
+        }
+        parts.join(",")
+    }
+}
+
+/// Bounds and running probe count of one index search.
+struct Probe {
+    lo: usize,
+    hi: usize,
+    cores: u32,
+    gpus: u32,
+    visited: u64,
+}
+
 pub struct Continuous {
     cores_per_node: u32,
     gpus_per_node: u32,
-    free: Vec<NodeFree>,
+    /// node count (leaves `n..size` are zero-padding and never match)
+    n: usize,
+    /// leaf span: `n` rounded up to a power of two
+    size: usize,
+    /// segment tree, 1-based: `tree[1]` is the root, leaves live at
+    /// `tree[size + i]`; internal nodes hold the field-wise max below
+    tree: Vec<NodeFree>,
     free_cores: u64,
     free_gpus: u64,
     cursor: usize,
@@ -30,36 +120,46 @@ pub struct Continuous {
     /// releases swallowed, excluded from feasibility
     blacklisted: Vec<bool>,
     n_blacklisted: usize,
+    stats: SchedStats,
 }
 
 impl Continuous {
     pub fn new(n_nodes: u32, cores_per_node: u32, gpus_per_node: u32) -> Continuous {
         assert!(n_nodes > 0 && cores_per_node > 0);
+        let n = n_nodes as usize;
+        let size = n.next_power_of_two();
+        let mut tree = vec![NodeFree::default(); 2 * size];
+        for leaf in tree.iter_mut().skip(size).take(n) {
+            *leaf = NodeFree {
+                cores: cores_per_node,
+                gpus: gpus_per_node,
+            };
+        }
+        for i in (1..size).rev() {
+            tree[i] = merge(tree[2 * i], tree[2 * i + 1]);
+        }
         Continuous {
             cores_per_node,
             gpus_per_node,
-            free: vec![
-                NodeFree {
-                    cores: cores_per_node,
-                    gpus: gpus_per_node,
-                };
-                n_nodes as usize
-            ],
-            free_cores: n_nodes as u64 * cores_per_node as u64,
-            free_gpus: n_nodes as u64 * gpus_per_node as u64,
+            n,
+            size,
+            tree,
+            free_cores: n as u64 * cores_per_node as u64,
+            free_gpus: n as u64 * gpus_per_node as u64,
             cursor: 0,
-            blacklisted: vec![false; n_nodes as usize],
+            blacklisted: vec![false; n],
             n_blacklisted: 0,
+            stats: SchedStats::default(),
         }
     }
 
     fn n_nodes(&self) -> usize {
-        self.free.len()
+        self.n
     }
 
     /// Nodes still eligible for placement.
     pub fn n_alive_nodes(&self) -> usize {
-        self.n_nodes() - self.n_blacklisted
+        self.n - self.n_blacklisted
     }
 
     pub fn is_blacklisted(&self, node: u32) -> bool {
@@ -74,6 +174,77 @@ impl Continuous {
         self.gpus_per_node
     }
 
+    /// Index-search statistics since construction (or the last
+    /// [`take_stats`](Self::take_stats)).
+    pub fn stats(&self) -> SchedStats {
+        self.stats
+    }
+
+    /// Return and reset the search statistics.
+    pub fn take_stats(&mut self) -> SchedStats {
+        std::mem::take(&mut self.stats)
+    }
+
+    #[inline]
+    fn node_free(&self, i: usize) -> NodeFree {
+        self.tree[self.size + i]
+    }
+
+    /// Write a leaf and recompute its root path: O(log n).
+    fn set_node(&mut self, i: usize, nf: NodeFree) {
+        self.tree[self.size + i] = nf;
+        let mut j = (self.size + i) >> 1;
+        while j >= 1 {
+            self.tree[j] = merge(self.tree[2 * j], self.tree[2 * j + 1]);
+            j >>= 1;
+        }
+    }
+
+    /// First node index in `[lo, hi)` with ≥`cores` free cores and
+    /// ≥`gpus` free GPUs, by segment-tree descent; `visited` accumulates
+    /// the probe count.
+    fn find_first(
+        &self,
+        lo: usize,
+        hi: usize,
+        cores: u32,
+        gpus: u32,
+        visited: &mut u64,
+    ) -> Option<usize> {
+        if lo >= hi {
+            return None;
+        }
+        let mut q = Probe {
+            lo,
+            hi,
+            cores,
+            gpus,
+            visited: 0,
+        };
+        let found = self.find_in(1, 0, self.size, &mut q);
+        *visited += q.visited;
+        found
+    }
+
+    fn find_in(&self, node: usize, nl: usize, nr: usize, q: &mut Probe) -> Option<usize> {
+        if nr <= q.lo || q.hi <= nl {
+            return None;
+        }
+        q.visited += 1;
+        let nf = self.tree[node];
+        // field-wise max below this node can't satisfy the conjunction →
+        // no leaf below can
+        if nf.cores < q.cores || nf.gpus < q.gpus {
+            return None;
+        }
+        if nr - nl == 1 {
+            return Some(nl);
+        }
+        let mid = (nl + nr) / 2;
+        self.find_in(2 * node, nl, mid, q)
+            .or_else(|| self.find_in(2 * node + 1, mid, nr, q))
+    }
+
     /// Permanently remove a node from placement (heartbeat verdict or DVM
     /// failure: the nodes are lost to the pilot; RP's fault tolerance
     /// keeps executing on the remaining resources — §IV-D). Remaining
@@ -86,14 +257,11 @@ impl Continuous {
         }
         self.blacklisted[node as usize] = true;
         self.n_blacklisted += 1;
-        let nf = &mut self.free[node as usize];
-        let c = nf.cores;
-        let g = nf.gpus;
-        nf.cores = 0;
-        nf.gpus = 0;
-        self.free_cores -= c as u64;
-        self.free_gpus -= g as u64;
-        (c, g)
+        let nf = self.node_free(node as usize);
+        self.set_node(node as usize, NodeFree::default());
+        self.free_cores -= nf.cores as u64;
+        self.free_gpus -= nf.gpus as u64;
+        (nf.cores, nf.gpus)
     }
 
     /// Back-compat alias: draining a node now blacklists it.
@@ -112,12 +280,13 @@ impl Continuous {
         if cores > self.cores_per_node as u64 || gpus > self.gpus_per_node as u64 {
             return None;
         }
-        let nf = &mut self.free[node as usize];
+        let mut nf = self.node_free(node as usize);
         if (nf.cores as u64) < cores || (nf.gpus as u64) < gpus {
             return None;
         }
         nf.cores -= cores as u32;
         nf.gpus -= gpus as u32;
+        self.set_node(node as usize, nf);
         self.free_cores -= cores;
         self.free_gpus -= gpus;
         Some(Allocation {
@@ -129,71 +298,142 @@ impl Continuous {
         })
     }
 
-    /// Grant `cores`/`gpus` on a single node with enough room, scanning
-    /// from the cursor.
-    fn alloc_single_node(&mut self, cores: u32, gpus: u32) -> Option<Slot> {
-        let n = self.n_nodes();
-        for off in 0..n {
-            let i = (self.cursor + off) % n;
-            let nf = &mut self.free[i];
-            if nf.cores >= cores && nf.gpus >= gpus {
-                nf.cores -= cores;
-                nf.gpus -= gpus;
-                self.free_cores -= cores as u64;
-                self.free_gpus -= gpus as u64;
-                self.cursor = if nf.cores == 0 { (i + 1) % n } else { i };
-                return Some(Slot {
-                    node_idx: i as u32,
-                    cores,
-                    gpus,
-                });
+    /// Release many allocations at once, amortizing index repair: every
+    /// leaf is updated in place, then each dirtied ancestor is recomputed
+    /// exactly once per level — O(slots + unique ancestors) instead of
+    /// O(slots · log n) root paths. Semantically identical to calling
+    /// [`release`](Scheduler::release) per allocation.
+    pub fn release_bulk<'a, I>(&mut self, allocs: I)
+    where
+        I: IntoIterator<Item = &'a Allocation>,
+    {
+        let mut dirty: Vec<usize> = Vec::new();
+        for alloc in allocs {
+            for s in &alloc.slots {
+                if self.blacklisted[s.node_idx as usize] {
+                    // dead capacity never resurrects
+                    continue;
+                }
+                let li = self.size + s.node_idx as usize;
+                let nf = &mut self.tree[li];
+                nf.cores += s.cores;
+                nf.gpus += s.gpus;
+                assert!(
+                    nf.cores <= self.cores_per_node && nf.gpus <= self.gpus_per_node,
+                    "release over-fills node {} ({}c/{}g)",
+                    s.node_idx,
+                    nf.cores,
+                    nf.gpus
+                );
+                self.free_cores += s.cores as u64;
+                self.free_gpus += s.gpus as u64;
+                dirty.push(li >> 1);
             }
         }
-        None
+        // all leaves sit at the same depth (`size` is a power of two), so
+        // the dirty set is uniform per level; repair bottom-up
+        while !dirty.is_empty() && dirty[0] >= 1 {
+            dirty.sort_unstable();
+            dirty.dedup();
+            for &i in &dirty {
+                self.tree[i] = merge(self.tree[2 * i], self.tree[2 * i + 1]);
+            }
+            if dirty[0] == 1 {
+                break;
+            }
+            for i in dirty.iter_mut() {
+                *i >>= 1;
+            }
+        }
+    }
+
+    /// Grant `cores`/`gpus` on a single node with enough room: the first
+    /// fitting node at-or-after the cursor (cyclically), found by index
+    /// descent instead of a linear scan.
+    fn alloc_single_node(&mut self, cores: u32, gpus: u32) -> Option<Slot> {
+        let n = self.n_nodes();
+        let mut visited = 1u64; // the cursor probe below
+        let cur = self.node_free(self.cursor);
+        let found = if cur.cores >= cores && cur.gpus >= gpus {
+            // O(1) fast path: the cursor node is the first candidate in
+            // rotation order, and homogeneous churn almost always fits
+            // there — same node the naive scan would pick at offset 0
+            Some(self.cursor)
+        } else {
+            self.find_first(self.cursor, n, cores, gpus, &mut visited)
+                .or_else(|| self.find_first(0, self.cursor, cores, gpus, &mut visited))
+        };
+        self.stats.record(visited);
+        let i = found?;
+        let mut nf = self.node_free(i);
+        nf.cores -= cores;
+        nf.gpus -= gpus;
+        self.free_cores -= cores as u64;
+        self.free_gpus -= gpus as u64;
+        self.cursor = if nf.cores == 0 { (i + 1) % n } else { i };
+        self.set_node(i, nf);
+        Some(Slot {
+            node_idx: i as u32,
+            cores,
+            gpus,
+        })
     }
 
     /// Pack `ranks` ranks of (cpr cores, gpr gpus) onto nodes, preferring
-    /// consecutive nodes starting at the cursor. All-or-nothing.
+    /// consecutive nodes starting at the cursor. All-or-nothing. Each hop
+    /// lands directly on the next node that fits ≥ 1 rank (the same nodes,
+    /// in the same order, the naive cyclic scan would stage) — full, dead
+    /// and blacklisted nodes are never touched.
     fn alloc_multi_node(&mut self, req: &ResourceRequest) -> Option<Allocation> {
         let n = self.n_nodes();
         let cpr = req.cores_per_rank;
         let gpr = req.gpus_per_rank;
         let mut remaining = req.ranks;
         let mut staged: Vec<Slot> = Vec::new();
+        let mut visited = 0u64;
 
-        for off in 0..n {
-            if remaining == 0 {
-                break;
-            }
-            let i = (self.cursor + off) % n;
-            let nf = self.free[i];
-            let by_cores = nf.cores / cpr;
-            let by_gpus = if gpr == 0 { u32::MAX } else { nf.gpus / gpr };
-            let fit = by_cores.min(by_gpus).min(remaining);
-            if fit > 0 {
+        // two half-open spans realize the cyclic scan from the cursor
+        for (lo, hi) in [(self.cursor, n), (0, self.cursor)] {
+            let mut pos = lo;
+            while remaining > 0 && pos < hi {
+                let Some(i) = self.find_first(pos, hi, cpr, gpr, &mut visited) else {
+                    break;
+                };
+                let nf = self.node_free(i);
+                let by_cores = nf.cores / cpr;
+                let by_gpus = if gpr == 0 { u32::MAX } else { nf.gpus / gpr };
+                // ≥ 1 by construction: find_first guarantees a whole rank
+                let fit = by_cores.min(by_gpus).min(remaining);
                 staged.push(Slot {
                     node_idx: i as u32,
                     cores: fit * cpr,
                     gpus: fit * gpr,
                 });
                 remaining -= fit;
+                pos = i + 1;
+            }
+            if remaining == 0 {
+                break;
             }
         }
+        self.stats.record(visited);
 
         if remaining > 0 {
             return None; // all-or-nothing: do not commit partial packs
         }
         // commit
         for s in &staged {
-            let nf = &mut self.free[s.node_idx as usize];
+            let i = s.node_idx as usize;
+            let mut nf = self.node_free(i);
             nf.cores -= s.cores;
             nf.gpus -= s.gpus;
+            self.set_node(i, nf);
             self.free_cores -= s.cores as u64;
             self.free_gpus -= s.gpus as u64;
         }
         if let Some(last) = staged.last() {
             let i = last.node_idx as usize;
-            self.cursor = if self.free[i].cores == 0 {
+            self.cursor = if self.node_free(i).cores == 0 {
                 (i + 1) % n
             } else {
                 i
@@ -216,7 +456,9 @@ impl Scheduler for Continuous {
         if req.cores() > self.free_cores || req.gpus() > self.free_gpus {
             return None;
         }
-        if !req.uses_mpi || (req.cores() <= self.cores_per_node as u64 && req.gpus() <= self.gpus_per_node as u64)
+        if !req.uses_mpi
+            || (req.cores() <= self.cores_per_node as u64
+                && req.gpus() <= self.gpus_per_node as u64)
         {
             // single-node placement (also used for small MPI tasks, which
             // RP co-locates when possible)
@@ -234,7 +476,8 @@ impl Scheduler for Continuous {
                 // being reaped) on a blacklisted node frees nothing
                 continue;
             }
-            let nf = &mut self.free[s.node_idx as usize];
+            let i = s.node_idx as usize;
+            let mut nf = self.node_free(i);
             nf.cores += s.cores;
             nf.gpus += s.gpus;
             assert!(
@@ -244,6 +487,7 @@ impl Scheduler for Continuous {
                 nf.cores,
                 nf.gpus
             );
+            self.set_node(i, nf);
             self.free_cores += s.cores as u64;
             self.free_gpus += s.gpus as u64;
         }
@@ -309,7 +553,9 @@ mod tests {
     fn single_node_packing() {
         let mut s = Continuous::new(2, 8, 0);
         // four 4-core tasks fill both nodes
-        let allocs: Vec<_> = (0..4).map(|_| s.try_allocate(&req(1, 4, 0, false)).unwrap()).collect();
+        let allocs: Vec<_> = (0..4)
+            .map(|_| s.try_allocate(&req(1, 4, 0, false)).unwrap())
+            .collect();
         assert_eq!(s.free_cores(), 0);
         assert!(s.try_allocate(&req(1, 1, 0, false)).is_none());
         for a in &allocs {
@@ -397,6 +643,14 @@ mod tests {
     }
 
     #[test]
+    #[should_panic(expected = "over-fills")]
+    fn double_release_detected_in_bulk() {
+        let mut s = Continuous::new(1, 4, 0);
+        let a = s.try_allocate(&req(1, 4, 0, false)).unwrap();
+        s.release_bulk([&a, &a]); // over-fill panics, same as two releases
+    }
+
+    #[test]
     fn blacklisted_node_is_never_chosen() {
         let mut s = Continuous::new(4, 8, 0);
         let (c, g) = s.blacklist_node(1);
@@ -441,5 +695,68 @@ mod tests {
         assert!(s.try_allocate(&req(2, 4, 0, true)).is_none()); // only 1 node alive
         assert!(!s.feasible(&req(2, 4, 0, true)));
         assert!(s.feasible(&req(1, 4, 0, false)));
+    }
+
+    #[test]
+    fn bulk_release_matches_sequential_release() {
+        let mut a = Continuous::new(8, 8, 2);
+        let mut b = Continuous::new(8, 8, 2);
+        let reqs = [
+            req(1, 3, 1, false),
+            req(4, 2, 0, true),
+            req(1, 8, 0, false),
+            req(2, 4, 1, true),
+        ];
+        let held_a: Vec<_> = reqs.iter().map(|r| a.try_allocate(r).unwrap()).collect();
+        let held_b: Vec<_> = reqs.iter().map(|r| b.try_allocate(r).unwrap()).collect();
+        assert_eq!(held_a, held_b);
+        // one node dies with work in flight: bulk must swallow its slots
+        a.blacklist_node(0);
+        b.blacklist_node(0);
+        a.release_bulk(held_a.iter());
+        for alloc in &held_b {
+            b.release(alloc);
+        }
+        assert_eq!(a.free_cores(), b.free_cores());
+        assert_eq!(a.free_gpus(), b.free_gpus());
+        // identical follow-up placements: the repaired index agrees
+        let next = req(3, 2, 0, true);
+        assert_eq!(a.try_allocate(&next), b.try_allocate(&next));
+    }
+
+    #[test]
+    fn scan_stats_record_probes() {
+        let mut s = Continuous::new(64, 4, 0);
+        assert_eq!(s.stats().n_searches, 0);
+        for _ in 0..10 {
+            s.try_allocate(&req(1, 4, 0, false)).unwrap();
+        }
+        let st = s.take_stats();
+        assert_eq!(st.n_searches, 10);
+        assert!(st.n_probes >= 10);
+        assert_eq!(st.scan_hist.iter().sum::<u64>(), 10);
+        assert!(st.mean_scan() >= 1.0);
+        // histogram renders with commas (the tracer must escape it)
+        assert!(s.stats().n_searches == 0 && st.hist_csv().contains(','));
+    }
+
+    #[test]
+    fn index_skips_full_nodes_in_sublinear_probes() {
+        // fill all but the last node, then allocate: the descent must not
+        // walk the 1023 full nodes one by one
+        let n = 1024u32;
+        let mut s = Continuous::new(n, 4, 0);
+        let mut held = Vec::new();
+        for _ in 0..(n - 1) {
+            held.push(s.try_allocate(&req(1, 4, 0, false)).unwrap());
+        }
+        s.take_stats();
+        let a = s.try_allocate(&req(1, 4, 0, false)).unwrap();
+        assert_eq!(a.slots[0].node_idx, n - 1);
+        let st = s.stats();
+        assert_eq!(st.n_searches, 1);
+        // cursor probe + one root-to-leaf descent ≈ 2·log2(1024); the
+        // naive scan would have probed 1024 nodes
+        assert!(st.n_probes <= 64, "probes={}", st.n_probes);
     }
 }

@@ -11,10 +11,12 @@
 //! faithfully.
 
 pub mod continuous;
+pub mod reference;
 pub mod tagged;
 pub mod torus;
 
-pub use continuous::Continuous;
+pub use continuous::{Continuous, SchedStats};
+pub use reference::NaiveContinuous;
 pub use tagged::Tagged;
 pub use torus::Torus;
 

@@ -1,0 +1,328 @@
+//! The naive reference allocator: the pre-index `Continuous`
+//! implementation, kept verbatim as the equivalence oracle.
+//!
+//! [`NaiveContinuous`] does an O(n_nodes) cursor scan per allocation.
+//! It is semantically authoritative: the indexed
+//! [`Continuous`](super::Continuous) must produce *identical* feasibility
+//! verdicts, free-counter trajectories and — under the same cursor
+//! policy — identical placements. `rust/tests/prop_scheduler.rs` runs
+//! both side-by-side over seeded random allocate/release/blacklist/drain
+//! sequences, and `rp sched-bench` replays the same seeded op streams
+//! through both to measure the speedup (BENCH_sched.json).
+
+use super::{Allocation, ResourceRequest, Scheduler, Slot};
+
+#[derive(Clone, Copy, Debug)]
+struct NodeFree {
+    cores: u32,
+    gpus: u32,
+}
+
+pub struct NaiveContinuous {
+    cores_per_node: u32,
+    gpus_per_node: u32,
+    free: Vec<NodeFree>,
+    free_cores: u64,
+    free_gpus: u64,
+    cursor: usize,
+    /// dead nodes (heartbeat verdict or DVM collapse): capacity drained,
+    /// releases swallowed, excluded from feasibility
+    blacklisted: Vec<bool>,
+    n_blacklisted: usize,
+}
+
+impl NaiveContinuous {
+    pub fn new(n_nodes: u32, cores_per_node: u32, gpus_per_node: u32) -> NaiveContinuous {
+        assert!(n_nodes > 0 && cores_per_node > 0);
+        NaiveContinuous {
+            cores_per_node,
+            gpus_per_node,
+            free: vec![
+                NodeFree {
+                    cores: cores_per_node,
+                    gpus: gpus_per_node,
+                };
+                n_nodes as usize
+            ],
+            free_cores: n_nodes as u64 * cores_per_node as u64,
+            free_gpus: n_nodes as u64 * gpus_per_node as u64,
+            cursor: 0,
+            blacklisted: vec![false; n_nodes as usize],
+            n_blacklisted: 0,
+        }
+    }
+
+    fn n_nodes(&self) -> usize {
+        self.free.len()
+    }
+
+    /// Nodes still eligible for placement.
+    pub fn n_alive_nodes(&self) -> usize {
+        self.n_nodes() - self.n_blacklisted
+    }
+
+    pub fn is_blacklisted(&self, node: u32) -> bool {
+        self.blacklisted[node as usize]
+    }
+
+    pub fn cores_per_node(&self) -> u32 {
+        self.cores_per_node
+    }
+
+    pub fn gpus_per_node(&self) -> u32 {
+        self.gpus_per_node
+    }
+
+    /// Permanently remove a node from placement. Idempotent; returns the
+    /// (cores, gpus) drained.
+    pub fn blacklist_node(&mut self, node: u32) -> (u32, u32) {
+        if self.blacklisted[node as usize] {
+            return (0, 0);
+        }
+        self.blacklisted[node as usize] = true;
+        self.n_blacklisted += 1;
+        let nf = &mut self.free[node as usize];
+        let c = nf.cores;
+        let g = nf.gpus;
+        nf.cores = 0;
+        nf.gpus = 0;
+        self.free_cores -= c as u64;
+        self.free_gpus -= g as u64;
+        (c, g)
+    }
+
+    /// Back-compat alias: draining a node blacklists it.
+    pub fn drain_node(&mut self, node: u32) -> (u32, u32) {
+        self.blacklist_node(node)
+    }
+
+    /// Allocate the whole request on one specific node (Tagged pinning).
+    pub fn try_allocate_on_node(
+        &mut self,
+        node: u32,
+        req: &ResourceRequest,
+    ) -> Option<Allocation> {
+        let cores = req.cores();
+        let gpus = req.gpus();
+        if cores > self.cores_per_node as u64 || gpus > self.gpus_per_node as u64 {
+            return None;
+        }
+        let nf = &mut self.free[node as usize];
+        if (nf.cores as u64) < cores || (nf.gpus as u64) < gpus {
+            return None;
+        }
+        nf.cores -= cores as u32;
+        nf.gpus -= gpus as u32;
+        self.free_cores -= cores;
+        self.free_gpus -= gpus;
+        Some(Allocation {
+            slots: vec![Slot {
+                node_idx: node,
+                cores: cores as u32,
+                gpus: gpus as u32,
+            }],
+        })
+    }
+
+    /// Grant `cores`/`gpus` on a single node with enough room, scanning
+    /// from the cursor.
+    fn alloc_single_node(&mut self, cores: u32, gpus: u32) -> Option<Slot> {
+        let n = self.n_nodes();
+        for off in 0..n {
+            let i = (self.cursor + off) % n;
+            let nf = &mut self.free[i];
+            if nf.cores >= cores && nf.gpus >= gpus {
+                nf.cores -= cores;
+                nf.gpus -= gpus;
+                self.free_cores -= cores as u64;
+                self.free_gpus -= gpus as u64;
+                self.cursor = if nf.cores == 0 { (i + 1) % n } else { i };
+                return Some(Slot {
+                    node_idx: i as u32,
+                    cores,
+                    gpus,
+                });
+            }
+        }
+        None
+    }
+
+    /// Pack `ranks` ranks of (cpr cores, gpr gpus) onto nodes, preferring
+    /// consecutive nodes starting at the cursor. All-or-nothing.
+    fn alloc_multi_node(&mut self, req: &ResourceRequest) -> Option<Allocation> {
+        let n = self.n_nodes();
+        let cpr = req.cores_per_rank;
+        let gpr = req.gpus_per_rank;
+        let mut remaining = req.ranks;
+        let mut staged: Vec<Slot> = Vec::new();
+
+        for off in 0..n {
+            if remaining == 0 {
+                break;
+            }
+            let i = (self.cursor + off) % n;
+            let nf = self.free[i];
+            let by_cores = nf.cores / cpr;
+            let by_gpus = if gpr == 0 { u32::MAX } else { nf.gpus / gpr };
+            let fit = by_cores.min(by_gpus).min(remaining);
+            if fit > 0 {
+                staged.push(Slot {
+                    node_idx: i as u32,
+                    cores: fit * cpr,
+                    gpus: fit * gpr,
+                });
+                remaining -= fit;
+            }
+        }
+
+        if remaining > 0 {
+            return None; // all-or-nothing: do not commit partial packs
+        }
+        // commit
+        for s in &staged {
+            let nf = &mut self.free[s.node_idx as usize];
+            nf.cores -= s.cores;
+            nf.gpus -= s.gpus;
+            self.free_cores -= s.cores as u64;
+            self.free_gpus -= s.gpus as u64;
+        }
+        if let Some(last) = staged.last() {
+            let i = last.node_idx as usize;
+            self.cursor = if self.free[i].cores == 0 {
+                (i + 1) % n
+            } else {
+                i
+            };
+        }
+        Some(Allocation { slots: staged })
+    }
+}
+
+impl Scheduler for NaiveContinuous {
+    fn name(&self) -> &'static str {
+        "continuous-naive"
+    }
+
+    fn try_allocate(&mut self, req: &ResourceRequest) -> Option<Allocation> {
+        if !self.feasible(req) {
+            return None;
+        }
+        // fast reject on aggregate counters
+        if req.cores() > self.free_cores || req.gpus() > self.free_gpus {
+            return None;
+        }
+        if !req.uses_mpi
+            || (req.cores() <= self.cores_per_node as u64
+                && req.gpus() <= self.gpus_per_node as u64)
+        {
+            // single-node placement (also used for small MPI tasks, which
+            // RP co-locates when possible)
+            self.alloc_single_node(req.cores() as u32, req.gpus() as u32)
+                .map(|s| Allocation { slots: vec![s] })
+        } else {
+            self.alloc_multi_node(req)
+        }
+    }
+
+    fn release(&mut self, alloc: &Allocation) {
+        for s in &alloc.slots {
+            if self.blacklisted[s.node_idx as usize] {
+                // dead capacity never resurrects: a task completing (or
+                // being reaped) on a blacklisted node frees nothing
+                continue;
+            }
+            let nf = &mut self.free[s.node_idx as usize];
+            nf.cores += s.cores;
+            nf.gpus += s.gpus;
+            assert!(
+                nf.cores <= self.cores_per_node && nf.gpus <= self.gpus_per_node,
+                "release over-fills node {} ({}c/{}g)",
+                s.node_idx,
+                nf.cores,
+                nf.gpus
+            );
+            self.free_cores += s.cores as u64;
+            self.free_gpus += s.gpus as u64;
+        }
+    }
+
+    fn free_cores(&self) -> u64 {
+        self.free_cores
+    }
+    fn free_gpus(&self) -> u64 {
+        self.free_gpus
+    }
+    fn total_cores(&self) -> u64 {
+        self.n_nodes() as u64 * self.cores_per_node as u64
+    }
+    fn total_gpus(&self) -> u64 {
+        self.n_nodes() as u64 * self.gpus_per_node as u64
+    }
+
+    fn feasible(&self, req: &ResourceRequest) -> bool {
+        if req.ranks == 0 || req.cores_per_rank == 0 {
+            return false;
+        }
+        // each rank must fit a node
+        if req.cores_per_rank > self.cores_per_node || req.gpus_per_rank > self.gpus_per_node {
+            return false;
+        }
+        // non-MPI tasks must fit one node
+        if !req.uses_mpi
+            && (req.cores() > self.cores_per_node as u64 || req.gpus() > self.gpus_per_node as u64)
+        {
+            return false;
+        }
+        // rank-packing granularity: ranks are never split across nodes, so
+        // capacity is per-node whole ranks × nodes (not raw core count)
+        let by_cores = self.cores_per_node / req.cores_per_rank;
+        let by_gpus = if req.gpus_per_rank == 0 {
+            u32::MAX
+        } else {
+            self.gpus_per_node / req.gpus_per_rank
+        };
+        let ranks_per_node = by_cores.min(by_gpus) as u64;
+        // only alive nodes count: a task that needs more than the
+        // surviving capacity is infeasible, not queued forever
+        req.ranks as u64 <= ranks_per_node * self.n_alive_nodes() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(ranks: u32, cpr: u32, gpr: u32, mpi: bool) -> ResourceRequest {
+        ResourceRequest {
+            ranks,
+            cores_per_rank: cpr,
+            gpus_per_rank: gpr,
+            uses_mpi: mpi,
+            node_tag: None,
+        }
+    }
+
+    #[test]
+    fn naive_basic_packing_and_release() {
+        let mut s = NaiveContinuous::new(2, 8, 0);
+        let allocs: Vec<_> = (0..4)
+            .map(|_| s.try_allocate(&req(1, 4, 0, false)).unwrap())
+            .collect();
+        assert_eq!(s.free_cores(), 0);
+        assert!(s.try_allocate(&req(1, 1, 0, false)).is_none());
+        for a in &allocs {
+            s.release(a);
+        }
+        assert_eq!(s.free_cores(), 16);
+    }
+
+    #[test]
+    fn naive_blacklist_drains_capacity() {
+        let mut s = NaiveContinuous::new(4, 8, 1);
+        assert_eq!(s.blacklist_node(2), (8, 1));
+        assert_eq!(s.blacklist_node(2), (0, 0));
+        assert_eq!(s.n_alive_nodes(), 3);
+        assert_eq!(s.free_cores(), 24);
+        assert!(!s.feasible(&req(4, 8, 0, true)));
+    }
+}

@@ -317,7 +317,7 @@ impl AgentSim {
                     // one scheduling decision per tick at the era rate;
                     // native (rate 0) drains the queue in one event.
                     let budget = if sched_cost == 0.0 { usize::MAX } else { 1 };
-                    let placed = core.schedule(
+                    let placed = core.schedule_bulk(
                         tasks,
                         pilot_cores,
                         budget,
@@ -523,6 +523,10 @@ impl AgentSim {
         assert_eq!(n_done + n_failed, n, "all tasks must reach a terminal state");
         let t_end = t_last_terminal.max(t_bootstrap_done);
         tracer.rec(t_end, 0, Ev::PilotDone);
+        // scheduler-throughput metrics ride the trace as an annotation;
+        // deterministic under the virtual clock, so fault-replay
+        // byte-identity (fault_smoke) is preserved
+        core.emit_sched_metrics(&mut tracer);
         let ttx = crate::analytics::ttx(&tracer).unwrap_or(0.0);
         let sched_ok_times = core.sched_ok_times();
         let t_first_saturation = core.t_first_saturation();

@@ -8,6 +8,7 @@ pub mod exp34;
 pub mod exp5;
 pub mod figs;
 pub mod harness;
+pub mod sched_bench;
 pub mod workloads;
 
 pub use harness::{AgentSim, SimConfig, SimOutcome};

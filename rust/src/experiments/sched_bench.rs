@@ -1,0 +1,333 @@
+//! The seeded scheduler-throughput harness (`rp sched-bench`): replays
+//! deterministic allocate/release op streams — shaped like the paper's
+//! weak/strong-scaling scheduler sweeps (§IV, Fig. 5–7) — through both
+//! the indexed [`Continuous`] and the [`NaiveContinuous`] oracle, on
+//! Summit- and Frontera-shaped topologies from [`platform::topology`].
+//!
+//! Two outputs per scenario:
+//!  * an **equivalence verdict**: an FNV-1a digest over every granted
+//!    slot (and every refusal) must match between the two allocators —
+//!    same ops, same placements, byte for byte;
+//!  * a **speedup**: wall time of the naive O(n_nodes) cursor scan vs
+//!    the indexed O(log n) descent over the same stream. The acceptance
+//!    bar (ISSUE 8) is ≥ 5× at 10k nodes.
+//!
+//! `to_json` renders the sweep as `BENCH_sched.json`, the first point of
+//! the repo's performance trajectory. Regeneration: EXPERIMENTS.md
+//! §Scheduler sweeps.
+//!
+//! [`platform::topology`]: crate::platform::topology
+
+use std::time::Instant;
+
+use crate::agent::scheduler::{Allocation, Continuous, NaiveContinuous, ResourceRequest, Scheduler};
+use crate::platform::topology::{Platform, PlatformKind};
+use crate::util::rng::Rng;
+
+/// One step of a pre-generated op stream. `Release` carries a draw that
+/// [`replay`] maps onto the currently-held allocations (`mod held.len()`),
+/// so the same stream is meaningful for any allocator that grants the
+/// same placements.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Op {
+    Alloc(ResourceRequest),
+    Release(usize),
+}
+
+/// A sweep point: topology shape + op-stream size + seed.
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    pub name: &'static str,
+    pub nodes: u32,
+    pub cores_per_node: u32,
+    pub gpus_per_node: u32,
+    pub n_ops: usize,
+    pub seed: u64,
+}
+
+/// What one allocator did with one op stream.
+pub struct Replay {
+    pub placed: u64,
+    pub refused: u64,
+    pub digest: u64,
+    pub secs: f64,
+}
+
+/// Measured comparison of the two allocators on one scenario.
+pub struct ScenarioResult {
+    pub name: &'static str,
+    pub nodes: u32,
+    pub cores_per_node: u32,
+    pub gpus_per_node: u32,
+    pub n_ops: usize,
+    pub placed: u64,
+    pub naive_s: f64,
+    pub indexed_s: f64,
+    pub speedup: f64,
+    pub digest: u64,
+    pub digest_match: bool,
+    /// mean index probes per placement attempt (from `SchedStats`)
+    pub mean_scan: f64,
+}
+
+/// The paper-shaped sweep: weak scaling over Summit-like nodes (42c/6g,
+/// exp 3–4 geometry) and a Frontera-shaped 10k-node point (56c, the
+/// ISSUE-8 acceptance scenario). `full` adds the 100k-task point and
+/// lengthens the 10k-node stream.
+pub fn paper_sweep(seed: u64, full: bool) -> Vec<Scenario> {
+    let summit = Platform::load(PlatformKind::Summit);
+    let frontera = Platform::load(PlatformKind::Frontera);
+    let mut sweep = vec![
+        Scenario {
+            name: "summit_1k",
+            nodes: 512,
+            cores_per_node: summit.cores_per_node,
+            gpus_per_node: summit.gpus_per_node,
+            n_ops: 1_000,
+            seed,
+        },
+        Scenario {
+            name: "summit_10k",
+            nodes: 2_048,
+            cores_per_node: summit.cores_per_node,
+            gpus_per_node: summit.gpus_per_node,
+            n_ops: 10_000,
+            seed: seed ^ 1,
+        },
+        Scenario {
+            name: "frontera_10k_nodes",
+            nodes: 10_000,
+            cores_per_node: frontera.cores_per_node,
+            gpus_per_node: frontera.gpus_per_node,
+            n_ops: if full { 100_000 } else { 20_000 },
+            seed: seed ^ 2,
+        },
+    ];
+    if full {
+        sweep.push(Scenario {
+            name: "summit_100k",
+            nodes: 4_096,
+            cores_per_node: summit.cores_per_node,
+            gpus_per_node: summit.gpus_per_node,
+            n_ops: 100_000,
+            seed: seed ^ 3,
+        });
+    }
+    sweep
+}
+
+fn req(ranks: u32, cpr: u32, gpr: u32, mpi: bool) -> ResourceRequest {
+    ResourceRequest {
+        ranks,
+        cores_per_rank: cpr,
+        gpus_per_rank: gpr,
+        uses_mpi: mpi,
+        node_tag: None,
+    }
+}
+
+/// Generate the scenario's op stream: an alloc-heavy ramp to high
+/// occupancy, then steady churn over a heterogeneous mix — small CPU
+/// tasks, half-node tasks, GPU ranks (when the topology has GPUs),
+/// multi-node MPI packs, and occasional whole-node requests that go
+/// hole-hunting (the case where the naive cursor scan walks the machine
+/// and the index descends in O(log n)).
+pub fn op_stream(sc: &Scenario) -> Vec<Op> {
+    let mut rng = Rng::new(sc.seed);
+    let cpn = sc.cores_per_node as u64;
+    let mut ops = Vec::with_capacity(sc.n_ops);
+    let ramp = sc.n_ops / 3;
+    let mut approx_held = 0usize;
+    for i in 0..sc.n_ops {
+        let alloc_p = if i < ramp { 0.9 } else { 0.5 };
+        if approx_held == 0 || rng.bool(alloc_p) {
+            let x = rng.below(100);
+            let rq = if x < 50 {
+                req(1, rng.range_u64(1, 4) as u32, 0, false)
+            } else if x < 80 {
+                req(1, rng.range_u64(2, (cpn / 2).max(2)) as u32, 0, false)
+            } else if x < 90 && sc.gpus_per_node > 0 {
+                req(rng.range_u64(1, 2) as u32, 2, 1, true)
+            } else if x < 97 {
+                req(rng.range_u64(2, 8) as u32, (cpn / 2 + 1) as u32, 0, true)
+            } else {
+                req(1, sc.cores_per_node, 0, false)
+            };
+            ops.push(Op::Alloc(rq));
+            approx_held += 1;
+        } else {
+            ops.push(Op::Release(rng.below(1 << 30) as usize));
+            approx_held -= 1;
+        }
+    }
+    ops
+}
+
+const FNV_BASIS: u64 = 0xcbf29ce484222325;
+const FNV_PRIME: u64 = 0x100000001b3;
+
+fn fnv(digest: &mut u64, v: u64) {
+    *digest ^= v;
+    *digest = digest.wrapping_mul(FNV_PRIME);
+}
+
+/// Replay an op stream through one allocator, timing it and folding every
+/// granted slot (node, cores, gpus) — and every refusal — into an FNV-1a
+/// digest. Two allocators that place identically produce identical
+/// digests *and* identical held-set evolutions, so their release orders
+/// stay aligned too.
+pub fn replay<S: Scheduler>(sched: &mut S, ops: &[Op]) -> Replay {
+    let mut held: Vec<Allocation> = Vec::new();
+    let mut placed = 0u64;
+    let mut refused = 0u64;
+    let mut digest = FNV_BASIS;
+    let t0 = Instant::now();
+    for op in ops {
+        match op {
+            Op::Alloc(rq) => match sched.try_allocate(rq) {
+                Some(a) => {
+                    for s in &a.slots {
+                        fnv(&mut digest, s.node_idx as u64);
+                        fnv(&mut digest, s.cores as u64);
+                        fnv(&mut digest, s.gpus as u64);
+                    }
+                    placed += 1;
+                    held.push(a);
+                }
+                None => {
+                    fnv(&mut digest, u64::MAX);
+                    refused += 1;
+                }
+            },
+            Op::Release(draw) => {
+                if !held.is_empty() {
+                    let a = held.swap_remove(draw % held.len());
+                    sched.release(&a);
+                }
+            }
+        }
+    }
+    Replay {
+        placed,
+        refused,
+        digest,
+        secs: t0.elapsed().as_secs_f64(),
+    }
+}
+
+/// Run one scenario through both allocators and compare.
+pub fn run_scenario(sc: &Scenario) -> ScenarioResult {
+    let ops = op_stream(sc);
+    let mut naive = NaiveContinuous::new(sc.nodes, sc.cores_per_node, sc.gpus_per_node);
+    let rn = replay(&mut naive, &ops);
+    let mut indexed = Continuous::new(sc.nodes, sc.cores_per_node, sc.gpus_per_node);
+    let ri = replay(&mut indexed, &ops);
+    let stats = indexed.take_stats();
+    ScenarioResult {
+        name: sc.name,
+        nodes: sc.nodes,
+        cores_per_node: sc.cores_per_node,
+        gpus_per_node: sc.gpus_per_node,
+        n_ops: sc.n_ops,
+        placed: ri.placed,
+        naive_s: rn.secs,
+        indexed_s: ri.secs,
+        speedup: if ri.secs > 0.0 { rn.secs / ri.secs } else { 0.0 },
+        digest: ri.digest,
+        digest_match: rn.digest == ri.digest
+            && rn.placed == ri.placed
+            && rn.refused == ri.refused,
+        mean_scan: stats.mean_scan(),
+    }
+}
+
+/// Run the paper sweep.
+pub fn run_sweep(seed: u64, full: bool) -> Vec<ScenarioResult> {
+    paper_sweep(seed, full).iter().map(run_scenario).collect()
+}
+
+/// Render the sweep as `BENCH_sched.json` (schema `rp-sched-bench/v1`) —
+/// hand-rolled JSON, since the image has no serde.
+pub fn to_json(results: &[ScenarioResult], seed: u64, full: bool) -> String {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str("  \"schema\": \"rp-sched-bench/v1\",\n");
+    s.push_str("  \"generated\": true,\n");
+    s.push_str(&format!("  \"seed\": {seed},\n"));
+    s.push_str(&format!("  \"full\": {full},\n"));
+    s.push_str("  \"scenarios\": [\n");
+    for (i, r) in results.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"name\": \"{}\", \"nodes\": {}, \"cores_per_node\": {}, \
+             \"gpus_per_node\": {}, \"n_ops\": {}, \"placed\": {}, \
+             \"naive_s\": {:.6}, \"indexed_s\": {:.6}, \"speedup\": {:.2}, \
+             \"mean_scan\": {:.2}, \"digest\": \"{:016x}\", \"digest_match\": {}}}{}\n",
+            r.name,
+            r.nodes,
+            r.cores_per_node,
+            r.gpus_per_node,
+            r.n_ops,
+            r.placed,
+            r.naive_s,
+            r.indexed_s,
+            r.speedup,
+            r.mean_scan,
+            r.digest,
+            r.digest_match,
+            if i + 1 < results.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> Scenario {
+        Scenario {
+            name: "test_small",
+            nodes: 192,
+            cores_per_node: 42,
+            gpus_per_node: 6,
+            n_ops: 2_000,
+            seed: 0xBE7C,
+        }
+    }
+
+    #[test]
+    fn op_stream_is_seed_stable() {
+        let sc = small();
+        assert_eq!(op_stream(&sc), op_stream(&sc));
+        let mut other = sc.clone();
+        other.seed ^= 1;
+        assert_ne!(op_stream(&sc), op_stream(&other));
+    }
+
+    #[test]
+    fn indexed_and_naive_replay_identically() {
+        let r = run_scenario(&small());
+        assert!(r.digest_match, "indexed placements diverged from naive");
+        assert!(r.placed > 0, "stream must actually place tasks");
+    }
+
+    #[test]
+    fn sweep_digests_are_deterministic() {
+        // tiny custom scenario twice: identical digests (this is what the
+        // CI bench-smoke `--check` flag asserts at full scale)
+        let a = run_scenario(&small());
+        let b = run_scenario(&small());
+        assert_eq!(a.digest, b.digest);
+        assert_eq!(a.placed, b.placed);
+    }
+
+    #[test]
+    fn json_has_schema_and_scenarios() {
+        let r = run_scenario(&small());
+        let json = to_json(&[r], 42, false);
+        assert!(json.contains("\"schema\": \"rp-sched-bench/v1\""));
+        assert!(json.contains("\"name\": \"test_small\""));
+        assert!(json.contains("\"digest_match\": true"));
+    }
+}

@@ -7,7 +7,7 @@
 //!   rp platforms
 //!   rp artifacts [--dir PATH]
 
-use rp::experiments::{exp12, exp34, exp5, figs, write_csv};
+use rp::experiments::{exp12, exp34, exp5, figs, sched_bench, write_csv};
 use rp::util::args::Args;
 
 fn main() {
@@ -17,6 +17,7 @@ fn main() {
         Some("platforms") => platforms(),
         Some("artifacts") => artifacts(&args),
         Some("fault-smoke") => fault_smoke(&args),
+        Some("sched-bench") => sched_bench_cmd(&args),
         _ => usage(),
     }
 }
@@ -33,7 +34,12 @@ fn usage() {
            artifacts         list compiled PJRT artifacts (--dir PATH)\n\
            fault-smoke       deterministic fault-injection smoke test (--seed N):\n\
                              runs the seeded DVM-collapse scenario twice and\n\
-                             fails unless the recovery traces are byte-identical\n"
+                             fails unless the recovery traces are byte-identical\n\
+           sched-bench       seeded scheduler-throughput sweep: indexed vs naive\n\
+                             allocator on paper-shaped topologies, writes\n\
+                             BENCH_sched.json (--seed N --full --out PATH --check;\n\
+                             --check re-runs the sweep and fails on any\n\
+                             placement-digest divergence)\n"
     );
     std::process::exit(2);
 }
@@ -170,6 +176,51 @@ fn fault_smoke(args: &Args) {
         a.n_recovered,
         a.n_affected
     );
+}
+
+/// The CI perf gate: run the seeded indexed-vs-naive scheduler sweep,
+/// verify placement equivalence (digests), optionally re-run for a
+/// determinism check, and write `BENCH_sched.json`.
+fn sched_bench_cmd(args: &Args) {
+    let seed = args.u64_or("seed", 42);
+    let full = args.flag("full");
+    let out = args.get_or("out", "BENCH_sched.json");
+    println!("sched-bench: seeded scheduler sweep, seed={seed} full={full}");
+    let results = sched_bench::run_sweep(seed, full);
+    let mut ok = true;
+    for r in &results {
+        println!(
+            "  {:<20} nodes={:<6} ops={:<7} placed={:<7} naive={:.4}s indexed={:.4}s \
+             speedup={:.1}x mean_scan={:.2} digest_match={}",
+            r.name, r.nodes, r.n_ops, r.placed, r.naive_s, r.indexed_s, r.speedup,
+            r.mean_scan, r.digest_match
+        );
+        if !r.digest_match {
+            eprintln!("FAIL: {} placed differently under the indexed allocator", r.name);
+            ok = false;
+        }
+    }
+    if args.flag("check") {
+        let again = sched_bench::run_sweep(seed, full);
+        for (a, b) in results.iter().zip(again.iter()) {
+            if a.digest != b.digest || a.placed != b.placed {
+                eprintln!("FAIL: {} placement digest differs between identical runs", a.name);
+                ok = false;
+            }
+        }
+        if ok {
+            println!("determinism check OK: placement digests identical across two sweeps");
+        }
+    }
+    let json = sched_bench::to_json(&results, seed, full);
+    if let Err(e) = std::fs::write(out, &json) {
+        eprintln!("FAIL: could not write {out}: {e}");
+        std::process::exit(1);
+    }
+    println!("wrote {out}");
+    if !ok {
+        std::process::exit(1);
+    }
 }
 
 fn platforms() {

@@ -5,6 +5,7 @@
 //! the paper measured ~2.5 % overhead with buffered I/O; ours is bounded
 //! by one Vec push (see `rp experiment tracing`).
 
+use std::borrow::Cow;
 use std::fmt;
 
 /// The event vocabulary of the paper's figures.
@@ -91,12 +92,37 @@ impl fmt::Display for TraceEvent {
     }
 }
 
+/// A free-form annotation: component-level metrics (scheduler throughput,
+/// scan histograms, …) that don't fit the fixed [`Ev`] vocabulary. RP's
+/// profiler allows arbitrary `msg` fields; RADICAL-Analytics carries them
+/// through. Entity/event here are arbitrary strings and may contain
+/// commas or quotes — [`Tracer::to_csv`] escapes them per RFC 4180.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Note {
+    pub t: f64,
+    pub entity: String,
+    pub event: String,
+}
+
+/// Quote a CSV field iff it needs it (RFC 4180): fields containing a
+/// comma, quote or line break are wrapped in quotes with embedded quotes
+/// doubled. Borrows when no escaping is needed — the hot event path
+/// never allocates here.
+fn csv_field(s: &str) -> Cow<'_, str> {
+    if s.chars().any(|c| matches!(c, ',' | '"' | '\n' | '\r')) {
+        Cow::Owned(format!("\"{}\"", s.replace('"', "\"\"")))
+    } else {
+        Cow::Borrowed(s)
+    }
+}
+
 /// The tracer: a buffered, appendable event log. `enabled=false` turns it
 /// into a no-op (for the tracing-overhead experiment).
 #[derive(Debug, Default)]
 pub struct Tracer {
     pub enabled: bool,
     events: Vec<TraceEvent>,
+    notes: Vec<Note>,
 }
 
 impl Tracer {
@@ -108,6 +134,7 @@ impl Tracer {
             } else {
                 Vec::new()
             },
+            notes: Vec::new(),
         }
     }
 
@@ -118,8 +145,31 @@ impl Tracer {
         }
     }
 
+    /// Record a free-form metrics annotation (no-op when disabled).
+    pub fn annotate(&mut self, t: f64, entity: &str, event: impl Into<String>) {
+        if self.enabled {
+            self.notes.push(Note {
+                t,
+                entity: entity.to_string(),
+                event: event.into(),
+            });
+        }
+    }
+
+    /// Pre-size the event buffer ahead of a bulk pass so placement-rate
+    /// measurements aren't skewed by mid-batch reallocation.
+    pub fn reserve(&mut self, additional: usize) {
+        if self.enabled {
+            self.events.reserve(additional);
+        }
+    }
+
     pub fn events(&self) -> &[TraceEvent] {
         &self.events
+    }
+
+    pub fn notes(&self) -> &[Note] {
+        &self.notes
     }
 
     pub fn len(&self) -> usize {
@@ -145,11 +195,22 @@ impl Tracer {
             .map(|e| e.t)
     }
 
-    /// Export as CSV (the RADICAL-Analytics interchange format here).
+    /// Export as CSV (the RADICAL-Analytics interchange format here),
+    /// RFC-4180-safe: event rows need no quoting ([`Ev::name`] strings are
+    /// comma/quote-free by construction), while annotation rows carry
+    /// arbitrary strings and are escaped via [`csv_field`].
     pub fn to_csv(&self) -> String {
         let mut s = String::from("time,entity,event\n");
         for e in &self.events {
             s.push_str(&format!("{:.6},{},{}\n", e.t, e.entity, e.ev.name()));
+        }
+        for n in &self.notes {
+            s.push_str(&format!(
+                "{:.6},{},{}\n",
+                n.t,
+                csv_field(&n.entity),
+                csv_field(&n.event)
+            ));
         }
         s
     }
@@ -190,6 +251,32 @@ mod tests {
     }
 
     #[test]
+    fn csv_escapes_commas_and_quotes_rfc4180() {
+        let mut tr = Tracer::new(true);
+        tr.rec(0.5, 1, Ev::TaskDone);
+        tr.annotate(1.0, "scheduler", "scan_hist=1:5,2-3:2,>=128:0");
+        tr.annotate(2.0, "node \"a,b\"", "plain");
+        tr.annotate(3.0, "multi", "line\nbreak");
+        let csv = tr.to_csv();
+        // plain event rows stay unquoted
+        assert!(csv.contains("0.500000,1,task_done\n"));
+        // comma-bearing field gets quoted as one field
+        assert!(csv.contains("1.000000,scheduler,\"scan_hist=1:5,2-3:2,>=128:0\"\n"));
+        // embedded quotes are doubled, commas quoted
+        assert!(csv.contains("2.000000,\"node \"\"a,b\"\"\",plain\n"));
+        // line breaks quoted so the record stays one logical row
+        assert!(csv.contains("3.000000,multi,\"line\nbreak\"\n"));
+    }
+
+    #[test]
+    fn annotations_are_noop_when_disabled() {
+        let mut tr = Tracer::new(false);
+        tr.annotate(1.0, "scheduler", "rate=1");
+        assert!(tr.notes().is_empty());
+        assert_eq!(tr.to_csv(), "time,entity,event\n");
+    }
+
+    #[test]
     fn event_names_unique() {
         use std::collections::HashSet;
         let all = [
@@ -220,5 +307,9 @@ mod tests {
         ];
         let names: HashSet<&str> = all.iter().map(|e| e.name()).collect();
         assert_eq!(names.len(), all.len());
+        // the to_csv fast path relies on event names being CSV-clean
+        for name in names {
+            assert!(!name.chars().any(|c| matches!(c, ',' | '"' | '\n' | '\r')));
+        }
     }
 }

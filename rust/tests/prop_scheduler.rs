@@ -4,7 +4,7 @@
 //! interleavings (see DESIGN.md §8).
 
 use rp::agent::scheduler::{
-    Allocation, Continuous, ResourceRequest, Scheduler, Tagged, Torus,
+    Allocation, Continuous, NaiveContinuous, ResourceRequest, Scheduler, Tagged, Torus,
 };
 use rp::util::prop::{prop, Gen};
 
@@ -174,6 +174,163 @@ fn torus_conserves_whole_nodes() {
         }
         if sched.free_cores() != 64 * 16 {
             return Err("torus leak".into());
+        }
+        Ok(())
+    });
+}
+
+/// ISSUE-8 equivalence oracle: the indexed `Continuous` and the kept
+/// pre-index linear scan (`NaiveContinuous`) must agree — feasibility
+/// verdicts, *identical placements* (same cursor policy), free counters,
+/// alive-node counts and blacklist drains — over 1000 seeded random
+/// allocate/release/blacklist/drain sequences on random geometries.
+#[test]
+fn indexed_matches_naive_reference() {
+    prop(0x1DE1, 1000, |g| {
+        let n_nodes = g.u64_in(1, 96) as u32;
+        let cpn = g.u64_in(1, 48) as u32;
+        let gpn = g.u64_in(0, 6) as u32;
+        let mut naive = NaiveContinuous::new(n_nodes, cpn, gpn);
+        let mut indexed = Continuous::new(n_nodes, cpn, gpn);
+        let mut held: Vec<Allocation> = Vec::new();
+        let steps = g.usize_in(20, 80);
+        for _ in 0..steps {
+            let x = g.f64_in(0.0, 1.0);
+            if x < 0.55 || held.is_empty() {
+                // allocate — occasionally oversized/infeasible on purpose
+                let rq = ResourceRequest {
+                    ranks: g.u64_in(1, 2 * n_nodes as u64) as u32,
+                    cores_per_rank: g.u64_in(1, cpn as u64 + 1) as u32,
+                    gpus_per_rank: if g.bool(0.3) {
+                        g.u64_in(0, gpn as u64 + 1) as u32
+                    } else {
+                        0
+                    },
+                    uses_mpi: g.bool(0.5),
+                    node_tag: None,
+                };
+                if naive.feasible(&rq) != indexed.feasible(&rq) {
+                    return Err(format!("feasibility diverged for {rq:?}"));
+                }
+                let a = naive.try_allocate(&rq);
+                let b = indexed.try_allocate(&rq);
+                if a != b {
+                    return Err(format!(
+                        "placement diverged for {rq:?}: naive={a:?} indexed={b:?}"
+                    ));
+                }
+                if let Some(alloc) = a {
+                    held.push(alloc);
+                }
+            } else if x < 0.85 {
+                // identical placements ⇒ one held list serves both sides
+                let i = g.usize_in(0, held.len() - 1);
+                let alloc = held.swap_remove(i);
+                naive.release(&alloc);
+                indexed.release(&alloc);
+            } else {
+                // blacklist (or idempotent re-blacklist / drain alias)
+                let node = g.u64_in(0, n_nodes as u64 - 1) as u32;
+                let da = naive.blacklist_node(node);
+                let db = indexed.blacklist_node(node);
+                if da != db {
+                    return Err(format!(
+                        "blacklist drain diverged on node {node}: {da:?} vs {db:?}"
+                    ));
+                }
+            }
+            if naive.free_cores() != indexed.free_cores()
+                || naive.free_gpus() != indexed.free_gpus()
+            {
+                return Err("free-counter divergence".into());
+            }
+            if naive.n_alive_nodes() != indexed.n_alive_nodes() {
+                return Err("alive-node divergence".into());
+            }
+        }
+        for alloc in held.drain(..) {
+            naive.release(&alloc);
+            indexed.release(&alloc);
+        }
+        if naive.free_cores() != indexed.free_cores()
+            || naive.free_gpus() != indexed.free_gpus()
+        {
+            return Err("post-drain divergence".into());
+        }
+        Ok(())
+    });
+}
+
+/// ISSUE-8 invariant: after any interleaving of allocate, `release` and
+/// `blacklist_node`, the books balance —
+/// free + in-flight + drained + swallowed == topology total. Blacklisting
+/// drains only a node's *free* capacity; in-flight slots on a dead node
+/// are swallowed at release time, never resurrected.
+#[test]
+fn capacity_conserved_under_blacklist_interleavings() {
+    prop(0x1DE2, 300, |g| {
+        let n_nodes = g.u64_in(1, 64) as u32;
+        let cpn = g.u64_in(1, 32) as u32;
+        let gpn = g.u64_in(0, 4) as u32;
+        let mut s = Continuous::new(n_nodes, cpn, gpn);
+        let total_c = s.total_cores();
+        let total_g = s.total_gpus();
+        let mut held: Vec<Allocation> = Vec::new();
+        let (mut drained_c, mut drained_g) = (0u64, 0u64);
+        let (mut swallowed_c, mut swallowed_g) = (0u64, 0u64);
+        for _ in 0..g.usize_in(20, 120) {
+            let x = g.f64_in(0.0, 1.0);
+            if x < 0.5 || held.is_empty() {
+                let rq = ResourceRequest {
+                    ranks: g.u64_in(1, 8) as u32,
+                    cores_per_rank: g.u64_in(1, cpn as u64) as u32,
+                    gpus_per_rank: if gpn > 0 && g.bool(0.3) {
+                        g.u64_in(0, gpn as u64) as u32
+                    } else {
+                        0
+                    },
+                    uses_mpi: g.bool(0.5),
+                    node_tag: None,
+                };
+                if let Some(a) = s.try_allocate(&rq) {
+                    held.push(a);
+                }
+            } else if x < 0.8 {
+                let i = g.usize_in(0, held.len() - 1);
+                let a = held.swap_remove(i);
+                for slot in &a.slots {
+                    if s.is_blacklisted(slot.node_idx) {
+                        swallowed_c += slot.cores as u64;
+                        swallowed_g += slot.gpus as u64;
+                    }
+                }
+                s.release(&a);
+            } else {
+                let node = g.u64_in(0, n_nodes as u64 - 1) as u32;
+                let (dc, dg) = s.blacklist_node(node);
+                drained_c += dc as u64;
+                drained_g += dg as u64;
+            }
+            let busy_c: u64 = held
+                .iter()
+                .flat_map(|a| &a.slots)
+                .map(|sl| sl.cores as u64)
+                .sum();
+            let busy_g: u64 = held
+                .iter()
+                .flat_map(|a| &a.slots)
+                .map(|sl| sl.gpus as u64)
+                .sum();
+            if s.free_cores() + busy_c + drained_c + swallowed_c != total_c {
+                return Err(format!(
+                    "core books off: free={} busy={busy_c} drained={drained_c} \
+                     swallowed={swallowed_c} total={total_c}",
+                    s.free_cores()
+                ));
+            }
+            if s.free_gpus() + busy_g + drained_g + swallowed_g != total_g {
+                return Err("gpu books off".into());
+            }
         }
         Ok(())
     });
