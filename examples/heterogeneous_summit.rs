@@ -1,17 +1,25 @@
 //! Heterogeneous workload on simulated Summit with multi-DVM PRRTE — an
 //! interactive version of Experiment 3 (Fig. 9a/b) with configurable
-//! geometry and fault injection:
+//! geometry, fault injection, and (PR 9) streamed chunked submission:
 //!
 //!     cargo run --release --example heterogeneous_summit -- \
-//!         [--nodes 1024] [--tasks 3098] [--dvm-nodes 256] [--faults]
+//!         [--nodes 1024] [--tasks 3098] [--dvm-nodes 256] [--faults] \
+//!         [--chunk 1024] [--interval 20]
 //!
-//! Prints the RU timeline areas (Pilot Startup / Warmup / Prepare Exec /
-//! Exec / Idle) the paper plots, plus TTX/RU/OVH.
+//! The pilot geometry is validated through `PilotDescription::builder()`
+//! (verify-on-build), and submission is streamed through the DES
+//! `SubmitModel`: chunks arrive every `--interval` virtual seconds while
+//! the agent bootstraps, schedules, and executes — the run reports the
+//! submit/execute overlap alongside the RU timeline areas (Pilot Startup
+//! / Warmup / Prepare Exec / Exec / Idle) the paper plots, plus
+//! TTX/RU/OVH.
 
 use rp::analytics::RuTimeline;
-use rp::experiments::harness::{AgentSim, SimConfig};
+use rp::experiments::harness::{AgentSim, SimConfig, SubmitModel};
 use rp::experiments::workloads::heterogeneous_summit;
+use rp::pilot::PilotDescription;
 use rp::platform::PlatformKind;
+use rp::tracer::Ev;
 use rp::util::args::Args;
 use rp::util::rng::Rng;
 
@@ -22,17 +30,29 @@ fn main() {
     let dvm_nodes = args.u64_or("dvm-nodes", 256) as u32;
     let faults = args.flag("faults");
     let seed = args.u64_or("seed", 42);
+    let chunk = args.usize_or("chunk", 1024);
+    let interval_s = args.f64_or("interval", 20.0);
+
+    // validate the requested geometry the handle-API way: verify-on-build
+    let pd = PilotDescription::builder()
+        .resource("ornl.summit")
+        .nodes(nodes)
+        .runtime_s(7200.0)
+        .nodes_per_dvm(dvm_nodes)
+        .build()
+        .expect("invalid pilot geometry");
 
     let mut rng = Rng::new(seed);
     let tasks = heterogeneous_summit(n_tasks, 600.0, 900.0, &mut rng);
     let gpu = tasks.iter().filter(|t| t.gpus() > 0).count();
     let mpi = tasks.iter().filter(|t| t.uses_mpi() && t.cores() > 42).count();
     println!(
-        "workload: {n_tasks} tasks ({gpu} GPU, {mpi} multi-node MPI, {} CPU)",
+        "workload: {n_tasks} tasks ({gpu} GPU, {mpi} multi-node MPI, {} CPU), \
+         streamed in chunks of {chunk} every {interval_s} s",
         n_tasks - gpu - mpi
     );
 
-    let mut cfg = SimConfig::new(PlatformKind::Summit, nodes);
+    let mut cfg = SimConfig::new(PlatformKind::Summit, pd.nodes);
     cfg.sched_rate = 300.0;
     cfg.launch_method = Some("prrte".into());
     cfg.nodes_per_dvm = dvm_nodes;
@@ -40,6 +60,7 @@ fn main() {
     cfg.task_failures = faults;
     cfg.dvm_failures = faults;
     cfg.seed = seed;
+    cfg.submit = Some(SubmitModel { chunk, interval_s });
     let agent_nodes = cfg.agent_nodes;
     let out = AgentSim::new(cfg).run(&tasks);
 
@@ -69,6 +90,23 @@ fn main() {
         out.n_done,
         out.n_failed
     );
+
+    // the PR-9 overlap: first execution vs last submission chunk
+    let chunks = out.tracer.of_kind(Ev::SubmitChunk);
+    let execs = out.tracer.of_kind(Ev::TaskExecStart);
+    if let (Some(first_exec), Some(last_submit)) = (execs.first(), chunks.last()) {
+        println!(
+            "submission: {} chunks, last at {:.0} s; first exec at {:.0} s → overlap {}",
+            chunks.len(),
+            last_submit.t,
+            first_exec.t,
+            if first_exec.t < last_submit.t {
+                format!("{:.0} s", last_submit.t - first_exec.t)
+            } else {
+                "none".into()
+            }
+        );
+    }
 
     // ASCII Fig-9: stacked areas per time bin
     println!("\n{:>7}  {}", "t (s)", "startup=S warmup=W prepare=P exec=# idle=.");

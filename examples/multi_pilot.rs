@@ -4,72 +4,79 @@
 //!
 //!     cargo run --release --example multi_pilot
 //!
-//! One TaskManager round-robins a BPTI ensemble across TWO pilots on TWO
-//! different (simulated) platforms — Titan/ORTE and Summit/PRRTE — and the
-//! per-platform TTX difference shows the launcher overheads side by side.
+//! Part 1 uses the streaming handle-based client API (PR 9): one Session
+//! round-robins a workload across TWO local pilot engines, submission
+//! overlapping execution. Part 2 replays the same BPTI ensemble split
+//! through the DES agent on two simulated platforms — Titan/ORTE and
+//! Summit/PRRTE — so the per-platform TTX difference shows the launcher
+//! overheads side by side.
 
-use rp::db::Db;
 use rp::experiments::harness::{AgentSim, SimConfig};
 use rp::experiments::workloads::bpti_emulated;
-use rp::pilot::{PilotDescription, PilotManager};
-use rp::platform::{BatchSystem, PlatformKind};
-use rp::tmgr::TaskManager;
+use rp::pilot::PilotDescription;
+use rp::platform::PlatformKind;
+use rp::session::Session;
+use rp::task::{TaskDescription, TaskState};
 use rp::util::rng::Rng;
 
 fn main() {
-    // --- leader side: describe pilots on two platforms ------------------
-    let mut pmgr = PilotManager::new();
-    let mut titan_batch = BatchSystem::new("pbs", 18_688, 30.0, 1);
-    let mut summit_batch = BatchSystem::new("lsf", 4_608, 30.0, 2);
+    // --- part 1: one session, two local pilots, handle-based flow -------
+    let mut session = Session::new();
+    let local = || {
+        PilotDescription::builder()
+            .resource("local.localhost")
+            .nodes(1)
+            .runtime_s(3600.0)
+            .build()
+            .expect("pilot description")
+    };
+    let p0 = session.create_pilot(local()).expect("pilot 0");
+    let p1 = session.create_pilot(local()).expect("pilot 1");
+    println!("pilots active: {p0}, {p1} (round-robin binding)");
 
-    let p_titan = pmgr
-        .submit(PilotDescription::new("ornl.titan", 256, 7200.0))
-        .unwrap();
-    let p_summit = pmgr
-        .submit(PilotDescription::new("ornl.summit", 98, 7200.0))
-        .unwrap();
-
-    let t0 = pmgr.launch(p_titan, &mut titan_batch, 0).unwrap();
-    let t1 = pmgr.launch(p_summit, &mut summit_batch, 0).unwrap();
-    pmgr.activate(p_titan, &mut titan_batch, t0);
-    pmgr.activate(p_summit, &mut summit_batch, t1);
-    let uids: Vec<String> = vec![
-        pmgr.pilot(p_titan).uid.clone(),
-        pmgr.pilot(p_summit).uid.clone(),
-    ];
-    println!("pilots active: {} (titan 256 nodes), {} (summit 98 nodes)", uids[0], uids[1]);
-
-    // --- task manager: one ensemble, round-robin across the pilots ------
-    let mut tmgr = TaskManager::new();
-    let mut rng = Rng::new(7);
-    tmgr.submit(bpti_emulated(256, &mut rng)).unwrap();
-    let db = Db::new();
-    tmgr.schedule_to_pilots(&db, &uids).unwrap();
+    let quick: Vec<TaskDescription> = (0..16)
+        .map(|i| {
+            TaskDescription::builder()
+                .name(&format!("bpti.{i}"))
+                .executable("/bin/true")
+                .build()
+                .expect("task description")
+        })
+        .collect();
+    let handles = session.submit(quick).expect("submit");
+    println!("submitted {} tasks, nonblocking — waiting on handles…", handles.len());
+    session.wait(&handles, None).expect("wait");
+    let result = session.finish().expect("finish");
+    let done = result
+        .tasks
+        .iter()
+        .filter(|t| t.state == TaskState::Done)
+        .count();
     println!(
-        "routed: {} tasks to {}, {} tasks to {}",
-        db.pending(&uids[0]),
-        uids[0],
-        db.pending(&uids[1]),
-        uids[1]
+        "{done}/{} DONE across both pilots in {:.3} s\n",
+        handles.len(),
+        result.ttx
     );
+    session.close();
 
-    // --- each pilot's agent executes its share (DES mode) ---------------
-    for (uid, platform, nodes, lm) in [
-        (&uids[0], PlatformKind::Titan, 256u32, "orte"),
-        (&uids[1], PlatformKind::Summit, 98u32, "prrte"),
+    // --- part 2: the same split on two simulated platforms (DES) --------
+    let mut rng = Rng::new(7);
+    let ensemble = bpti_emulated(256, &mut rng);
+    // round-robin split, as the TaskManager stage binds it
+    let titan_share: Vec<_> = ensemble.iter().step_by(2).cloned().collect();
+    let summit_share: Vec<_> = ensemble.iter().skip(1).step_by(2).cloned().collect();
+
+    for (label, platform, nodes, lm, tasks) in [
+        ("titan", PlatformKind::Titan, 256u32, "orte", &titan_share),
+        ("summit", PlatformKind::Summit, 98u32, "prrte", &summit_share),
     ] {
-        let records = db.pull_tasks(uid, usize::MAX);
-        let tasks: Vec<_> = records
-            .iter()
-            .map(|r| tmgr.task(r.index).description.clone())
-            .collect();
         let mut cfg = SimConfig::new(platform, nodes);
         cfg.sched_rate = 300.0;
         cfg.launch_method = Some(lm.into());
         cfg.seed = 11;
-        let out = AgentSim::new(cfg).run(&tasks);
+        let out = AgentSim::new(cfg).run(tasks);
         println!(
-            "{uid} [{platform:?}/{lm}]: {} tasks, TTX {:.0} s, {} done / {} failed",
+            "{label} [{platform:?}/{lm}, {nodes} nodes]: {} tasks, TTX {:.0} s, {} done / {} failed",
             tasks.len(),
             out.ttx,
             out.n_done,

@@ -3,10 +3,17 @@
 //!
 //!     cargo run --release --example quickstart
 //!
-//! Runs a small mixed workload (real processes + registered functions)
-//! through the full Session → TaskManager → DB → Agent pipeline and
-//! prints the resulting task states and the trace-derived TTX.
+//! Uses the streaming handle-based client API (PR 9): `create_pilot`
+//! starts the pilot engine, `submit` is nonblocking and returns
+//! `TaskHandle`s while the agent is already scheduling and executing,
+//! `on_state_change` observes every transition in order, and
+//! `wait`/`finish` drain the stream. `Session::run_local` remains the
+//! one-call blocking form of exactly this sequence.
 
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use rp::pilot::PilotDescription;
 use rp::session::Session;
 use rp::task::{TaskDescription, TaskState};
 use rp::util::json::Json;
@@ -26,22 +33,58 @@ fn main() {
         Ok(a as f64)
     });
 
-    // executable tasks (spawned processes) + function tasks
+    // state callbacks fire in per-task state order: submit → executing →
+    // terminal (here: count how many tasks were seen executing)
+    let executing = Arc::new(AtomicUsize::new(0));
+    let seen = executing.clone();
+    session.on_state_change(move |_handle, state| {
+        if state == TaskState::AgentExecuting {
+            seen.fetch_add(1, Ordering::Relaxed);
+        }
+    });
+
+    // describe the pilot with the fluent builder (verify-on-build) and
+    // start its engine
+    let pd = PilotDescription::builder()
+        .resource("local.localhost")
+        .nodes(1)
+        .runtime_s(3600.0)
+        .build()
+        .expect("pilot description");
+    let pilot = session.create_pilot(pd).expect("create_pilot");
+    println!("pilot {pilot} active");
+
+    // executable tasks (spawned processes) + function tasks, all built
+    // with the fluent TaskDescription builder
     let mut tasks: Vec<TaskDescription> = Vec::new();
     for i in 0..8 {
-        let mut td = TaskDescription::emulated("/bin/sh", 1, 1, 0.0);
-        td.arguments = vec!["-c".into(), format!("exit 0 # task {i}")];
-        td.name = format!("exe.{i}");
-        tasks.push(td);
+        tasks.push(
+            TaskDescription::builder()
+                .name(&format!("exe.{i}"))
+                .executable("/bin/sh")
+                .arguments(["-c", &format!("exit 0 # task {i}")])
+                .build()
+                .expect("task description"),
+        );
     }
     for i in 0..8 {
-        let mut td = TaskDescription::func("fibonacci", Json::Num(40.0 + i as f64), 0.0);
-        td.name = format!("fib.{i}");
-        tasks.push(td);
+        tasks.push(
+            TaskDescription::builder()
+                .name(&format!("fib.{i}"))
+                .function("fibonacci", Json::Num(40.0 + i as f64))
+                .build()
+                .expect("task description"),
+        );
     }
 
-    let n = tasks.len();
-    let result = session.run_local(tasks, 0).expect("workload failed");
+    // nonblocking submit: handles come back immediately, execution is
+    // already overlapping with the bulk flush to the DB
+    let handles = session.submit(tasks).expect("submit");
+    let n = handles.len();
+    println!("submitted {n} tasks (first handle: {})", handles[0].uid);
+
+    session.wait(&handles, None).expect("wait");
+    let result = session.finish().expect("finish");
 
     println!("{:<8} {:<10} {:>12}", "task", "state", "result");
     for t in &result.tasks {
@@ -57,7 +100,12 @@ fn main() {
         );
     }
     let done = result.tasks.iter().filter(|t| t.state == TaskState::Done).count();
-    println!("\n{done}/{n} tasks DONE in {:.3} s (trace: {} events)", result.ttx, result.tracer.len());
+    println!(
+        "\n{done}/{n} tasks DONE in {:.3} s (trace: {} events, {} seen executing)",
+        result.ttx,
+        result.tracer.len(),
+        executing.load(Ordering::Relaxed)
+    );
     session.close();
     assert_eq!(done, n);
 }

@@ -27,7 +27,8 @@ use crate::resilience::{
     bridge_beats, Beat, FaultInjector, FaultKind, FaultSpec, HealthEvent, HeartbeatMonitor,
     RetryDecision,
 };
-use crate::task::{Task, TaskDescription, TaskKind, TaskState};
+use crate::task::{DescStore, Task, TaskDescription, TaskKind, TaskState};
+use crate::tmgr::SubmitLedger;
 use crate::tracer::{Ev, Tracer};
 use crate::util::error::Result;
 use crate::util::json::Json;
@@ -166,6 +167,16 @@ impl Completion {
             ran: false,
         }
     }
+
+    /// The drain-watcher's wake marker: carries no task, only forces
+    /// Stager-Out to re-run its ledger completeness check.
+    fn marker() -> Completion {
+        Completion::unran(u32::MAX, 0, String::new())
+    }
+
+    fn is_marker(&self) -> bool {
+        self.index == u32::MAX
+    }
 }
 
 /// Outcome of one agent run.
@@ -179,9 +190,28 @@ pub struct AgentResult {
 // ---------------------------------------------------------------------------
 // pipeline stages
 
+/// Grow the agent's task table to cover `idx`. Under streaming
+/// submission the workload size is unknown up front, so the table is
+/// built lazily as records arrive; with multiple pilots an agent sees
+/// only a subset of the global indices, and the gaps stay as `New`
+/// placeholders (the session's merge prefers whichever pilot's entry
+/// actually progressed). Placeholder uids follow the Counter convention
+/// (`task.{i:06}`), matching what the TaskManager stamped.
+fn ensure_task(tasks: &mut Vec<Task>, store: &DescStore, idx: u32) {
+    while tasks.len() <= idx as usize {
+        let i = tasks.len();
+        tasks.push(Task::new(
+            format!("task.{i:06}"),
+            i as u32,
+            store.get(i as u32),
+        ));
+    }
+}
+
 /// Stager-In: DB records → schedulable tasks (real input staging).
 struct StagerIn<'a> {
     tasks: &'a Mutex<Vec<Task>>,
+    store: &'a DescStore,
     tracer: &'a Mutex<Tracer>,
     clock: Arc<WallClock>,
     stager: Stager,
@@ -209,6 +239,7 @@ impl Component for StagerIn<'_> {
             self.rec(Ev::TaskDbPull, idx);
             let input_staging = {
                 let mut tasks = self.tasks.lock().unwrap();
+                ensure_task(&mut tasks, self.store, idx);
                 let task = &mut tasks[idx as usize];
                 let _ = task.advance(TaskState::TmgrScheduling);
                 task.description.input_staging.clone()
@@ -245,10 +276,14 @@ impl Component for StagerIn<'_> {
 /// places whatever fits and emits `WorkItem`s to the executor workers.
 struct SchedStage<'a> {
     core: SchedCore,
-    descriptions: &'a [TaskDescription],
+    store: &'a DescStore,
     tasks: &'a Mutex<Vec<Task>>,
     tracer: &'a Mutex<Tracer>,
     clock: Arc<WallClock>,
+    /// client-visible state stream: launches push `AgentExecuting`
+    /// through the DB updates channel so session callbacks observe
+    /// execution start while submission is still in flight
+    db: &'a Db,
     q_done: WorkQueue<Completion>,
     tickets: HashMap<u32, (u32, Allocation, LaunchTicket)>,
     rng: Rng,
@@ -265,7 +300,7 @@ impl SchedStage<'_> {
     /// terminal completion. The attempt's resources must already be back
     /// in the pool (Freed message or explicit ticket release).
     fn handle_failure(&mut self, index: u32, error: &str) {
-        let policy = self.descriptions[index as usize].retry;
+        let policy = self.store.with(|ds| ds[index as usize].retry);
         let now = self.clock.now();
         match self.core.report_failure(index, &policy) {
             RetryDecision::Retry { delay_s, .. } => {
@@ -362,10 +397,16 @@ impl Component for SchedStage<'_> {
             self.core.release_bulk(&freed);
         }
         let pilot_cores = self.core.total_cores();
-        let descriptions = self.descriptions;
+        let store = self.store;
+        // hold the description table's read guard across one bulk pass;
+        // session-side submits append behind it and are picked up on the
+        // next wake
+        let ds_guard = store.read();
+        let descriptions: &[TaskDescription] = &ds_guard;
         let tasks = self.tasks;
         let tickets = &mut self.tickets;
         let q_done = &self.q_done;
+        let db = self.db;
         let mut launch_failures: Vec<(u32, String)> = Vec::new();
         {
             let mut tracer = self.tracer.lock().unwrap();
@@ -383,13 +424,18 @@ impl Component for SchedStage<'_> {
                         ticket,
                         ..
                     } => {
-                        let attempt = {
+                        let (attempt, uid) = {
                             let mut ts = tasks.lock().unwrap();
                             let task = &mut ts[index as usize];
                             let _ = task.advance(TaskState::AgentScheduling);
                             let _ = task.advance(TaskState::AgentExecutingPending);
-                            task.current_attempt()
+                            (task.current_attempt(), task.uid.clone())
                         };
+                        // first attempt only: retries would replay the
+                        // executing notification out of order client-side
+                        if attempt == 1 {
+                            db.update_state(&uid, TaskState::AgentExecuting);
+                        }
                         tickets.insert(index, (attempt, alloc, ticket));
                         out.push(WorkItem {
                             index,
@@ -414,6 +460,9 @@ impl Component for SchedStage<'_> {
                 },
             );
         }
+        // release the description guard before handle_failure re-reads
+        // the store (std RwLock read locks must not be re-entered)
+        drop(ds_guard);
         // launch failures walk the same retry policy as run failures;
         // handled outside the closure because they need `&mut core`
         for (index, error) in launch_failures {
@@ -425,16 +474,17 @@ impl Component for SchedStage<'_> {
 
 /// Stager-Out: finalizes every terminal task (real output staging, DB
 /// state updates, trace), feeds freed resources back to the scheduler,
-/// and — once all expected tasks are terminal — ends the pipeline by
-/// returning `Flow::Done` (its output close cascades upstream shutdown).
+/// and — once the submit ledger says the stream has drained and every
+/// credited task is terminal — ends the pipeline by returning
+/// `Flow::Done` (its output close cascades upstream shutdown).
 struct StagerOut<'a> {
     tasks: &'a Mutex<Vec<Task>>,
     tracer: &'a Mutex<Tracer>,
     clock: Arc<WallClock>,
     db: &'a Db,
     stager: Stager,
-    expected: usize,
-    done: usize,
+    ledger: &'a SubmitLedger,
+    done: u64,
 }
 
 impl StagerOut<'_> {
@@ -453,6 +503,11 @@ impl Component for StagerOut<'_> {
 
     fn process(&mut self, batch: Vec<Completion>, out: &WorkQueue<SchedMsg>) -> Result<Flow> {
         for c in batch {
+            if c.is_marker() {
+                // drain-watcher wake: nothing to finalize, just fall
+                // through to the completeness check below
+                continue;
+            }
             if c.ran {
                 // resources return to the scheduler before finalization,
                 // exactly as the monolithic loop released first
@@ -556,7 +611,7 @@ impl Component for StagerOut<'_> {
             }
             self.done += 1;
         }
-        if self.done == self.expected {
+        if self.ledger.is_complete(self.done) {
             Ok(Flow::Done)
         } else {
             Ok(Flow::Continue)
@@ -572,6 +627,10 @@ impl Agent {
     /// Execute `descriptions` (already inserted into `db` under
     /// `cfg.pilot_uid` by the TaskManager) to completion. Blocking; returns
     /// final task states + trace.
+    ///
+    /// This is the phased compatibility wrapper: the whole workload is
+    /// known up front, so it runs the streaming engine over a preloaded
+    /// (already-draining) [`SubmitLedger`].
     pub fn run(
         cfg: &AgentConfig,
         db: &Db,
@@ -586,15 +645,33 @@ impl Agent {
                 ttx: 0.0,
             };
         }
-        let clock = Arc::new(WallClock::new());
+        let store = DescStore::from_vec(descriptions.to_vec());
+        let ledger = SubmitLedger::preloaded(expected as u64);
+        Agent::run_streaming(cfg, db, &store, registry, &ledger, Arc::new(WallClock::new()))
+    }
+
+    /// The streaming engine (PR 9 tentpole): execute a workload that is
+    /// *still being submitted*. The client's `TmgrStage` keeps inserting
+    /// bulk chunks into `db` and crediting `ledger` while this pipeline
+    /// pulls, schedules, and executes — the first task can reach
+    /// `AgentExecuting` before the last is submitted (the overlap the
+    /// paper measures in §IV). Blocks until the ledger reports the
+    /// stream drained *and* every credited task terminal.
+    ///
+    /// `clock` is shared with the session so client- and agent-side
+    /// trace events live on one time axis (overlap detection merges
+    /// them).
+    pub fn run_streaming(
+        cfg: &AgentConfig,
+        db: &Db,
+        store: &DescStore,
+        registry: &FunctionRegistry,
+        ledger: &SubmitLedger,
+        clock: Arc<WallClock>,
+    ) -> AgentResult {
         let tracer = Mutex::new(Tracer::new(cfg.trace));
-        let tasks: Mutex<Vec<Task>> = Mutex::new(
-            descriptions
-                .iter()
-                .enumerate()
-                .map(|(i, td)| Task::new(format!("task.{i:06}"), i as u32, td.clone()))
-                .collect(),
-        );
+        // grown lazily by Stager-In as records arrive (size unknown)
+        let tasks: Mutex<Vec<Task>> = Mutex::new(Vec::new());
 
         let scheduler = Continuous::new(cfg.n_nodes, cfg.cores_per_node, cfg.gpus_per_node);
         let executor = Executor::new(&ExecutorConfig::simple(&cfg.launch_method, cfg.n_nodes))
@@ -640,17 +717,19 @@ impl Agent {
         );
 
         std::thread::scope(|s| {
-            // DB bridge: the TaskManager→DB→Agent hop onto the mesh
+            // DB bridge: the TaskManager→DB→Agent hop onto the mesh.
+            // No upper bound — it pulls until the pilot's stream is
+            // closed (`Db::close_pilot`, issued after Stager-Out drains)
+            // or the whole DB shuts down.
             {
                 let beats = beats.clone();
                 let clock = clock.clone();
                 let q_records = q_records.clone();
                 s.spawn(move || {
-                    let mut pulled = 0usize;
-                    while pulled < expected {
+                    loop {
                         let batch = db.pull_tasks_blocking(&cfg.pilot_uid, cfg.bulk_size);
                         if batch.is_empty() {
-                            break; // DB closed under us
+                            break; // pilot stream (or DB) closed
                         }
                         beats.publish(
                             "hb.db",
@@ -660,13 +739,23 @@ impl Agent {
                             },
                         );
                         for record in batch {
-                            pulled += 1;
                             if q_records.push(record).is_err() {
                                 return;
                             }
                         }
                     }
                     q_records.close();
+                });
+            }
+
+            // drain watcher: once the client marks the ledger draining,
+            // wake Stager-Out so its completeness check can fire even if
+            // the last real completion arrived before the mark
+            {
+                let q_done = q_done.clone();
+                s.spawn(move || {
+                    ledger.wait_draining();
+                    let _ = q_done.push(Completion::marker());
                 });
             }
 
@@ -738,6 +827,7 @@ impl Agent {
                 s,
                 StagerIn {
                     tasks: &tasks,
+                    store,
                     tracer: &tracer,
                     clock: clock.clone(),
                     stager: Stager::new(StagerModel::default()),
@@ -757,10 +847,11 @@ impl Agent {
                 s,
                 SchedStage {
                     core,
-                    descriptions,
+                    store,
                     tasks: &tasks,
                     tracer: &tracer,
                     clock: clock.clone(),
+                    db,
                     q_done: q_done.clone(),
                     tickets: HashMap::new(),
                     rng: Rng::new(0xA6E47),
@@ -822,7 +913,7 @@ impl Agent {
                     clock: clock.clone(),
                     db,
                     stager: Stager::new(StagerModel::default()),
-                    expected,
+                    ledger,
                     done: 0,
                 },
                 q_done.clone(),
@@ -833,9 +924,14 @@ impl Agent {
                 },
             );
 
+            // Stager-Out finishes first (ledger complete → Flow::Done,
+            // closing q_sched and cascading the scheduler + workers);
+            // only then end the pilot's record stream so the DB bridge
+            // unblocks, closes q_records, and Stager-In drains out.
+            let _ = h_out.join();
+            db.close_pilot(&cfg.pilot_uid);
             let _ = h_in.join();
             let _ = h_sched.join();
-            let _ = h_out.join();
             // tear down the heartbeat fabric: closing the bus stops the
             // beat bridge, which closes q_beats, which finishes the
             // monitor, whose output close releases the health adapter

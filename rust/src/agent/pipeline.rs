@@ -123,6 +123,23 @@ impl SchedCore {
         self.queue.push_back(index);
     }
 
+    /// Add a submission chunk to the scheduling queue in one call:
+    /// a single `first_seen` timestamp read and one queue reservation
+    /// for the whole chunk. Semantically identical to calling
+    /// [`enqueue`](Self::enqueue) per index — the streaming agent and
+    /// the DES submit model push whole [`SubmitChunk`](crate::tracer::Ev)
+    /// batches through here.
+    pub fn enqueue_bulk(&mut self, indices: impl IntoIterator<Item = u32>) {
+        let now = self.clock.now();
+        let it = indices.into_iter();
+        let (lo, _) = it.size_hint();
+        self.queue.reserve(lo);
+        for index in it {
+            self.first_seen.entry(index).or_insert(now);
+            self.queue.push_back(index);
+        }
+    }
+
     /// Re-enqueue a retried task behind a backoff gate: it re-enters the
     /// shared queue immediately but is not placed before `delay_s` passes.
     pub fn enqueue_after(&mut self, index: u32, delay_s: f64) {
@@ -430,6 +447,28 @@ mod tests {
         let placed = c.schedule(&ds, 4, usize::MAX, &mut rng, &mut tr, |_, _, _| {});
         assert_eq!(placed, 2);
         assert!(c.queue_is_empty());
+    }
+
+    #[test]
+    fn enqueue_bulk_matches_repeated_enqueue() {
+        let (mut a, clock_a) = core(2, 4);
+        let (mut b, clock_b) = core(2, 4);
+        clock_a.set(5.0);
+        clock_b.set(5.0);
+        a.enqueue_bulk(0..6);
+        for i in 0..6 {
+            b.enqueue(i);
+        }
+        assert_eq!(a.queue_len(), b.queue_len());
+        let ds = descs(6, 1);
+        let mut rng_a = Rng::new(3);
+        let mut rng_b = Rng::new(3);
+        let mut tr_a = Tracer::new(true);
+        let mut tr_b = Tracer::new(true);
+        let pa = a.schedule_bulk(&ds, 8, usize::MAX, &mut rng_a, &mut tr_a, |_, _, _| {});
+        let pb = b.schedule_bulk(&ds, 8, usize::MAX, &mut rng_b, &mut tr_b, |_, _, _| {});
+        assert_eq!(pa, pb);
+        assert_eq!(tr_a.of_kind(Ev::TaskSchedOk), tr_b.of_kind(Ev::TaskSchedOk));
     }
 
     #[test]

@@ -28,9 +28,19 @@ pub struct TaskRecord {
 }
 
 #[derive(Default)]
+struct PilotQueue {
+    pilot: String,
+    q: VecDeque<TaskRecord>,
+    /// per-pilot drain marker: this pilot's stream of records has ended
+    /// (its agent finished); blocked pullers return empty instead of
+    /// waiting for more
+    closed: bool,
+}
+
+#[derive(Default)]
 struct Inner {
     /// per-pilot pending queues (tasks scheduled to that pilot's agent)
-    queues: Vec<(String, VecDeque<TaskRecord>)>,
+    queues: Vec<PilotQueue>,
     /// state updates flowing back to the TaskManager
     updates: VecDeque<(String, TaskState)>,
     closed: bool,
@@ -58,10 +68,13 @@ impl Db {
     }
 
     fn queue_idx(inner: &mut Inner, pilot: &str) -> usize {
-        if let Some(i) = inner.queues.iter().position(|(p, _)| p == pilot) {
+        if let Some(i) = inner.queues.iter().position(|pq| pq.pilot == pilot) {
             i
         } else {
-            inner.queues.push((pilot.to_string(), VecDeque::new()));
+            inner.queues.push(PilotQueue {
+                pilot: pilot.to_string(),
+                ..PilotQueue::default()
+            });
             inner.queues.len() - 1
         }
     }
@@ -70,7 +83,7 @@ impl Db {
     pub fn insert_tasks(&self, pilot: &str, records: Vec<TaskRecord>) {
         let mut inner = self.inner.lock().unwrap();
         let i = Self::queue_idx(&mut inner, pilot);
-        inner.queues[i].1.extend(records);
+        inner.queues[i].q.extend(records);
         self.cv.notify_all();
     }
 
@@ -79,23 +92,24 @@ impl Db {
     pub fn pull_tasks(&self, pilot: &str, max: usize) -> Vec<TaskRecord> {
         let mut inner = self.inner.lock().unwrap();
         let i = Self::queue_idx(&mut inner, pilot);
-        let q = &mut inner.queues[i].1;
+        let q = &mut inner.queues[i].q;
         let n = max.min(q.len());
         q.drain(..n).collect()
     }
 
     /// Agent side: blocking pull — waits until at least one task is
-    /// available or the DB is closed. Used by the real-mode agent thread.
+    /// available, the pilot's stream is marked ended ([`Db::close_pilot`]),
+    /// or the DB is closed. Used by the real-mode agent's DB bridge.
     pub fn pull_tasks_blocking(&self, pilot: &str, max: usize) -> Vec<TaskRecord> {
         let mut inner = self.inner.lock().unwrap();
         loop {
             let i = Self::queue_idx(&mut inner, pilot);
-            if !inner.queues[i].1.is_empty() {
-                let q = &mut inner.queues[i].1;
+            if !inner.queues[i].q.is_empty() {
+                let q = &mut inner.queues[i].q;
                 let n = max.min(q.len());
                 return q.drain(..n).collect();
             }
-            if inner.closed {
+            if inner.closed || inner.queues[i].closed {
                 return Vec::new();
             }
             inner = self.cv.wait(inner).unwrap();
@@ -109,17 +123,57 @@ impl Db {
         self.cv.notify_all();
     }
 
+    /// Bulk state updates: one lock + one wakeup for a whole chunk. The
+    /// streaming TaskManager stage pushes per-chunk `TmgrScheduling`
+    /// transitions through here so client-side callbacks observe states
+    /// in the same FIFO order the agent's updates arrive in.
+    pub fn update_states_bulk(&self, updates: Vec<(String, TaskState)>) {
+        if updates.is_empty() {
+            return;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        inner.updates.extend(updates);
+        self.cv.notify_all();
+    }
+
     /// TaskManager side: drain pending state updates.
     pub fn drain_updates(&self) -> Vec<(String, TaskState)> {
         let mut inner = self.inner.lock().unwrap();
         inner.updates.drain(..).collect()
     }
 
+    /// TaskManager side: blocking drain — waits until at least one update
+    /// is queued or the DB is closed (then flushes any remainder first;
+    /// an empty result means "closed and fully drained"). Drives the
+    /// streaming session's state-sync thread.
+    pub fn drain_updates_blocking(&self) -> Vec<(String, TaskState)> {
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            if !inner.updates.is_empty() {
+                return inner.updates.drain(..).collect();
+            }
+            if inner.closed {
+                return Vec::new();
+            }
+            inner = self.cv.wait(inner).unwrap();
+        }
+    }
+
     /// Number of tasks queued for a pilot.
     pub fn pending(&self, pilot: &str) -> usize {
         let mut inner = self.inner.lock().unwrap();
         let i = Self::queue_idx(&mut inner, pilot);
-        inner.queues[i].1.len()
+        inner.queues[i].q.len()
+    }
+
+    /// Mark one pilot's record stream as ended: its blocked pullers drain
+    /// what is queued, then get an empty batch instead of waiting. Other
+    /// pilots' streams (and the updates channel) are unaffected.
+    pub fn close_pilot(&self, pilot: &str) {
+        let mut inner = self.inner.lock().unwrap();
+        let i = Self::queue_idx(&mut inner, pilot);
+        inner.queues[i].closed = true;
+        self.cv.notify_all();
     }
 
     /// Session teardown: wake all blocked pullers.
@@ -197,5 +251,41 @@ mod tests {
         std::thread::sleep(std::time::Duration::from_millis(20));
         db.close();
         assert!(h.join().unwrap().is_empty());
+    }
+
+    #[test]
+    fn close_pilot_ends_one_stream_only() {
+        let db = Arc::new(Db::new());
+        db.insert_tasks("pilot.0000", vec![rec("a", 0)]);
+        db.close_pilot("pilot.0000");
+        // queued records still drain before the empty-batch end marker
+        assert_eq!(db.pull_tasks_blocking("pilot.0000", 8).len(), 1);
+        assert!(db.pull_tasks_blocking("pilot.0000", 8).is_empty());
+        // the other pilot's stream is untouched: a blocked puller still
+        // wakes on insert
+        let db2 = db.clone();
+        let h = std::thread::spawn(move || db2.pull_tasks_blocking("pilot.0001", 8));
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        db.insert_tasks("pilot.0001", vec![rec("b", 1)]);
+        assert_eq!(h.join().unwrap()[0].uid, "b");
+    }
+
+    #[test]
+    fn blocking_drain_wakes_on_update_and_flushes_before_close() {
+        let db = Arc::new(Db::new());
+        let db2 = db.clone();
+        let h = std::thread::spawn(move || db2.drain_updates_blocking());
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        db.update_states_bulk(vec![
+            ("t0".into(), TaskState::AgentExecuting),
+            ("t1".into(), TaskState::AgentExecuting),
+        ]);
+        assert_eq!(h.join().unwrap().len(), 2);
+        // updates queued at close time still drain; only then does the
+        // empty "closed and drained" result appear
+        db.update_state("t0", TaskState::Done);
+        db.close();
+        assert_eq!(db.drain_updates_blocking().len(), 1);
+        assert!(db.drain_updates_blocking().is_empty());
     }
 }

@@ -8,10 +8,11 @@ pub mod exp34;
 pub mod exp5;
 pub mod figs;
 pub mod harness;
+pub mod overlap_bench;
 pub mod sched_bench;
 pub mod workloads;
 
-pub use harness::{AgentSim, SimConfig, SimOutcome};
+pub use harness::{AgentSim, SimConfig, SimOutcome, SubmitModel};
 
 /// Where experiment CSVs get written.
 pub fn results_dir() -> std::path::PathBuf {

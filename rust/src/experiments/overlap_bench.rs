@@ -1,0 +1,297 @@
+//! The seeded submission-overlap harness (`rp overlap-bench`): drives the
+//! DES agent with the streamed [`SubmitModel`] — chunked client
+//! submission arriving while the pilot bootstraps, schedules, and
+//! executes — and measures the tentpole property of the streaming client
+//! pipeline (PR 9, paper Fig. 2/§IV): the **first task reaches Executing
+//! strictly before the last task is submitted**.
+//!
+//! Two outputs per scenario:
+//!  * an **overlap verdict**: `first TaskExecStart < last SubmitChunk`
+//!    from the virtual-time trace, plus the overlap span in seconds;
+//!  * a **determinism verdict**: the run is repeated with the same seed
+//!    and an FNV-1a digest over the full trace CSV must match byte for
+//!    byte (the CI `--check` gate).
+//!
+//! `to_json` renders the sweep as `BENCH_overlap.json`. Regeneration:
+//! EXPERIMENTS.md §Submission overlap.
+
+use std::time::Instant;
+
+use crate::experiments::harness::{AgentSim, SimConfig, SubmitModel};
+use crate::platform::PlatformKind;
+use crate::task::TaskDescription;
+use crate::tracer::Ev;
+
+/// A sweep point: pilot shape + streamed-workload shape + seed.
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    pub name: &'static str,
+    pub platform: PlatformKind,
+    pub n_nodes: u32,
+    pub n_tasks: usize,
+    /// tasks per submission chunk
+    pub chunk: usize,
+    /// virtual seconds between chunk arrivals
+    pub interval_s: f64,
+    /// emulated task runtime (virtual seconds)
+    pub runtime_s: f64,
+    pub seed: u64,
+}
+
+/// What the streamed run did, plus the run-twice determinism verdict.
+pub struct ScenarioResult {
+    pub name: &'static str,
+    pub n_tasks: usize,
+    pub chunk: usize,
+    pub n_chunks: usize,
+    /// virtual time of the first `TaskExecStart`
+    pub first_exec_s: f64,
+    /// virtual time of the last `SubmitChunk`
+    pub last_submit_s: f64,
+    /// `last_submit_s - first_exec_s` when positive (the overlap window)
+    pub overlap_s: f64,
+    /// the acceptance property: first exec strictly before last submit
+    pub overlap: bool,
+    /// client-side submission throughput over the chunk arrivals
+    pub tasks_submitted_per_s: f64,
+    pub ttx: f64,
+    pub n_done: usize,
+    pub digest: u64,
+    /// same seed replayed a byte-identical trace
+    pub digest_match: bool,
+    /// wall time of one DES run (both runs measured, first reported)
+    pub wall_s: f64,
+}
+
+/// The acceptance-shaped sweep: the ISSUE-9 gate is the ≥10k-task point.
+/// `full` adds a 50k-task point and a Summit/PRRTE-flavoured run.
+pub fn paper_sweep(seed: u64, full: bool) -> Vec<Scenario> {
+    let mut sweep = vec![
+        Scenario {
+            name: "titan_2k_smoke",
+            platform: PlatformKind::Titan,
+            n_nodes: 64,
+            n_tasks: 2_000,
+            chunk: 256,
+            interval_s: 15.0,
+            runtime_s: 300.0,
+            seed,
+        },
+        Scenario {
+            name: "titan_10k",
+            platform: PlatformKind::Titan,
+            n_nodes: 64,
+            n_tasks: 10_000,
+            chunk: 1_024,
+            interval_s: 20.0,
+            runtime_s: 300.0,
+            seed: seed ^ 1,
+        },
+    ];
+    if full {
+        sweep.push(Scenario {
+            name: "summit_10k_prrte",
+            platform: PlatformKind::Summit,
+            n_nodes: 256,
+            n_tasks: 10_000,
+            chunk: 1_024,
+            interval_s: 20.0,
+            runtime_s: 600.0,
+            seed: seed ^ 2,
+        });
+        sweep.push(Scenario {
+            name: "titan_50k",
+            platform: PlatformKind::Titan,
+            n_nodes: 64,
+            n_tasks: 50_000,
+            chunk: 2_048,
+            interval_s: 10.0,
+            runtime_s: 300.0,
+            seed: seed ^ 3,
+        });
+    }
+    sweep
+}
+
+const FNV_BASIS: u64 = 0xcbf29ce484222325;
+const FNV_PRIME: u64 = 0x100000001b3;
+
+fn fnv_bytes(bytes: &[u8]) -> u64 {
+    let mut digest = FNV_BASIS;
+    for &b in bytes {
+        digest ^= b as u64;
+        digest = digest.wrapping_mul(FNV_PRIME);
+    }
+    digest
+}
+
+fn sim_config(sc: &Scenario) -> SimConfig {
+    let mut cfg = SimConfig::new(sc.platform, sc.n_nodes);
+    cfg.sched_rate = 0.0; // native scheduler: isolate the submission path
+    cfg.seed = sc.seed;
+    cfg.submit = Some(SubmitModel {
+        chunk: sc.chunk,
+        interval_s: sc.interval_s,
+    });
+    // light launcher so first-exec lands right after bootstrap on every
+    // platform (the overlap property is about submission, not launching)
+    cfg.launch_method = Some("mpirun".into());
+    cfg
+}
+
+fn workload(sc: &Scenario) -> Vec<TaskDescription> {
+    (0..sc.n_tasks)
+        .map(|_| TaskDescription::emulated("synth", 1, 1, sc.runtime_s))
+        .collect()
+}
+
+/// Run one scenario twice (same seed) and compare trace digests.
+pub fn run_scenario(sc: &Scenario) -> ScenarioResult {
+    let cfg = sim_config(sc);
+    let tasks = workload(sc);
+    let t0 = Instant::now();
+    let out = AgentSim::new(cfg.clone()).run(&tasks);
+    let wall_s = t0.elapsed().as_secs_f64();
+    let again = AgentSim::new(cfg).run(&tasks);
+    let csv = out.tracer.to_csv();
+    let digest = fnv_bytes(csv.as_bytes());
+    let digest_match = digest == fnv_bytes(again.tracer.to_csv().as_bytes());
+
+    let chunks = out.tracer.of_kind(Ev::SubmitChunk);
+    let execs = out.tracer.of_kind(Ev::TaskExecStart);
+    let first_submit = chunks.first().map(|e| e.t).unwrap_or(0.0);
+    let last_submit = chunks.last().map(|e| e.t).unwrap_or(0.0);
+    let first_exec = execs.first().map(|e| e.t).unwrap_or(f64::INFINITY);
+    let span = last_submit - first_submit;
+    ScenarioResult {
+        name: sc.name,
+        n_tasks: sc.n_tasks,
+        chunk: sc.chunk,
+        n_chunks: chunks.len(),
+        first_exec_s: first_exec,
+        last_submit_s: last_submit,
+        overlap_s: (last_submit - first_exec).max(0.0),
+        overlap: first_exec < last_submit,
+        tasks_submitted_per_s: if span > 0.0 {
+            sc.n_tasks as f64 / span
+        } else {
+            0.0
+        },
+        ttx: out.ttx,
+        n_done: out.n_done,
+        digest,
+        digest_match,
+        wall_s,
+    }
+}
+
+/// Run the sweep.
+pub fn run_sweep(seed: u64, full: bool) -> Vec<ScenarioResult> {
+    paper_sweep(seed, full).iter().map(run_scenario).collect()
+}
+
+/// The CI `--check` gate: every ≥10k-task scenario must overlap (first
+/// exec strictly before last submit) and every scenario must replay a
+/// byte-identical trace under its seed.
+pub fn check(results: &[ScenarioResult]) -> Result<(), String> {
+    for r in results {
+        if !r.digest_match {
+            return Err(format!("{}: trace not deterministic under seed", r.name));
+        }
+        if r.n_tasks >= 10_000 && !r.overlap {
+            return Err(format!(
+                "{}: no overlap (first exec {:.1}s >= last submit {:.1}s)",
+                r.name, r.first_exec_s, r.last_submit_s
+            ));
+        }
+        if r.n_done != r.n_tasks {
+            return Err(format!("{}: {}/{} tasks done", r.name, r.n_done, r.n_tasks));
+        }
+    }
+    Ok(())
+}
+
+/// Render the sweep as `BENCH_overlap.json` (schema `rp-overlap-bench/v1`)
+/// — hand-rolled JSON, since the image has no serde.
+pub fn to_json(results: &[ScenarioResult], seed: u64, full: bool) -> String {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str("  \"schema\": \"rp-overlap-bench/v1\",\n");
+    s.push_str("  \"generated\": true,\n");
+    s.push_str(&format!("  \"seed\": {seed},\n"));
+    s.push_str(&format!("  \"full\": {full},\n"));
+    s.push_str("  \"scenarios\": [\n");
+    for (i, r) in results.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"name\": \"{}\", \"n_tasks\": {}, \"chunk\": {}, \
+             \"n_chunks\": {}, \"first_exec_s\": {:.3}, \"last_submit_s\": {:.3}, \
+             \"overlap_s\": {:.3}, \"overlap\": {}, \
+             \"tasks_submitted_per_s\": {:.1}, \"ttx\": {:.3}, \"n_done\": {}, \
+             \"digest\": \"{:016x}\", \"digest_match\": {}, \"wall_s\": {:.4}}}{}\n",
+            r.name,
+            r.n_tasks,
+            r.chunk,
+            r.n_chunks,
+            r.first_exec_s,
+            r.last_submit_s,
+            r.overlap_s,
+            r.overlap,
+            r.tasks_submitted_per_s,
+            r.ttx,
+            r.n_done,
+            r.digest,
+            r.digest_match,
+            if i + 1 < results.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> Scenario {
+        Scenario {
+            name: "test_small",
+            platform: PlatformKind::Titan,
+            n_nodes: 64,
+            n_tasks: 2_000,
+            chunk: 250,
+            interval_s: 15.0,
+            runtime_s: 300.0,
+            seed: 0xBE7C,
+        }
+    }
+
+    #[test]
+    fn small_scenario_overlaps_and_replays() {
+        let r = run_scenario(&small());
+        assert_eq!(r.n_done, 2_000);
+        assert_eq!(r.n_chunks, 8);
+        assert!(r.digest_match, "same seed must replay identically");
+        // bootstrap ~50 s, last chunk at 105 s → overlap even at 2k
+        assert!(r.overlap, "first exec {} last submit {}", r.first_exec_s, r.last_submit_s);
+        assert!(r.overlap_s > 0.0);
+        assert!(r.tasks_submitted_per_s > 0.0);
+    }
+
+    #[test]
+    fn check_catches_missing_overlap() {
+        let mut r = run_scenario(&small());
+        assert!(check(&[/* none */]).is_ok());
+        r.n_tasks = 10_000; // pretend acceptance scale
+        r.overlap = false;
+        assert!(check(&[r]).is_err());
+    }
+
+    #[test]
+    fn json_has_schema_and_scenarios() {
+        let r = run_scenario(&small());
+        let json = to_json(&[r], 42, false);
+        assert!(json.contains("\"schema\": \"rp-overlap-bench/v1\""));
+        assert!(json.contains("\"name\": \"test_small\""));
+        assert!(json.contains("\"digest_match\": true"));
+    }
+}

@@ -7,7 +7,7 @@
 //!   rp platforms
 //!   rp artifacts [--dir PATH]
 
-use rp::experiments::{exp12, exp34, exp5, figs, sched_bench, write_csv};
+use rp::experiments::{exp12, exp34, exp5, figs, overlap_bench, sched_bench, write_csv};
 use rp::util::args::Args;
 
 fn main() {
@@ -18,6 +18,7 @@ fn main() {
         Some("artifacts") => artifacts(&args),
         Some("fault-smoke") => fault_smoke(&args),
         Some("sched-bench") => sched_bench_cmd(&args),
+        Some("overlap-bench") => overlap_bench_cmd(&args),
         _ => usage(),
     }
 }
@@ -39,7 +40,13 @@ fn usage() {
                              allocator on paper-shaped topologies, writes\n\
                              BENCH_sched.json (--seed N --full --out PATH --check;\n\
                              --check re-runs the sweep and fails on any\n\
-                             placement-digest divergence)\n"
+                             placement-digest divergence)\n\
+           overlap-bench     seeded submission-overlap sweep: streamed chunked\n\
+                             submission vs execution under the DES agent, writes\n\
+                             BENCH_overlap.json (--seed N --full --out PATH\n\
+                             --check; --check fails unless first-exec precedes\n\
+                             last-submit at >=10k tasks and traces replay\n\
+                             byte-identically under the seed)\n"
     );
     std::process::exit(2);
 }
@@ -213,6 +220,54 @@ fn sched_bench_cmd(args: &Args) {
         }
     }
     let json = sched_bench::to_json(&results, seed, full);
+    if let Err(e) = std::fs::write(out, &json) {
+        eprintln!("FAIL: could not write {out}: {e}");
+        std::process::exit(1);
+    }
+    println!("wrote {out}");
+    if !ok {
+        std::process::exit(1);
+    }
+}
+
+/// The CI overlap gate: run the streamed-submission sweep, assert the
+/// tentpole property (first exec strictly before last submit at ≥10k
+/// tasks) and seeded trace determinism, and write `BENCH_overlap.json`.
+fn overlap_bench_cmd(args: &Args) {
+    let seed = args.u64_or("seed", 42);
+    let full = args.flag("full");
+    let out = args.get_or("out", "BENCH_overlap.json");
+    println!("overlap-bench: streamed-submission sweep, seed={seed} full={full}");
+    let results = overlap_bench::run_sweep(seed, full);
+    for r in &results {
+        println!(
+            "  {:<18} tasks={:<6} chunks={:<3} first_exec={:<8.1} last_submit={:<8.1} \
+             overlap={:<5} overlap_s={:<8.1} submit_rate={:.1}/s digest_match={}",
+            r.name,
+            r.n_tasks,
+            r.n_chunks,
+            r.first_exec_s,
+            r.last_submit_s,
+            r.overlap,
+            r.overlap_s,
+            r.tasks_submitted_per_s,
+            r.digest_match
+        );
+    }
+    let mut ok = true;
+    if args.flag("check") {
+        match overlap_bench::check(&results) {
+            Ok(()) => println!(
+                "overlap check OK: execution precedes the final submission; \
+                 traces replay byte-identically"
+            ),
+            Err(e) => {
+                eprintln!("FAIL: {e}");
+                ok = false;
+            }
+        }
+    }
+    let json = overlap_bench::to_json(&results, seed, full);
     if let Err(e) = std::fs::write(out, &json) {
         eprintln!("FAIL: could not write {out}: {e}");
         std::process::exit(1);

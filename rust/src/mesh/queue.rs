@@ -66,6 +66,40 @@ impl<T> WorkQueue<T> {
         Ok(())
     }
 
+    /// Bulk push: one lock acquisition and one wakeup for a whole batch —
+    /// the client submit path hands entire task chunks over at once
+    /// (RP's bulk communication). Blocks while the queue is over
+    /// capacity; on close the *unpushed remainder* comes back as Err.
+    pub fn push_bulk(&self, items: Vec<T>) -> Result<(), Vec<T>> {
+        let (m, not_empty, not_full) = &*self.inner;
+        let mut rest = VecDeque::from(items);
+        let mut g = m.lock().unwrap();
+        while !rest.is_empty() {
+            while g.capacity > 0 && g.q.len() >= g.capacity && !g.closed {
+                g.waiting_producers += 1;
+                g = not_full.wait(g).unwrap();
+                g.waiting_producers -= 1;
+            }
+            if g.closed {
+                return Err(rest.into_iter().collect());
+            }
+            let room = if g.capacity == 0 {
+                rest.len()
+            } else {
+                g.capacity.saturating_sub(g.q.len()).min(rest.len())
+            };
+            let mut pushed = 0usize;
+            while pushed < room {
+                g.q.push_back(rest.pop_front().expect("room <= rest.len()"));
+                pushed += 1;
+            }
+            if pushed > 0 && g.waiting_consumers > 0 {
+                not_empty.notify_all();
+            }
+        }
+        Ok(())
+    }
+
     /// Non-blocking push; Err(item) when full or closed.
     pub fn try_push(&self, item: T) -> Result<(), T> {
         let (m, not_empty, _) = &*self.inner;
@@ -259,6 +293,34 @@ mod tests {
         assert_eq!(q.pop_bulk(4), vec![0, 1, 2, 3]);
         assert_eq!(q.pop_bulk(100).len(), 6);
         assert!(q.pop_bulk(4).is_empty());
+    }
+
+    #[test]
+    fn push_bulk_delivers_everything_through_a_bounded_queue() {
+        let q: WorkQueue<u32> = WorkQueue::new(3);
+        let q2 = q.clone();
+        // producer must interleave with the consumer: 10 items through a
+        // 3-slot queue forces several wait/refill rounds
+        let producer = thread::spawn(move || q2.push_bulk((0..10).collect()));
+        let mut got = Vec::new();
+        while got.len() < 10 {
+            if let Some(v) = q.pop_timeout(std::time::Duration::from_secs(5)) {
+                got.push(v);
+            }
+        }
+        producer.join().unwrap().unwrap();
+        assert_eq!(got, (0..10).collect::<Vec<_>>()); // FIFO preserved
+    }
+
+    #[test]
+    fn push_bulk_returns_remainder_on_close() {
+        let q: WorkQueue<u32> = WorkQueue::new(0);
+        q.push_bulk(vec![1, 2]).unwrap();
+        q.close();
+        assert_eq!(q.push_bulk(vec![3, 4]), Err(vec![3, 4]));
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), None);
     }
 
     #[test]

@@ -36,14 +36,86 @@ impl Default for PilotDescription {
     }
 }
 
+/// Fluent builder for [`PilotDescription`] with verify-on-build.
+///
+/// ```
+/// use rp::pilot::PilotDescription;
+/// let pd = PilotDescription::builder()
+///     .resource("ornl.summit")
+///     .nodes(1024)
+///     .runtime_s(7200.0)
+///     .nodes_per_dvm(256)
+///     .build()
+///     .unwrap();
+/// assert_eq!(pd.nodes, 1024);
+/// ```
+#[derive(Clone, Debug, Default)]
+pub struct PilotDescriptionBuilder {
+    pd: PilotDescription,
+}
+
+impl PilotDescriptionBuilder {
+    pub fn resource(mut self, resource: &str) -> Self {
+        self.pd.resource = resource.to_string();
+        self
+    }
+
+    pub fn nodes(mut self, nodes: u32) -> Self {
+        self.pd.nodes = nodes;
+        self
+    }
+
+    pub fn cores(mut self, cores: u64) -> Self {
+        self.pd.cores = cores;
+        self
+    }
+
+    pub fn gpus(mut self, gpus: u64) -> Self {
+        self.pd.gpus = gpus;
+        self
+    }
+
+    pub fn runtime_s(mut self, runtime_s: f64) -> Self {
+        self.pd.runtime_s = runtime_s;
+        self
+    }
+
+    pub fn queue(mut self, queue: &str) -> Self {
+        self.pd.queue = queue.to_string();
+        self
+    }
+
+    pub fn project(mut self, project: &str) -> Self {
+        self.pd.project = project.to_string();
+        self
+    }
+
+    pub fn nodes_per_dvm(mut self, n: u32) -> Self {
+        self.pd.nodes_per_dvm = n;
+        self
+    }
+
+    /// Verify-on-build: returns the description or the verification error.
+    pub fn build(self) -> Result<PilotDescription> {
+        self.pd.verify()?;
+        Ok(self.pd)
+    }
+}
+
 impl PilotDescription {
+    /// Start a fluent [`PilotDescriptionBuilder`].
+    pub fn builder() -> PilotDescriptionBuilder {
+        PilotDescriptionBuilder::default()
+    }
+
+    /// Legacy positional constructor (delegates to the builder; stays
+    /// infallible — invalid shapes are caught by `verify()` at submit).
     pub fn new(resource: &str, nodes: u32, runtime_s: f64) -> Self {
-        PilotDescription {
-            resource: resource.to_string(),
-            nodes,
-            runtime_s,
-            ..Default::default()
-        }
+        PilotDescription::builder()
+            .resource(resource)
+            .nodes(nodes)
+            .runtime_s(runtime_s)
+            .pd
     }
 
     /// Resolve the node count against a platform (cores → nodes rounding
@@ -146,6 +218,30 @@ mod tests {
         let p = Platform::load(PlatformKind::Summit);
         let pd = PilotDescription::new("ornl.summit", 5000, 3600.0);
         assert!(pd.resolve_nodes(&p).is_err());
+    }
+
+    #[test]
+    fn builder_verifies_on_build() {
+        let pd = PilotDescription::builder()
+            .resource("ornl.summit")
+            .cores(43_008)
+            .runtime_s(7200.0)
+            .queue("killable")
+            .project("CSC000")
+            .build()
+            .unwrap();
+        assert_eq!(pd.cores, 43_008);
+        assert_eq!(pd.queue, "killable");
+        // verify-on-build catches a sizeless or unknown-resource pilot
+        assert!(PilotDescription::builder().resource("ornl.summit").build().is_err());
+        assert!(PilotDescription::builder()
+            .resource("unknown.machine")
+            .nodes(4)
+            .build()
+            .is_err());
+        // the legacy constructor still builds unverified
+        let legacy = PilotDescription::new("ornl.titan", 64, 3600.0);
+        assert_eq!(legacy.nodes, 64);
     }
 
     #[test]

@@ -1,24 +1,85 @@
 //! Session (§III-D): the API root object. "RP exposes an API with 5
 //! classes: Session, PilotManager, PilotDescription, TaskManager,
 //! TaskDescription." A Session owns the managers, the DB and the function
-//! registry, and provides the blocking `run_local` convenience that
-//! executes a workload end-to-end on the local platform (real mode).
+//! registry.
+//!
+//! Since PR 9 the Session is a *streaming* client (DESIGN.md §Streaming
+//! client pipeline): [`Session::create_pilot`] starts a pilot engine —
+//! [`Agent::run_streaming`] on its own thread — and
+//! [`Session::submit`] is nonblocking: it verifies and uid-stamps the
+//! descriptions, hands the indices to a [`TmgrStage`] pipeline stage
+//! that round-robin-binds and bulk-flushes records to the [`Db`] in
+//! chunks, and returns [`TaskHandle`]s immediately. The agents pull,
+//! schedule and execute *concurrently with submission*, so the first
+//! task can reach `AgentExecuting` before the last one is submitted —
+//! the overlap the paper measures in §IV. [`Session::wait`] blocks on
+//! handles (optionally with a timeout), [`Session::on_state_change`]
+//! registers per-state callbacks fed by the DB updates channel, and
+//! [`Session::finish`] drains the stream and merges every engine's
+//! result (tasks, traces on one shared clock, ttx).
+//!
+//! [`Session::run_local`] remains as a thin blocking wrapper:
+//! create_pilot → submit → wait → finish.
+
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 use crate::agent::agent::{Agent, AgentConfig, AgentResult, FunctionRegistry};
 use crate::db::Db;
+use crate::mesh::{spawn, ComponentHandle, SpawnOpts, WallClock, WorkQueue};
 use crate::pilot::{PilotDescription, PilotManager};
-use crate::platform::{Platform, PlatformKind};
-use crate::task::TaskDescription;
-use crate::tmgr::TaskManager;
-use crate::util::error::Result;
+use crate::platform::Platform;
+use crate::task::{DescStore, Task, TaskDescription, TaskState};
+use crate::tmgr::{StreamConfig, SubmitLedger, SubmitReceipt, TaskManager, TmgrStage};
+use crate::tracer::{Ev, Tracer};
+use crate::util::error::{Result, RpError};
 use crate::util::ids;
+
+/// A nonblocking reference to a submitted task: resolve its live state
+/// via the session's TaskManager, wait on it, or receive it in state
+/// callbacks. Cheap to clone; stays valid across PR-7 retries (the uid
+/// and index never change when a task is resubmitted).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TaskHandle {
+    pub uid: String,
+    pub index: u32,
+}
+
+type StateCallback = Box<dyn Fn(&TaskHandle, TaskState) + Send + Sync>;
+
+/// One pilot's execution engine: the agent thread plus the submit
+/// ledger the client credits and the agent drains against.
+struct Engine {
+    pilot_uid: String,
+    ledger: Arc<SubmitLedger>,
+    handle: std::thread::JoinHandle<AgentResult>,
+}
 
 pub struct Session {
     pub uid: String,
     pub pmgr: PilotManager,
-    pub tmgr: TaskManager,
-    pub db: Db,
+    pub tmgr: Arc<Mutex<TaskManager>>,
+    pub db: Arc<Db>,
     pub registry: FunctionRegistry,
+    /// streaming knobs (chunk size, pacing, executor threads); adjust
+    /// before the first `submit`
+    pub stream: StreamConfig,
+    /// one clock for client and agents: client-side `SubmitChunk` and
+    /// agent-side exec events share a time axis, which is what makes the
+    /// overlap measurable after the trace merge
+    clock: Arc<WallClock>,
+    tracer: Arc<Mutex<Tracer>>,
+    callbacks: Arc<Mutex<Vec<StateCallback>>>,
+    /// generation counter + condvar: bumped by the sync thread on every
+    /// accepted state update; `wait` blocks on it
+    progress: Arc<(Mutex<u64>, Condvar)>,
+    store: DescStore,
+    q_submit: Option<WorkQueue<u32>>,
+    stage_handle: Option<ComponentHandle>,
+    monitor_handle: Option<std::thread::JoinHandle<u64>>,
+    sync_handle: Option<std::thread::JoinHandle<()>>,
+    engines: Vec<Engine>,
+    finished: bool,
 }
 
 impl Default for Session {
@@ -32,13 +93,27 @@ impl Session {
         Session {
             uid: ids::session_uid(),
             pmgr: PilotManager::new(),
-            tmgr: TaskManager::new(),
-            db: Db::new(),
+            tmgr: Arc::new(Mutex::new(TaskManager::new())),
+            db: Arc::new(Db::new()),
             registry: FunctionRegistry::new(),
+            stream: StreamConfig::default(),
+            clock: Arc::new(WallClock::new()),
+            tracer: Arc::new(Mutex::new(Tracer::new(true))),
+            callbacks: Arc::new(Mutex::new(Vec::new())),
+            progress: Arc::new((Mutex::new(0), Condvar::new())),
+            store: DescStore::new(),
+            q_submit: None,
+            stage_handle: None,
+            monitor_handle: None,
+            sync_handle: None,
+            engines: Vec::new(),
+            finished: false,
         }
     }
 
-    /// Register a function implementation for Function tasks.
+    /// Register a function implementation for Function tasks. Must happen
+    /// before [`create_pilot`](Self::create_pilot): each engine snapshots
+    /// the registry when it starts.
     pub fn register_function<F>(&mut self, name: &str, f: F)
     where
         F: Fn(&crate::util::json::Json) -> Result<f64> + Send + Sync + 'static,
@@ -46,9 +121,325 @@ impl Session {
         self.registry.register(name, f);
     }
 
+    /// Register a callback invoked (from the session's sync thread) on
+    /// every accepted task state transition, in per-task state order:
+    /// `TmgrScheduling` at submit-flush, `AgentExecuting` at launch,
+    /// then the terminal state.
+    pub fn on_state_change<F>(&mut self, cb: F)
+    where
+        F: Fn(&TaskHandle, TaskState) + Send + Sync + 'static,
+    {
+        self.callbacks.lock().unwrap().push(Box::new(cb));
+    }
+
+    /// Submit a pilot and start its execution engine (the streaming
+    /// agent on a dedicated thread, pulling from this session's DB).
+    /// Returns the pilot uid. All pilots must be created before the
+    /// first [`submit`](Self::submit) — the TaskManager stage binds
+    /// round-robin over the pilot set it sees when it starts.
+    pub fn create_pilot(&mut self, pd: PilotDescription) -> Result<String> {
+        if self.q_submit.is_some() {
+            return Err(RpError::Invalid(
+                "create_pilot must precede the first submit".into(),
+            ));
+        }
+        if self.finished {
+            return Err(RpError::Invalid("session already finished".into()));
+        }
+        let pidx = self.pmgr.submit(pd)?;
+        let pilot = self.pmgr.pilot(pidx);
+        let pilot_uid = pilot.uid.clone();
+        let platform = Platform::load(pilot.platform);
+        let local_cores = Platform::load(crate::platform::PlatformKind::Local).cores_per_node;
+        let n_threads = if self.stream.n_executor_threads > 0 {
+            self.stream.n_executor_threads
+        } else {
+            local_cores as usize
+        };
+        let cfg = AgentConfig {
+            pilot_uid: pilot_uid.clone(),
+            n_nodes: pilot.nodes,
+            cores_per_node: platform.cores_per_node,
+            gpus_per_node: platform.gpus_per_node,
+            launch_method: "fork".into(),
+            n_executor_threads: n_threads,
+            bulk_size: self.stream.chunk.max(1),
+            trace: self.stream.trace,
+            heartbeat_interval_s: 0.05,
+            heartbeat_missed: 40,
+            faults: None,
+            fault_seed: 0,
+        };
+        let ledger = Arc::new(SubmitLedger::new());
+        let handle = {
+            let db = self.db.clone();
+            let store = self.store.clone();
+            let registry = self.registry.clone();
+            let ledger = ledger.clone();
+            let clock = self.clock.clone();
+            std::thread::spawn(move || {
+                Agent::run_streaming(&cfg, &db, &store, &registry, &ledger, clock)
+            })
+        };
+        self.engines.push(Engine {
+            pilot_uid: pilot_uid.clone(),
+            ledger,
+            handle,
+        });
+        Ok(pilot_uid)
+    }
+
+    /// Nonblocking submit: verify, uid-stamp, and hand the batch to the
+    /// streaming TaskManager stage, which bulk-flushes records to the DB
+    /// in chunks while the pilot engines are already executing. Returns
+    /// one [`TaskHandle`] per description, in order.
+    pub fn submit(&mut self, descriptions: Vec<TaskDescription>) -> Result<Vec<TaskHandle>> {
+        if self.finished {
+            return Err(RpError::Invalid("session already finished".into()));
+        }
+        if self.engines.is_empty() {
+            return Err(RpError::Scheduling(
+                "no pilots: call create_pilot before submit".into(),
+            ));
+        }
+        // verify the whole batch before touching any shared table, so a
+        // bad description cannot desynchronize store and TaskManager
+        for td in &descriptions {
+            td.verify()?;
+        }
+        self.store.push_all(&descriptions);
+        let (indices, handles) = {
+            let mut tm = self.tmgr.lock().unwrap();
+            let indices = tm.submit(descriptions)?;
+            let handles: Vec<TaskHandle> = indices
+                .iter()
+                .map(|&i| TaskHandle {
+                    uid: tm.task(i).uid.clone(),
+                    index: i,
+                })
+                .collect();
+            (indices, handles)
+        };
+        self.ensure_pipeline();
+        if let Some(q) = &self.q_submit {
+            q.push_bulk(indices)
+                .map_err(|_| RpError::Runtime("submit queue closed".into()))?;
+        }
+        Ok(handles)
+    }
+
+    /// Start the client-side pipeline lazily on first submit: the
+    /// TmgrStage component, a receipt monitor, and the state-sync thread
+    /// that drives callbacks and `wait`.
+    fn ensure_pipeline(&mut self) {
+        if self.q_submit.is_some() {
+            return;
+        }
+        let q_in: WorkQueue<u32> = WorkQueue::new(0);
+        let q_out: WorkQueue<SubmitReceipt> = WorkQueue::new(0);
+        let pilots: Vec<(String, Arc<SubmitLedger>)> = self
+            .engines
+            .iter()
+            .map(|e| (e.pilot_uid.clone(), e.ledger.clone()))
+            .collect();
+        let stage = TmgrStage::new(
+            self.tmgr.clone(),
+            self.db.clone(),
+            pilots,
+            &self.stream,
+            self.clock.clone(),
+            self.tracer.clone(),
+        );
+        self.stage_handle = Some(spawn(
+            stage,
+            q_in.clone(),
+            q_out.clone(),
+            SpawnOpts {
+                bulk: self.stream.chunk.max(1),
+                close_output: true,
+            },
+        ));
+        self.q_submit = Some(q_in);
+
+        // receipt monitor: drains chunk receipts (counting submitted
+        // tasks) until the stage closes its output
+        self.monitor_handle = Some(std::thread::spawn(move || {
+            let mut n: u64 = 0;
+            while let Some(r) = q_out.pop() {
+                n += r.n as u64;
+            }
+            n
+        }));
+
+        // state sync: drain the DB updates channel (client TmgrScheduling
+        // flushes and agent-side transitions arrive FIFO), fold into the
+        // TaskManager, fire callbacks in order, bump the wait generation
+        let tmgr = self.tmgr.clone();
+        let db = self.db.clone();
+        let callbacks = self.callbacks.clone();
+        let progress = self.progress.clone();
+        self.sync_handle = Some(std::thread::spawn(move || loop {
+            let ups = db.drain_updates_blocking();
+            if ups.is_empty() {
+                break; // DB closed and fully drained
+            }
+            let mut fired: Vec<(TaskHandle, TaskState)> = Vec::new();
+            {
+                let mut tm = tmgr.lock().unwrap();
+                tm.apply_updates(ups, |t, s| {
+                    fired.push((
+                        TaskHandle {
+                            uid: t.uid.clone(),
+                            index: t.index,
+                        },
+                        s,
+                    ));
+                });
+            }
+            if !fired.is_empty() {
+                {
+                    let cbs = callbacks.lock().unwrap();
+                    for (h, s) in &fired {
+                        for cb in cbs.iter() {
+                            cb(h, *s);
+                        }
+                    }
+                }
+                let (lock, cv) = &*progress;
+                *lock.lock().unwrap() += 1;
+                cv.notify_all();
+            }
+        }));
+    }
+
+    /// Block until every handle is terminal, or until `timeout` elapses.
+    /// Returns the number of handles still pending (0 = all terminal).
+    pub fn wait(&self, handles: &[TaskHandle], timeout: Option<Duration>) -> Result<usize> {
+        let deadline = timeout.map(|d| Instant::now() + d);
+        let (lock, cv) = &*self.progress;
+        loop {
+            // read the generation first, then the predicate: any update
+            // between the two bumps the generation, so the blocking wait
+            // below can never miss it
+            let gen = *lock.lock().unwrap();
+            let pending = {
+                let tm = self.tmgr.lock().unwrap();
+                handles
+                    .iter()
+                    .filter(|h| !tm.task(h.index).state.is_terminal())
+                    .count()
+            };
+            if pending == 0 {
+                return Ok(0);
+            }
+            let mut g = lock.lock().unwrap();
+            while *g == gen {
+                match deadline {
+                    None => g = cv.wait(g).unwrap(),
+                    Some(dl) => {
+                        let now = Instant::now();
+                        if now >= dl {
+                            return Ok(pending);
+                        }
+                        let (g2, _) = cv.wait_timeout(g, dl - now).unwrap();
+                        g = g2;
+                    }
+                }
+            }
+        }
+    }
+
+    /// `wait` with a timeout, by value (convenience).
+    pub fn wait_timeout(&self, handles: &[TaskHandle], timeout: Duration) -> Result<usize> {
+        self.wait(handles, Some(timeout))
+    }
+
+    /// End the stream and collect everything: close the submit queue
+    /// (flushing partial chunks), mark every pilot's ledger draining,
+    /// join the engines, drain the last state updates, then merge tasks
+    /// and traces into one [`AgentResult`]. Records [`Ev::Overlap`] when
+    /// the merged trace shows the first task executing strictly before
+    /// the last submit chunk flushed.
+    pub fn finish(&mut self) -> Result<AgentResult> {
+        if self.finished {
+            return Err(RpError::Invalid("session already finished".into()));
+        }
+        self.finished = true;
+        if let Some(q) = self.q_submit.take() {
+            q.close();
+        }
+        if let Some(h) = self.stage_handle.take() {
+            h.join()?;
+        }
+        if let Some(h) = self.monitor_handle.take() {
+            let _ = h.join();
+        }
+        let mut results: Vec<AgentResult> = Vec::new();
+        for e in self.engines.drain(..) {
+            e.ledger.mark_draining();
+            match e.handle.join() {
+                Ok(r) => results.push(r),
+                Err(_) => return Err(RpError::Runtime("pilot engine panicked".into())),
+            }
+        }
+        // everything terminal is now in the updates channel; close the
+        // DB so the sync thread drains the remainder and exits
+        self.db.close();
+        if let Some(h) = self.sync_handle.take() {
+            let _ = h.join();
+        }
+
+        let mut tracer = {
+            let mut t = self.tracer.lock().unwrap();
+            std::mem::replace(&mut *t, Tracer::new(false))
+        };
+        let mut ttx: f64 = 0.0;
+        let n = self.tmgr.lock().unwrap().len();
+        let mut merged: Vec<Option<Task>> = (0..n).map(|_| None).collect();
+        for r in results {
+            ttx = ttx.max(r.ttx);
+            tracer.merge(r.tracer);
+            for t in r.tasks {
+                let i = t.index as usize;
+                if i >= n {
+                    continue;
+                }
+                // each agent's table covers only its own pilot's tasks;
+                // gaps stay `New` placeholders — keep whichever entry
+                // actually progressed
+                let take = match &merged[i] {
+                    None => true,
+                    Some(old) => old.state == TaskState::New && t.state != TaskState::New,
+                };
+                if take {
+                    merged[i] = Some(t);
+                }
+            }
+        }
+        let tasks: Vec<Task> = {
+            let tm = self.tmgr.lock().unwrap();
+            merged
+                .into_iter()
+                .enumerate()
+                .map(|(i, m)| m.unwrap_or_else(|| tm.task(i as u32).clone()))
+                .collect()
+        };
+        // the §IV overlap: first execution vs last submission flush
+        let first_exec = tracer.of_kind(Ev::TaskExecStart).first().map(|e| e.t);
+        let last_submit = tracer.of_kind(Ev::SubmitChunk).last().map(|e| e.t);
+        if let (Some(fe), Some(ls)) = (first_exec, last_submit) {
+            if fe < ls {
+                tracer.rec(fe, 0, Ev::Overlap);
+                tracer.annotate(ls, "session", format!("overlap_s={:.6}", ls - fe));
+            }
+        }
+        Ok(AgentResult { tasks, tracer, ttx })
+    }
+
     /// Execute a workload on the local platform, blocking to completion —
     /// the "application waits for the workload to complete before
-    /// returning control" usage mode of §III-D.
+    /// returning control" usage mode of §III-D. Thin wrapper over the
+    /// streaming path: create_pilot → submit → wait → finish.
     ///
     /// `concurrency` bounds simultaneously running tasks (defaults to the
     /// machine's core count when 0).
@@ -57,41 +448,24 @@ impl Session {
         descriptions: Vec<TaskDescription>,
         concurrency: usize,
     ) -> Result<AgentResult> {
-        let platform = Platform::load(PlatformKind::Local);
-        let cores = platform.cores_per_node;
-        let pd = PilotDescription::new("local.localhost", 1, 3600.0);
-        let pidx = self.pmgr.submit(pd)?;
-        let pilot_uid = self.pmgr.pilot(pidx).uid.clone();
-
-        self.tmgr.submit(descriptions)?;
-        self.tmgr.schedule_to_pilots(&self.db, &[pilot_uid.clone()])?;
-
-        let n_threads = if concurrency == 0 {
-            cores as usize
-        } else {
-            concurrency
-        };
-        let cfg = AgentConfig {
-            pilot_uid,
-            n_nodes: 1,
-            cores_per_node: cores,
-            gpus_per_node: 0,
-            launch_method: "fork".into(),
-            n_executor_threads: n_threads,
-            bulk_size: 4096,
-            trace: true,
-            heartbeat_interval_s: 0.05,
-            heartbeat_missed: 40,
-            faults: None,
-            fault_seed: 0,
-        };
-        let all_descriptions = self.tmgr.descriptions();
-        let result = Agent::run(&cfg, &self.db, &all_descriptions, &self.registry);
-        self.tmgr.sync_states(&self.db);
-        Ok(result)
+        if concurrency > 0 {
+            self.stream.n_executor_threads = concurrency;
+        }
+        if self.engines.is_empty() {
+            let pd = PilotDescription::new("local.localhost", 1, 3600.0);
+            self.create_pilot(pd)?;
+        }
+        let handles = self.submit(descriptions)?;
+        self.wait(&handles, None)?;
+        self.finish()
     }
 
-    pub fn close(&self) {
+    /// Tear the session down. Safe to call after `finish` (or without
+    /// ever submitting); an unfinished stream is drained and discarded.
+    pub fn close(&mut self) {
+        if !self.finished {
+            let _ = self.finish();
+        }
         self.db.close();
     }
 }
@@ -99,7 +473,6 @@ impl Session {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::task::TaskState;
     use crate::util::json::Json;
 
     #[test]
@@ -117,12 +490,181 @@ mod tests {
         assert!(res.tasks.iter().all(|t| t.state == TaskState::Done));
         assert_eq!(res.tasks[1].result, Some(42.0));
         // tmgr saw the terminal states
-        assert_eq!(s.tmgr.n_terminal(), 2);
+        assert_eq!(s.tmgr.lock().unwrap().n_terminal(), 2);
         s.close();
     }
 
     #[test]
     fn sessions_have_unique_uids() {
         assert_ne!(Session::new().uid, Session::new().uid);
+    }
+
+    #[test]
+    fn submit_is_nonblocking_and_wait_timeout_reports_pending() {
+        let mut s = Session::new();
+        s.register_function("nap", |_| {
+            std::thread::sleep(Duration::from_millis(300));
+            Ok(1.0)
+        });
+        s.create_pilot(PilotDescription::new("local.localhost", 1, 3600.0))
+            .unwrap();
+        let handles = s
+            .submit(vec![
+                TaskDescription::func("nap", Json::Null, 0.0),
+                TaskDescription::func("nap", Json::Null, 0.0),
+            ])
+            .unwrap();
+        assert_eq!(handles.len(), 2);
+        assert_eq!(handles[0].uid, "task.000000");
+        // submit returned while the naps still run: a tiny wait times out
+        // with both tasks pending
+        let pending = s
+            .wait_timeout(&handles, Duration::from_millis(10))
+            .unwrap();
+        assert!(pending >= 1, "expected pending tasks, got {pending}");
+        // a full wait drains to zero
+        assert_eq!(s.wait(&handles, None).unwrap(), 0);
+        let res = s.finish().unwrap();
+        assert!(res.tasks.iter().all(|t| t.state == TaskState::Done));
+        s.close();
+    }
+
+    #[test]
+    fn callbacks_fire_in_state_order() {
+        let mut s = Session::new();
+        let seen: Arc<Mutex<Vec<(u32, TaskState)>>> = Arc::new(Mutex::new(Vec::new()));
+        {
+            let seen = seen.clone();
+            s.on_state_change(move |h, state| {
+                seen.lock().unwrap().push((h.index, state));
+            });
+        }
+        s.create_pilot(PilotDescription::new("local.localhost", 1, 3600.0))
+            .unwrap();
+        let handles = s
+            .submit(vec![
+                TaskDescription::emulated("/bin/true", 1, 1, 0.0),
+                TaskDescription::emulated("/bin/true", 1, 1, 0.0),
+            ])
+            .unwrap();
+        s.wait(&handles, None).unwrap();
+        s.finish().unwrap();
+        let seen = seen.lock().unwrap();
+        for h in &handles {
+            let states: Vec<TaskState> = seen
+                .iter()
+                .filter(|(i, _)| *i == h.index)
+                .map(|(_, st)| *st)
+                .collect();
+            // per task: states observed strictly in pipeline order,
+            // starting at TmgrScheduling and ending terminal
+            assert!(states.len() >= 2, "task {} saw {:?}", h.index, states);
+            assert_eq!(states[0], TaskState::TmgrScheduling);
+            assert!(states.windows(2).all(|w| w[0] < w[1]), "{states:?}");
+            assert_eq!(*states.last().unwrap(), TaskState::Done);
+            assert!(states.contains(&TaskState::AgentExecuting));
+        }
+    }
+
+    #[test]
+    fn handles_stay_valid_across_retries() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        static CALLS: AtomicUsize = AtomicUsize::new(0);
+        let mut s = Session::new();
+        s.register_function("flaky", |_| {
+            if CALLS.fetch_add(1, Ordering::SeqCst) == 0 {
+                Err("transient fault".into())
+            } else {
+                Ok(7.0)
+            }
+        });
+        s.create_pilot(PilotDescription::new("local.localhost", 1, 3600.0))
+            .unwrap();
+        let policy = crate::resilience::RetryPolicy {
+            max_attempts: 3,
+            backoff_base_s: 0.01,
+            backoff_factor: 1.0,
+            backoff_max_s: 0.05,
+            jitter_frac: 0.0,
+            deadline_s: 0.0,
+        };
+        let handles = s
+            .submit(vec![
+                TaskDescription::func("flaky", Json::Null, 0.0).with_retry(policy)
+            ])
+            .unwrap();
+        s.wait(&handles, None).unwrap();
+        // the handle still resolves after the retry: same uid, same index
+        {
+            let tm = s.tmgr.lock().unwrap();
+            let t = tm.task_by_uid(&handles[0].uid).unwrap();
+            assert_eq!(t.index, handles[0].index);
+            assert_eq!(t.state, TaskState::Done);
+        }
+        let res = s.finish().unwrap();
+        assert_eq!(res.tasks[0].result, Some(7.0));
+        assert_eq!(res.tasks[0].attempts, 1, "one failed attempt recorded");
+    }
+
+    #[test]
+    fn streaming_overlaps_submission_with_execution() {
+        // Stretch submission (chunk=1, 40 ms between flushes) so the
+        // first task demonstrably executes before the last chunk is
+        // flushed — the paper's overlapped submit/execute, in real mode.
+        let mut s = Session::new();
+        s.stream.chunk = 1;
+        s.stream.inter_chunk_delay_s = 0.04;
+        s.create_pilot(PilotDescription::new("local.localhost", 1, 3600.0))
+            .unwrap();
+        let handles = s
+            .submit(
+                (0..8)
+                    .map(|_| TaskDescription::emulated("/bin/true", 1, 1, 0.0))
+                    .collect(),
+            )
+            .unwrap();
+        s.wait(&handles, None).unwrap();
+        let res = s.finish().unwrap();
+        assert!(res.tasks.iter().all(|t| t.state == TaskState::Done));
+        let first_exec = res.tracer.of_kind(Ev::TaskExecStart)[0].t;
+        let submits = res.tracer.of_kind(Ev::SubmitChunk);
+        assert_eq!(submits.len(), 8);
+        let last_submit = submits.last().unwrap().t;
+        assert!(
+            first_exec < last_submit,
+            "no overlap: first exec {first_exec} >= last submit {last_submit}"
+        );
+        assert_eq!(res.tracer.of_kind(Ev::Overlap).len(), 1);
+    }
+
+    #[test]
+    fn submit_without_pilot_is_an_error() {
+        let mut s = Session::new();
+        assert!(s
+            .submit(vec![TaskDescription::emulated("/bin/true", 1, 1, 0.0)])
+            .is_err());
+    }
+
+    #[test]
+    fn multi_pilot_session_splits_the_workload() {
+        let mut s = Session::new();
+        let p0 = s
+            .create_pilot(PilotDescription::new("local.localhost", 1, 3600.0))
+            .unwrap();
+        let p1 = s
+            .create_pilot(PilotDescription::new("local.localhost", 1, 3600.0))
+            .unwrap();
+        assert_ne!(p0, p1);
+        let handles = s
+            .submit(
+                (0..6)
+                    .map(|_| TaskDescription::emulated("/bin/true", 1, 1, 0.0))
+                    .collect(),
+            )
+            .unwrap();
+        s.wait(&handles, None).unwrap();
+        let res = s.finish().unwrap();
+        assert_eq!(res.tasks.len(), 6);
+        assert!(res.tasks.iter().all(|t| t.state == TaskState::Done));
     }
 }

@@ -89,7 +89,131 @@ impl Default for TaskDescription {
     }
 }
 
+/// Fluent builder for [`TaskDescription`] — the handle-based client API's
+/// replacement for long positional constructors. `build()` runs
+/// [`TaskDescription::verify`], so an invalid description is caught at
+/// construction time instead of at submit time.
+///
+/// ```
+/// use rp::task::TaskDescription;
+/// let td = TaskDescription::builder()
+///     .executable("gmx")
+///     .ranks(4)
+///     .cores_per_rank(8)
+///     .runtime_s(120.0)
+///     .build()
+///     .unwrap();
+/// assert_eq!(td.cores(), 32);
+/// ```
+#[derive(Clone, Debug, Default)]
+pub struct TaskDescriptionBuilder {
+    td: TaskDescription,
+    parallelism_set: bool,
+}
+
+impl TaskDescriptionBuilder {
+    pub fn name(mut self, name: &str) -> Self {
+        self.td.name = name.to_string();
+        self
+    }
+
+    /// Make this an executable task running `exe`.
+    pub fn executable(mut self, exe: &str) -> Self {
+        self.td.kind = TaskKind::Executable;
+        self.td.executable = exe.to_string();
+        self
+    }
+
+    pub fn arguments<I: IntoIterator<Item = S>, S: Into<String>>(mut self, args: I) -> Self {
+        self.td.arguments = args.into_iter().map(Into::into).collect();
+        self
+    }
+
+    /// Make this a function (RAPTOR) task calling the registered `function`.
+    pub fn function(mut self, function: &str, payload: Json) -> Self {
+        self.td.kind = TaskKind::Function;
+        self.td.function = function.to_string();
+        self.td.payload = payload;
+        self
+    }
+
+    pub fn parallelism(mut self, p: Parallelism) -> Self {
+        self.td.parallelism = p;
+        self.parallelism_set = true;
+        self
+    }
+
+    pub fn ranks(mut self, ranks: u32) -> Self {
+        self.td.ranks = ranks;
+        self
+    }
+
+    pub fn cores_per_rank(mut self, cores: u32) -> Self {
+        self.td.cores_per_rank = cores;
+        self
+    }
+
+    pub fn gpus_per_rank(mut self, gpus: u32) -> Self {
+        self.td.gpus_per_rank = gpus;
+        self
+    }
+
+    pub fn runtime_s(mut self, runtime_s: f64) -> Self {
+        self.td.runtime_s = runtime_s;
+        self
+    }
+
+    pub fn node_tag(mut self, tag: u32) -> Self {
+        self.td.node_tag = Some(tag);
+        self
+    }
+
+    pub fn dvm_tag(mut self, tag: u32) -> Self {
+        self.td.dvm_tag = Some(tag);
+        self
+    }
+
+    pub fn input_staging(mut self, d: StagingDirective) -> Self {
+        self.td.input_staging.push(d);
+        self
+    }
+
+    pub fn output_staging(mut self, d: StagingDirective) -> Self {
+        self.td.output_staging.push(d);
+        self
+    }
+
+    pub fn retry(mut self, retry: RetryPolicy) -> Self {
+        self.td.retry = retry;
+        self
+    }
+
+    /// Finalize without verification — the escape hatch the legacy
+    /// constructors use (they historically allowed invalid shapes to be
+    /// built and caught later, at submit).
+    fn build_unchecked(mut self) -> TaskDescription {
+        // multi-rank tasks default to MPI unless parallelism was given
+        // explicitly — matches the `emulated` constructor's behavior
+        if !self.parallelism_set && self.td.ranks > 1 {
+            self.td.parallelism = Parallelism::Mpi;
+        }
+        self.td
+    }
+
+    /// Verify-on-build: returns the description or the verification error.
+    pub fn build(self) -> Result<TaskDescription> {
+        let td = self.build_unchecked();
+        td.verify()?;
+        Ok(td)
+    }
+}
+
 impl TaskDescription {
+    /// Start a fluent [`TaskDescriptionBuilder`].
+    pub fn builder() -> TaskDescriptionBuilder {
+        TaskDescriptionBuilder::default()
+    }
+
     /// Total CPU cores required.
     pub fn cores(&self) -> u64 {
         self.ranks as u64 * self.cores_per_rank as u64
@@ -125,20 +249,16 @@ impl TaskDescription {
         }
     }
 
-    /// Convenience constructor for the common emulated executable task.
+    /// Convenience constructor for the common emulated executable task
+    /// (delegates to the builder; stays infallible for compatibility —
+    /// invalid shapes are still caught by `verify()` at submit).
     pub fn emulated(executable: &str, ranks: u32, cores_per_rank: u32, runtime_s: f64) -> Self {
-        TaskDescription {
-            executable: executable.to_string(),
-            ranks,
-            cores_per_rank,
-            parallelism: if ranks > 1 {
-                Parallelism::Mpi
-            } else {
-                Parallelism::Scalar
-            },
-            runtime_s,
-            ..Default::default()
-        }
+        Self::builder()
+            .executable(executable)
+            .ranks(ranks)
+            .cores_per_rank(cores_per_rank)
+            .runtime_s(runtime_s)
+            .build_unchecked()
     }
 
     /// Builder: attach a retry policy.
@@ -147,15 +267,13 @@ impl TaskDescription {
         self
     }
 
-    /// Convenience constructor for a function task (RAPTOR).
+    /// Convenience constructor for a function task (RAPTOR); delegates to
+    /// the builder like [`TaskDescription::emulated`].
     pub fn func(function: &str, payload: Json, runtime_s: f64) -> Self {
-        TaskDescription {
-            kind: TaskKind::Function,
-            function: function.to_string(),
-            payload,
-            runtime_s,
-            ..Default::default()
-        }
+        Self::builder()
+            .function(function, payload)
+            .runtime_s(runtime_s)
+            .build_unchecked()
     }
 }
 
@@ -178,6 +296,47 @@ mod tests {
         assert_eq!(d.cores(), 32);
         assert_eq!(d.gpus(), 4);
         assert!(d.uses_mpi());
+    }
+
+    #[test]
+    fn builder_verifies_on_build() {
+        let td = TaskDescription::builder()
+            .name("md-step")
+            .executable("gmx")
+            .arguments(["mdrun", "-ntomp", "4"])
+            .ranks(4)
+            .cores_per_rank(8)
+            .gpus_per_rank(1)
+            .runtime_s(100.0)
+            .build()
+            .unwrap();
+        assert_eq!(td.cores(), 32);
+        assert_eq!(td.gpus(), 4);
+        assert!(td.uses_mpi()); // multi-rank defaults to MPI
+        assert_eq!(td.arguments, vec!["mdrun", "-ntomp", "4"]);
+
+        // verify-on-build: zero ranks / missing executable fail at build
+        assert!(TaskDescription::builder().executable("x").ranks(0).build().is_err());
+        assert!(TaskDescription::builder().runtime_s(1.0).build().is_err());
+
+        // explicit parallelism wins over the multi-rank MPI default
+        let threads = TaskDescription::builder()
+            .executable("x")
+            .ranks(4)
+            .parallelism(Parallelism::Threads)
+            .build()
+            .unwrap();
+        assert!(!threads.uses_mpi());
+    }
+
+    #[test]
+    fn constructors_delegate_to_builder() {
+        let a = TaskDescription::emulated("gmx", 4, 8, 100.0);
+        assert_eq!(a.parallelism, Parallelism::Mpi);
+        assert_eq!(a.cores(), 32);
+        let f = TaskDescription::func("dock", Json::Null, 1.0);
+        assert_eq!(f.kind, TaskKind::Function);
+        assert_eq!(f.function, "dock");
     }
 
     #[test]

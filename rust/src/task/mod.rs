@@ -4,6 +4,10 @@
 
 pub mod description;
 pub mod state;
+pub mod store;
 
-pub use description::{Parallelism, StagingDirective, TaskDescription, TaskKind};
+pub use description::{
+    Parallelism, StagingDirective, TaskDescription, TaskDescriptionBuilder, TaskKind,
+};
 pub use state::{Task, TaskState};
+pub use store::DescStore;

@@ -1,0 +1,77 @@
+//! `DescStore` — the growable, shared task-description table behind the
+//! streaming pipeline (PR 9).
+//!
+//! In the phased design the Agent received a fixed `&[TaskDescription]`
+//! slice; under streaming submission the client keeps appending while
+//! agents are already scheduling, so both sides share this clone-cheap
+//! `Arc<RwLock<Vec<_>>>`. The session appends (short write locks, one per
+//! `submit` call); agent stages read — either a single description by
+//! index or the whole table under a read guard for
+//! `SchedCore::schedule_bulk`. Indices are dense and stable: entry `i`
+//! describes the task with uid `task.{i:06}` and `Task::index == i`.
+
+use std::sync::{Arc, RwLock, RwLockReadGuard};
+
+use super::TaskDescription;
+
+#[derive(Clone, Default)]
+pub struct DescStore {
+    inner: Arc<RwLock<Vec<TaskDescription>>>,
+}
+
+impl DescStore {
+    pub fn new() -> DescStore {
+        DescStore::default()
+    }
+
+    pub fn from_vec(v: Vec<TaskDescription>) -> DescStore {
+        DescStore {
+            inner: Arc::new(RwLock::new(v)),
+        }
+    }
+
+    /// Append descriptions (the session submit path).
+    pub fn push_all(&self, items: &[TaskDescription]) {
+        self.inner.write().unwrap().extend(items.iter().cloned());
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.read().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Clone one description out (executor hand-off).
+    pub fn get(&self, index: u32) -> TaskDescription {
+        self.inner.read().unwrap()[index as usize].clone()
+    }
+
+    /// Read access to the whole table — the scheduler holds this guard
+    /// across one `schedule_bulk` pass (writers queue briefly behind it).
+    pub fn read(&self) -> RwLockReadGuard<'_, Vec<TaskDescription>> {
+        self.inner.read().unwrap()
+    }
+
+    /// Run `f` under the read lock.
+    pub fn with<R>(&self, f: impl FnOnce(&[TaskDescription]) -> R) -> R {
+        f(&self.inner.read().unwrap())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grows_while_shared() {
+        let a = DescStore::new();
+        let b = a.clone();
+        a.push_all(&[TaskDescription::emulated("/bin/true", 1, 1, 0.0)]);
+        b.push_all(&[TaskDescription::emulated("/bin/false", 2, 4, 1.0)]);
+        assert_eq!(a.len(), 2);
+        assert_eq!(b.get(1).ranks, 2);
+        assert_eq!(a.with(|ds| ds[0].executable.clone()), "/bin/true");
+    }
+}

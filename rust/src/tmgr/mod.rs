@@ -1,15 +1,30 @@
 //! TaskManager (§III-A/B): accepts task descriptions, verifies them,
 //! assigns uids, routes them to pilots (round-robin or explicit), and
 //! communicates them to Agents through the DB module (Fig. 2, step 4).
+//!
+//! Since PR 9 the TaskManager also runs *as a pipeline stage*: see
+//! [`stream::TmgrStage`], the `mesh::Component` that binds and flushes
+//! task records to the DB in bulk chunks while agents concurrently pull,
+//! schedule, and execute (the paper's overlapped submission path).
+
+pub mod stream;
+
+use std::collections::HashMap;
 
 use crate::db::{Db, TaskRecord};
 use crate::task::{Task, TaskDescription, TaskState};
 use crate::util::error::{Result, RpError};
 use crate::util::ids::Counter;
 
+pub use stream::{StreamConfig, SubmitLedger, SubmitReceipt, TmgrStage};
+
 pub struct TaskManager {
     pub uid: String,
     tasks: Vec<Task>,
+    /// uid → dense index, maintained at submit time. Keeps `sync_states`
+    /// O(1) per update instead of the old O(n) `iter_mut().find` scan
+    /// (which made a 100k-task drain O(n²)).
+    by_uid: HashMap<String, u32>,
     counter: Counter,
     rr_next: usize,
 }
@@ -25,6 +40,7 @@ impl TaskManager {
         TaskManager {
             uid: "tmgr.0000".into(),
             tasks: Vec::new(),
+            by_uid: HashMap::new(),
             counter: Counter::new(),
             rr_next: 0,
         }
@@ -37,32 +53,70 @@ impl TaskManager {
             td.verify()?;
             let index = self.tasks.len() as u32;
             let uid = self.counter.next("task", 6);
+            self.by_uid.insert(uid.clone(), index);
             self.tasks.push(Task::new(uid, index, td));
             indices.push(index);
         }
         Ok(indices)
     }
 
-    /// Route tasks to pilots round-robin (RP's default multi-pilot
-    /// policy) and insert the records into the DB in bulk.
-    pub fn schedule_to_pilots(&mut self, db: &Db, pilot_uids: &[String]) -> Result<()> {
+    /// Bind one task to a pilot chosen round-robin (RP's default
+    /// multi-pilot policy), producing the DB record. The streaming
+    /// [`TmgrStage`] calls this per task as submissions arrive; the
+    /// phased [`TaskManager::schedule_to_pilots`] calls it in a sweep.
+    /// Returns the pilot slot picked and the record to insert.
+    ///
+    /// Deliberately does NOT advance the client-side table: in the
+    /// streaming path the table is driven exclusively by the DB updates
+    /// channel (the `TmgrScheduling` transition the stage flushes rides
+    /// FIFO ahead of the agent's updates, so `apply_updates` callbacks
+    /// observe states strictly in order). The phased path advances in
+    /// [`schedule_to_pilots`](Self::schedule_to_pilots).
+    pub fn bind_round_robin(
+        &mut self,
+        index: u32,
+        pilot_uids: &[String],
+    ) -> Result<(usize, TaskRecord)> {
         if pilot_uids.is_empty() {
             return Err(RpError::Scheduling("no pilots to schedule to".into()));
         }
-        let mut per_pilot: Vec<Vec<TaskRecord>> = vec![Vec::new(); pilot_uids.len()];
-        for task in self.tasks.iter_mut() {
-            if task.state != TaskState::New {
-                continue;
-            }
-            let p = self.rr_next % pilot_uids.len();
-            self.rr_next += 1;
-            task.advance(TaskState::TmgrScheduling)?;
-            per_pilot[p].push(TaskRecord {
+        let task = self
+            .tasks
+            .get(index as usize)
+            .ok_or_else(|| RpError::Scheduling(format!("unknown task index {index}")))?;
+        let p = self.rr_next % pilot_uids.len();
+        self.rr_next += 1;
+        Ok((
+            p,
+            TaskRecord {
                 uid: task.uid.clone(),
                 index: task.index,
                 pilot: pilot_uids[p].clone(),
                 state: TaskState::TmgrScheduling,
-            });
+            },
+        ))
+    }
+
+    /// Route tasks to pilots round-robin and insert the records into the
+    /// DB in bulk (the phased, pre-streaming path; kept for DES examples
+    /// and as the semantic reference for [`TmgrStage`]).
+    pub fn schedule_to_pilots(&mut self, db: &Db, pilot_uids: &[String]) -> Result<()> {
+        if pilot_uids.is_empty() {
+            return Err(RpError::Scheduling("no pilots to schedule to".into()));
+        }
+        let new_indices: Vec<u32> = self
+            .tasks
+            .iter()
+            .filter(|t| t.state == TaskState::New)
+            .map(|t| t.index)
+            .collect();
+        let mut per_pilot: Vec<Vec<TaskRecord>> = vec![Vec::new(); pilot_uids.len()];
+        for index in new_indices {
+            let (p, rec) = self.bind_round_robin(index, pilot_uids)?;
+            // phased path: advance the table here (the streaming path
+            // advances via the DB updates channel instead)
+            self.tasks[index as usize].advance(TaskState::TmgrScheduling)?;
+            per_pilot[p].push(rec);
         }
         for (p, records) in per_pilot.into_iter().enumerate() {
             if !records.is_empty() {
@@ -72,21 +126,39 @@ impl TaskManager {
         Ok(())
     }
 
-    /// Absorb agent-side state updates from the DB.
-    pub fn sync_states(&mut self, db: &Db) {
-        for (uid, state) in db.drain_updates() {
-            if let Some(task) = self.tasks.iter_mut().find(|t| t.uid == uid) {
-                // agent states may arrive coarse-grained; accept terminal
-                // transitions directly
-                if state.is_terminal() {
-                    if !task.state.is_terminal() {
-                        task.state = state;
-                    }
-                } else if task.state.can_advance_to(state) {
-                    task.state = state;
-                }
+    /// Apply a batch of agent-side state updates, invoking `on_change`
+    /// for every *accepted* transition (stale or duplicate updates are
+    /// dropped, so per-task callbacks observe states in order). O(1) per
+    /// update via the uid→index map.
+    pub fn apply_updates<F>(&mut self, updates: Vec<(String, TaskState)>, mut on_change: F)
+    where
+        F: FnMut(&Task, TaskState),
+    {
+        for (uid, state) in updates {
+            let Some(&index) = self.by_uid.get(&uid) else {
+                continue;
+            };
+            let task = &mut self.tasks[index as usize];
+            // agent states may arrive coarse-grained; accept terminal
+            // transitions directly and forward jumps over skipped
+            // intermediate states (the state enum is pipeline-ordered)
+            let accept = if state.is_terminal() {
+                !task.state.is_terminal()
+            } else {
+                !task.state.is_terminal()
+                    && (task.state.can_advance_to(state) || state > task.state)
+            };
+            if accept {
+                task.state = state;
+                on_change(&self.tasks[index as usize], state);
             }
         }
+    }
+
+    /// Absorb agent-side state updates from the DB (non-blocking drain).
+    pub fn sync_states(&mut self, db: &Db) {
+        let ups = db.drain_updates();
+        self.apply_updates(ups, |_, _| {});
     }
 
     pub fn tasks(&self) -> &[Task] {
@@ -95,6 +167,19 @@ impl TaskManager {
 
     pub fn task(&self, index: u32) -> &Task {
         &self.tasks[index as usize]
+    }
+
+    /// Handle lookups: uid → task, via the submit-time map.
+    pub fn task_by_uid(&self, uid: &str) -> Option<&Task> {
+        self.by_uid.get(uid).map(|&i| &self.tasks[i as usize])
+    }
+
+    pub fn len(&self) -> usize {
+        self.tasks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tasks.is_empty()
     }
 
     pub fn descriptions(&self) -> Vec<TaskDescription> {
@@ -174,5 +259,74 @@ mod tests {
         let mut tm = TaskManager::new();
         tm.submit(tds(1)).unwrap();
         assert!(tm.schedule_to_pilots(&Db::new(), &[]).is_err());
+    }
+
+    #[test]
+    fn uid_map_backs_handle_lookup_and_sync() {
+        let mut tm = TaskManager::new();
+        tm.submit(tds(1000)).unwrap();
+        assert_eq!(tm.task_by_uid("task.000999").unwrap().index, 999);
+        assert!(tm.task_by_uid("task.001000").is_none());
+        let db = Db::new();
+        tm.schedule_to_pilots(&db, &["pilot.0000".to_string()]).unwrap();
+        // updates for unknown uids are ignored; known ones are O(1)
+        db.update_state("nope.000000", TaskState::Done);
+        db.update_state("task.000500", TaskState::Done);
+        tm.sync_states(&db);
+        assert_eq!(tm.n_terminal(), 1);
+        assert_eq!(tm.task(500).state, TaskState::Done);
+    }
+
+    #[test]
+    fn apply_updates_accepts_forward_jumps_in_order() {
+        let mut tm = TaskManager::new();
+        tm.submit(tds(1)).unwrap();
+        let db = Db::new();
+        tm.schedule_to_pilots(&db, &["pilot.0000".to_string()]).unwrap();
+        let mut seen = Vec::new();
+        tm.apply_updates(
+            vec![
+                // jump over staging straight to executing, then a stale
+                // duplicate, then terminal
+                ("task.000000".into(), TaskState::AgentExecuting),
+                ("task.000000".into(), TaskState::AgentExecuting),
+                ("task.000000".into(), TaskState::Done),
+            ],
+            |t, s| seen.push((t.index, s)),
+        );
+        // duplicate dropped: callbacks observed states strictly in order
+        assert_eq!(
+            seen,
+            vec![(0, TaskState::AgentExecuting), (0, TaskState::Done)]
+        );
+        // nothing fires after terminal
+        tm.apply_updates(
+            vec![("task.000000".into(), TaskState::Failed)],
+            |_, _| panic!("terminal states must be sticky"),
+        );
+        assert_eq!(tm.task(0).state, TaskState::Done);
+    }
+
+    #[test]
+    fn bind_round_robin_matches_sweep_order() {
+        let pilots = vec!["pilot.0000".to_string(), "pilot.0001".to_string()];
+        let mut a = TaskManager::new();
+        a.submit(tds(5)).unwrap();
+        let db_a = Db::new();
+        a.schedule_to_pilots(&db_a, &pilots).unwrap();
+        let mut b = TaskManager::new();
+        b.submit(tds(5)).unwrap();
+        let db_b = Db::new();
+        let mut per_pilot: Vec<Vec<crate::db::TaskRecord>> = vec![Vec::new(), Vec::new()];
+        for i in 0..5u32 {
+            let (p, rec) = b.bind_round_robin(i, &pilots).unwrap();
+            per_pilot[p].push(rec);
+        }
+        for (p, recs) in per_pilot.into_iter().enumerate() {
+            db_b.insert_tasks(&pilots[p], recs);
+        }
+        for p in &pilots {
+            assert_eq!(db_a.pull_tasks(p, 100), db_b.pull_tasks(p, 100));
+        }
     }
 }

@@ -1,0 +1,418 @@
+//! The streaming TaskManager stage (PR 9 tentpole) — RP's bulk
+//! communication path as a `mesh::Component`.
+//!
+//! The paper's client side is a *pipeline*, not a phase sequence: the
+//! TaskManager streams bound task records to the DB in bulk chunks while
+//! agents concurrently pull, schedule, and execute (Fig. 2; §IV measures
+//! exactly this overlap as submission rate vs. execution rate). Here that
+//! pipeline is:
+//!
+//! ```text
+//!   Session::submit ─(task indices)─▶ TmgrStage ─(chunked records)─▶ Db
+//!                                        │                            │
+//!                                 SubmitReceipt                 agent pulls,
+//!                                 (to the session's             schedules via
+//!                                  monitor thread)              SchedCore, runs
+//! ```
+//!
+//! [`TmgrStage`] pops submitted task indices from its input queue,
+//! round-robin-binds each to a pilot via
+//! [`TaskManager::bind_round_robin`], buffers the records per pilot, and
+//! flushes a bulk chunk (default 1024, RP's bulk size) with *one*
+//! `insert_tasks` call — recording [`Ev::SubmitChunk`] and crediting the
+//! pilot's [`SubmitLedger`] so its agent knows how much work exists while
+//! the total is still growing.
+
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use super::TaskManager;
+use crate::db::{Db, TaskRecord};
+use crate::mesh::{Component, Flow, WorkQueue};
+use crate::task::TaskState;
+use crate::tracer::{Ev, Tracer};
+use crate::util::error::Result;
+
+/// Knobs for the streaming submit path.
+#[derive(Clone, Debug)]
+pub struct StreamConfig {
+    /// Records per bulk DB flush (RP's bulk communication size).
+    pub chunk: usize,
+    /// Artificial pacing between chunk flushes — 0 in production; the
+    /// overlap bench and tests use it to stretch submission so the
+    /// submit-vs-execute overlap is observable at small scale.
+    pub inter_chunk_delay_s: f64,
+    /// Executor worker threads per local pilot (0 → one per core, capped).
+    pub n_executor_threads: usize,
+    /// Trace collection on/off (as in `AgentConfig`).
+    pub trace: bool,
+}
+
+impl Default for StreamConfig {
+    fn default() -> Self {
+        StreamConfig {
+            chunk: 1024,
+            inter_chunk_delay_s: 0.0,
+            n_executor_threads: 0,
+            trace: true,
+        }
+    }
+}
+
+/// Per-pilot submission accounting, shared between the client-side
+/// [`TmgrStage`] (credits chunks as they are flushed) and that pilot's
+/// agent (debits completions). Replaces the pre-streaming agent's fixed
+/// `expected == descriptions.len()` termination test: the workload size
+/// is unknown until the session drains, so the agent's StagerOut asks
+/// `is_complete(done)` — true only once the client has marked the stream
+/// as draining *and* every credited task is accounted terminal.
+pub struct SubmitLedger {
+    inner: Mutex<LedgerState>,
+    cv: Condvar,
+}
+
+struct LedgerState {
+    submitted: u64,
+    draining: bool,
+}
+
+impl Default for SubmitLedger {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SubmitLedger {
+    /// An open ledger: nothing submitted yet, stream still growing.
+    pub fn new() -> SubmitLedger {
+        SubmitLedger {
+            inner: Mutex::new(LedgerState {
+                submitted: 0,
+                draining: false,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// A closed ledger for the phased compatibility path (`Agent::run`):
+    /// the whole workload is known up front.
+    pub fn preloaded(n: u64) -> SubmitLedger {
+        SubmitLedger {
+            inner: Mutex::new(LedgerState {
+                submitted: n,
+                draining: true,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Credit `n` freshly-flushed tasks (called just before the bulk
+    /// insert, so completions can never outrun credits).
+    pub fn add(&self, n: u64) {
+        let mut g = self.inner.lock().unwrap();
+        g.submitted += n;
+    }
+
+    /// Client side: no more submissions will arrive.
+    pub fn mark_draining(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.draining = true;
+        self.cv.notify_all();
+    }
+
+    /// Agent side: is the workload fully submitted *and* fully done?
+    pub fn is_complete(&self, done: u64) -> bool {
+        let g = self.inner.lock().unwrap();
+        g.draining && done >= g.submitted
+    }
+
+    /// Block until the client marks the stream draining (the agent's
+    /// drain watcher uses this to wake its StagerOut for the final
+    /// completeness check).
+    pub fn wait_draining(&self) {
+        let mut g = self.inner.lock().unwrap();
+        while !g.draining {
+            g = self.cv.wait(g).unwrap();
+        }
+    }
+
+    pub fn submitted(&self) -> u64 {
+        self.inner.lock().unwrap().submitted
+    }
+}
+
+/// What one chunk flush looked like — pushed to the session's monitor
+/// thread, which uses it for progress accounting.
+#[derive(Clone, Debug)]
+pub struct SubmitReceipt {
+    /// chunk ordinal (also the `entity` of the `SubmitChunk` trace event)
+    pub chunk: u32,
+    pub pilot: String,
+    /// tasks in this chunk
+    pub n: usize,
+    /// client-clock flush time
+    pub t: f64,
+}
+
+/// The TaskManager as a pipeline stage. Input: task indices (already
+/// verified and uid-stamped by `Session::submit`). Output: one
+/// [`SubmitReceipt`] per flushed chunk.
+pub struct TmgrStage {
+    tmgr: Arc<Mutex<TaskManager>>,
+    db: Arc<Db>,
+    /// per-pilot (uid, ledger), in round-robin order
+    pilots: Vec<(String, Arc<SubmitLedger>)>,
+    pilot_uids: Vec<String>,
+    chunk: usize,
+    inter_chunk_delay: Duration,
+    clock: Arc<dyn crate::mesh::Clock>,
+    tracer: Arc<Mutex<Tracer>>,
+    buffers: Vec<Vec<TaskRecord>>,
+    n_chunks: u32,
+    n_submitted: u64,
+    t_first_flush: Option<f64>,
+    t_last_flush: f64,
+}
+
+impl TmgrStage {
+    pub fn new(
+        tmgr: Arc<Mutex<TaskManager>>,
+        db: Arc<Db>,
+        pilots: Vec<(String, Arc<SubmitLedger>)>,
+        cfg: &StreamConfig,
+        clock: Arc<dyn crate::mesh::Clock>,
+        tracer: Arc<Mutex<Tracer>>,
+    ) -> TmgrStage {
+        let pilot_uids: Vec<String> = pilots.iter().map(|(u, _)| u.clone()).collect();
+        let buffers = vec![Vec::new(); pilots.len()];
+        TmgrStage {
+            tmgr,
+            db,
+            pilots,
+            pilot_uids,
+            chunk: cfg.chunk.max(1),
+            inter_chunk_delay: Duration::from_secs_f64(cfg.inter_chunk_delay_s.max(0.0)),
+            clock,
+            tracer,
+            buffers,
+            n_chunks: 0,
+            n_submitted: 0,
+            t_first_flush: None,
+            t_last_flush: 0.0,
+        }
+    }
+
+    /// Flush pilot `p`'s buffered records as one bulk chunk: credit the
+    /// ledger, push the `TmgrScheduling` transitions into the updates
+    /// channel (FIFO with the agent's own updates, so client callbacks
+    /// see states in order), then the single bulk insert.
+    fn flush(&mut self, p: usize, out: &WorkQueue<SubmitReceipt>) -> Result<()> {
+        let records = std::mem::take(&mut self.buffers[p]);
+        if records.is_empty() {
+            return Ok(());
+        }
+        let n = records.len();
+        let t = self.clock.now();
+        let (pilot, ledger) = &self.pilots[p];
+        ledger.add(n as u64);
+        self.db.update_states_bulk(
+            records
+                .iter()
+                .map(|r| (r.uid.clone(), TaskState::TmgrScheduling))
+                .collect(),
+        );
+        self.db.insert_tasks(pilot, records);
+        self.tracer.lock().unwrap().rec(t, self.n_chunks, Ev::SubmitChunk);
+        // a closed receipts queue means the session is tearing down; the
+        // flush itself already happened, so don't fail the stage
+        let _ = out.push(SubmitReceipt {
+            chunk: self.n_chunks,
+            pilot: pilot.clone(),
+            n,
+            t,
+        });
+        self.n_chunks += 1;
+        self.n_submitted += n as u64;
+        self.t_first_flush.get_or_insert(t);
+        self.t_last_flush = t;
+        if !self.inter_chunk_delay.is_zero() {
+            std::thread::sleep(self.inter_chunk_delay);
+        }
+        Ok(())
+    }
+}
+
+impl Component for TmgrStage {
+    type In = u32;
+    type Out = SubmitReceipt;
+
+    fn name(&self) -> &str {
+        "tmgr-stage"
+    }
+
+    fn process(&mut self, batch: Vec<u32>, out: &WorkQueue<SubmitReceipt>) -> Result<Flow> {
+        for index in batch {
+            let (p, rec) = {
+                let mut tm = self.tmgr.lock().unwrap();
+                tm.bind_round_robin(index, &self.pilot_uids)?
+            };
+            self.buffers[p].push(rec);
+            if self.buffers[p].len() >= self.chunk {
+                self.flush(p, out)?;
+            }
+        }
+        Ok(Flow::Continue)
+    }
+
+    /// Input closed (session draining): flush every partial chunk and
+    /// annotate the client-side submission rate — the paper's
+    /// tasks-submitted/sec metric.
+    fn finish(&mut self, out: &WorkQueue<SubmitReceipt>) -> Result<()> {
+        for p in 0..self.buffers.len() {
+            self.flush(p, out)?;
+        }
+        if self.n_submitted > 0 {
+            let span = (self.t_last_flush - self.t_first_flush.unwrap_or(0.0)).max(1e-9);
+            let rate = self.n_submitted as f64 / span;
+            let t = self.clock.now();
+            self.tracer.lock().unwrap().annotate(
+                t,
+                "tmgr",
+                format!(
+                    "tasks_submitted_per_s={rate:.1} n={} chunks={} span_s={span:.6}",
+                    self.n_submitted, self.n_chunks
+                ),
+            );
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mesh::{spawn, SpawnOpts, WallClock};
+    use crate::task::TaskDescription;
+
+    fn setup(n_pilots: usize) -> (Arc<Mutex<TaskManager>>, Arc<Db>, Vec<(String, Arc<SubmitLedger>)>) {
+        let tmgr = Arc::new(Mutex::new(TaskManager::new()));
+        let db = Arc::new(Db::new());
+        let pilots: Vec<(String, Arc<SubmitLedger>)> = (0..n_pilots)
+            .map(|i| (format!("pilot.{i:04}"), Arc::new(SubmitLedger::new())))
+            .collect();
+        (tmgr, db, pilots)
+    }
+
+    #[test]
+    fn stage_flushes_in_chunks_and_credits_ledgers() {
+        let (tmgr, db, pilots) = setup(1);
+        let indices = tmgr
+            .lock()
+            .unwrap()
+            .submit(
+                (0..10)
+                    .map(|_| TaskDescription::emulated("/bin/true", 1, 1, 1.0))
+                    .collect(),
+            )
+            .unwrap();
+        let tracer = Arc::new(Mutex::new(Tracer::new(true)));
+        let cfg = StreamConfig {
+            chunk: 4,
+            ..Default::default()
+        };
+        let stage = TmgrStage::new(
+            tmgr.clone(),
+            db.clone(),
+            pilots.clone(),
+            &cfg,
+            Arc::new(WallClock::new()),
+            tracer.clone(),
+        );
+        let q_in: WorkQueue<u32> = WorkQueue::new(0);
+        let q_out: WorkQueue<SubmitReceipt> = WorkQueue::new(0);
+        let h = spawn(stage, q_in.clone(), q_out.clone(), SpawnOpts { bulk: 4, close_output: true });
+        q_in.push_bulk(indices).unwrap();
+        q_in.close();
+        h.join().unwrap();
+        // 10 tasks / chunk=4 → chunks of 4+4+2 (the last from finish())
+        let mut receipts = Vec::new();
+        while let Some(r) = q_out.pop() {
+            receipts.push(r);
+        }
+        let sizes: Vec<usize> = receipts.iter().map(|r| r.n).collect();
+        assert_eq!(sizes, vec![4, 4, 2]);
+        assert_eq!(pilots[0].1.submitted(), 10);
+        assert_eq!(db.pending("pilot.0000"), 10);
+        let tr = tracer.lock().unwrap();
+        assert_eq!(tr.of_kind(Ev::SubmitChunk).len(), 3);
+        assert!(tr
+            .notes()
+            .iter()
+            .any(|n| n.event.contains("tasks_submitted_per_s=")));
+        // the TmgrScheduling transitions went through the updates channel
+        let ups = db.drain_updates();
+        assert_eq!(ups.len(), 10);
+        assert!(ups.iter().all(|(_, s)| *s == TaskState::TmgrScheduling));
+        // the client table is driven by that channel, not by the bind:
+        // it stays New until the updates are applied (single FIFO source,
+        // so session callbacks observe submit before execute)
+        {
+            let mut tm = tmgr.lock().unwrap();
+            assert!(tm.tasks().iter().all(|t| t.state == TaskState::New));
+            tm.apply_updates(ups, |_, _| {});
+            assert!(tm.tasks().iter().all(|t| t.state == TaskState::TmgrScheduling));
+        }
+    }
+
+    #[test]
+    fn stage_round_robins_across_pilots() {
+        let (tmgr, db, pilots) = setup(2);
+        let indices = tmgr
+            .lock()
+            .unwrap()
+            .submit(
+                (0..8)
+                    .map(|_| TaskDescription::emulated("/bin/true", 1, 1, 1.0))
+                    .collect(),
+            )
+            .unwrap();
+        let tracer = Arc::new(Mutex::new(Tracer::new(false)));
+        let cfg = StreamConfig {
+            chunk: 2,
+            ..Default::default()
+        };
+        let stage = TmgrStage::new(
+            tmgr,
+            db.clone(),
+            pilots.clone(),
+            &cfg,
+            Arc::new(WallClock::new()),
+            tracer,
+        );
+        let q_in: WorkQueue<u32> = WorkQueue::new(0);
+        let q_out: WorkQueue<SubmitReceipt> = WorkQueue::new(0);
+        let h = spawn(stage, q_in.clone(), q_out.clone(), SpawnOpts::default());
+        q_in.push_bulk(indices).unwrap();
+        q_in.close();
+        h.join().unwrap();
+        while q_out.pop().is_some() {}
+        assert_eq!(db.pending("pilot.0000"), 4);
+        assert_eq!(db.pending("pilot.0001"), 4);
+        assert_eq!(pilots[0].1.submitted(), 4);
+        assert_eq!(pilots[1].1.submitted(), 4);
+    }
+
+    #[test]
+    fn ledger_completion_requires_draining() {
+        let l = SubmitLedger::new();
+        l.add(3);
+        assert!(!l.is_complete(3)); // all done but stream still open
+        l.mark_draining();
+        assert!(!l.is_complete(2));
+        assert!(l.is_complete(3));
+        let pre = SubmitLedger::preloaded(5);
+        assert!(!pre.is_complete(4));
+        assert!(pre.is_complete(5));
+        pre.wait_draining(); // returns immediately: preloaded is draining
+    }
+}

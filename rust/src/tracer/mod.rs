@@ -40,6 +40,9 @@ pub enum Ev {
     TaskDone = 21,
     TaskFailed = 22,
     TaskResubmit = 23,      // retry path: failed attempt re-enters the queue
+    // streaming client pipeline (PR 9)
+    SubmitChunk = 24,       // TaskManager flushed one bulk chunk to the DB
+    Overlap = 25,           // first execution started before the last submit chunk
     // raptor
     MasterReady = 30,
     WorkerReady = 31,
@@ -71,6 +74,8 @@ impl Ev {
             TaskDone => "task_done",
             TaskFailed => "task_failed",
             TaskResubmit => "task_resubmit",
+            SubmitChunk => "submit_chunk",
+            Overlap => "overlap",
             MasterReady => "master_ready",
             WorkerReady => "worker_ready",
         }
@@ -195,6 +200,22 @@ impl Tracer {
             .map(|e| e.t)
     }
 
+    /// Fold another tracer's records into this one (used by the streaming
+    /// [`Session`](crate::session::Session) to combine the client-side
+    /// submit trace with each agent's execution trace — all share one
+    /// epoch, the session clock). Events are re-sorted by time so the
+    /// merged log reads like a single component's log; notes keep their
+    /// per-tracer order, appended.
+    pub fn merge(&mut self, other: Tracer) {
+        if !self.enabled {
+            return;
+        }
+        self.events.extend(other.events);
+        self.notes.extend(other.notes);
+        self.events
+            .sort_by(|a, b| a.t.partial_cmp(&b.t).unwrap_or(std::cmp::Ordering::Equal));
+    }
+
     /// Export as CSV (the RADICAL-Analytics interchange format here),
     /// RFC-4180-safe: event rows need no quoting ([`Ev::name`] strings are
     /// comma/quote-free by construction), while annotation rows carry
@@ -277,6 +298,27 @@ mod tests {
     }
 
     #[test]
+    fn merge_interleaves_by_time_and_keeps_notes() {
+        let mut client = Tracer::new(true);
+        client.rec(0.0, 0, Ev::SubmitChunk);
+        client.rec(4.0, 1, Ev::SubmitChunk);
+        client.annotate(4.0, "tmgr", "rate=2");
+        let mut agent = Tracer::new(true);
+        agent.rec(2.0, 0, Ev::TaskExecStart);
+        client.merge(agent);
+        let ts: Vec<f64> = client.events().iter().map(|e| e.t).collect();
+        assert_eq!(ts, vec![0.0, 2.0, 4.0]);
+        assert_eq!(client.events()[1].ev, Ev::TaskExecStart);
+        assert_eq!(client.notes().len(), 1);
+        // merging into a disabled tracer stays a no-op
+        let mut off = Tracer::new(false);
+        let mut on = Tracer::new(true);
+        on.rec(1.0, 0, Ev::TaskDone);
+        off.merge(on);
+        assert!(off.is_empty());
+    }
+
+    #[test]
     fn event_names_unique() {
         use std::collections::HashSet;
         let all = [
@@ -302,6 +344,8 @@ mod tests {
             Ev::TaskDone,
             Ev::TaskFailed,
             Ev::TaskResubmit,
+            Ev::SubmitChunk,
+            Ev::Overlap,
             Ev::MasterReady,
             Ev::WorkerReady,
         ];
