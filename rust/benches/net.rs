@@ -1,0 +1,106 @@
+//! Wire-protocol benchmarks (ISSUE 10): JSON-lines lockstep vs binary
+//! framed + pipelined against a loopback [`DbServer`], plus the striped
+//! store under concurrent writers. Plain `fn main` driver (no criterion
+//! in the image); `rp net-bench` is the gated, digest-checked version.
+
+use std::sync::Arc;
+
+use rp::db::{Db, DbClient, DbServer, TaskRecord};
+use rp::task::TaskState;
+use rp::util::bench::bench;
+
+fn recs(n: u32, pilot: &str) -> Vec<TaskRecord> {
+    (0..n)
+        .map(|i| TaskRecord {
+            uid: format!("task.{i:06}"),
+            index: i,
+            pilot: pilot.into(),
+            state: TaskState::TmgrScheduling,
+        })
+        .collect()
+}
+
+fn main() {
+    println!("== control-plane wire benchmarks ==");
+
+    // per-op round trip: one update_state, awaited, both protocols
+    let db = Arc::new(Db::new());
+    let server = DbServer::start(db.clone()).unwrap();
+    db.insert_tasks("pilot.0000", recs(1, "pilot.0000"));
+
+    let mut json = DbClient::connect_json(server.addr).unwrap();
+    bench("json lockstep update RTT", 10, 2_000, || {
+        json.update_state("task.000000", TaskState::AgentExecuting)
+            .unwrap();
+    });
+
+    let mut bin = DbClient::connect(server.addr).unwrap();
+    assert_eq!(bin.proto(), "binary");
+    bench("binary lockstep update RTT", 10, 2_000, || {
+        bin.update_state("task.000000", TaskState::AgentExecuting)
+            .unwrap();
+    });
+
+    // pipelined: fire-and-forget updates inside the window, barrier per
+    // batch — the agent hot path after PR 10
+    bench("binary pipelined update x256 + barrier", 10, 20, || {
+        for _ in 0..256 {
+            bin.update_state_async("task.000000", TaskState::AgentExecuting)
+                .unwrap();
+        }
+        bin.flush().unwrap();
+    });
+
+    // coalesced: buffered updates flushed as update_bulk frames
+    bench("binary coalesced update x256 + flush", 10, 20, || {
+        for _ in 0..256 {
+            bin.update_state_buffered("task.000000", TaskState::AgentExecuting)
+                .unwrap();
+        }
+        bin.flush().unwrap();
+    });
+
+    // drain what the RTT/pipeline loops queued so the server's FIFO
+    // doesn't grow unboundedly across the remaining benches
+    let _ = bin.drain_updates().unwrap();
+
+    bench("binary insert+pull 1024 over wire", 10, 10, || {
+        let r = recs(1024, "pilot.0001");
+        bin.insert_tasks("pilot.0001", &r).unwrap();
+        let mut got = 0;
+        while got < 1024 {
+            got += bin.pull_tasks("pilot.0001", 512).unwrap().len();
+        }
+    });
+
+    drop(json);
+    drop(bin);
+    server.stop();
+
+    // the striped store itself: 4 writer threads against one Db
+    let db = Arc::new(Db::new());
+    for p in 0..4 {
+        let pilot = format!("pilot.{p:04}");
+        db.insert_tasks(&pilot, recs(1024, &pilot));
+    }
+    let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let writers: Vec<_> = (0..4)
+        .map(|t| {
+            let db = db.clone();
+            let stop = stop.clone();
+            std::thread::spawn(move || {
+                let uid = format!("task.{:06}", t * 7);
+                while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                    db.update_state(&uid, TaskState::AgentExecuting);
+                }
+            })
+        })
+        .collect();
+    bench("striped store drain under 4-writer load", 10, 200, || {
+        while db.drain_updates().is_empty() {}
+    });
+    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    for w in writers {
+        let _ = w.join();
+    }
+}

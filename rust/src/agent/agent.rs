@@ -19,7 +19,7 @@
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
-use crate::db::{Db, TaskRecord};
+use crate::db::{Db, TaskDb, TaskRecord};
 use crate::mesh::{
     spawn, spawn_scoped, Clock, Component, Flow, PubSub, SpawnOpts, WallClock, WorkQueue,
 };
@@ -283,7 +283,7 @@ struct SchedStage<'a> {
     /// client-visible state stream: launches push `AgentExecuting`
     /// through the DB updates channel so session callbacks observe
     /// execution start while submission is still in flight
-    db: &'a Db,
+    db: &'a dyn TaskDb,
     q_done: WorkQueue<Completion>,
     tickets: HashMap<u32, (u32, Allocation, LaunchTicket)>,
     rng: Rng,
@@ -481,7 +481,7 @@ struct StagerOut<'a> {
     tasks: &'a Mutex<Vec<Task>>,
     tracer: &'a Mutex<Tracer>,
     clock: Arc<WallClock>,
-    db: &'a Db,
+    db: &'a dyn TaskDb,
     stager: Stager,
     ledger: &'a SubmitLedger,
     done: u64,
@@ -663,7 +663,7 @@ impl Agent {
     /// them).
     pub fn run_streaming(
         cfg: &AgentConfig,
-        db: &Db,
+        db: &dyn TaskDb,
         store: &DescStore,
         registry: &FunctionRegistry,
         ledger: &SubmitLedger,

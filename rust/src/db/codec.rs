@@ -1,0 +1,694 @@
+//! Binary framed wire protocol for the DB link (the fast path the JSON
+//! lines protocol in [`super::net`] falls back from).
+//!
+//! Frame layout (all integers LEB128 varints unless noted):
+//!
+//! ```text
+//!   +-----------------+----------------------------------------------+
+//!   | varint body_len | body                                         |
+//!   +-----------------+----------+--------+----------------------------+
+//!                     | varint   | u8 tag | payload (tag-specific)     |
+//!                     | corr_id  |        |                            |
+//!                     +----------+--------+----------------------------+
+//! ```
+//!
+//! Strings are varint length + UTF-8 bytes; lists are varint count +
+//! items; task states are single-byte codes (see [`state_code`]). The
+//! `corr_id` correlates pipelined responses with requests: the server
+//! echoes it verbatim, and per-connection FIFO handling means responses
+//! also arrive in request order.
+//!
+//! Negotiation: a client that wants binary sends the 5-byte magic
+//! preamble [`MAGIC`] (`"RPB1\n"`) as its first bytes. A binary-capable
+//! server answers [`MAGIC_ACK`] (`"RPA1\n"`) and the connection switches
+//! to frames. Because the magic ends in `\n`, a JSON-lines-only server
+//! just sees an unparseable request line and answers a JSON error line —
+//! the client detects the non-ack reply, consumes the rest of that line,
+//! and continues on the same connection in JSON mode.
+//!
+//! Encoding appends into caller-owned scratch buffers and decoding
+//! borrows from a reusable scratch `Vec` — no per-message `String`/`Json`
+//! allocation on the hot path beyond the decoded payload itself.
+
+use std::io;
+
+use crate::task::TaskState;
+
+/// Client-side preamble requesting the binary protocol. Newline-terminated
+/// on purpose so JSON-lines servers treat it as one (bad) request line.
+pub const MAGIC: &[u8; 5] = b"RPB1\n";
+/// Server-side acknowledgement: the connection is now binary-framed.
+pub const MAGIC_ACK: &[u8; 5] = b"RPA1\n";
+
+/// Upper bound on a frame body; larger length prefixes are rejected before
+/// any allocation so a corrupt or hostile peer cannot OOM the process.
+pub const MAX_FRAME: usize = 16 << 20;
+
+/// Wire code for a task state (stable across releases; append-only).
+pub fn state_code(s: TaskState) -> u8 {
+    use TaskState::*;
+    match s {
+        New => 0,
+        TmgrScheduling => 1,
+        AgentStagingInput => 2,
+        AgentSchedulingPending => 3,
+        AgentScheduling => 4,
+        AgentExecutingPending => 5,
+        AgentExecuting => 6,
+        AgentStagingOutput => 7,
+        Done => 8,
+        Failed => 9,
+        Canceled => 10,
+    }
+}
+
+/// Inverse of [`state_code`]; `None` for unknown codes (a decode error,
+/// never silently coerced to some default state).
+pub fn state_from_code(c: u8) -> Option<TaskState> {
+    use TaskState::*;
+    Some(match c {
+        0 => New,
+        1 => TmgrScheduling,
+        2 => AgentStagingInput,
+        3 => AgentSchedulingPending,
+        4 => AgentScheduling,
+        5 => AgentExecutingPending,
+        6 => AgentExecuting,
+        7 => AgentStagingOutput,
+        8 => Done,
+        9 => Failed,
+        10 => Canceled,
+        _ => return None,
+    })
+}
+
+// Frame tags. Requests are < 0x80, responses >= 0x80.
+const T_INSERT: u8 = 0x01;
+const T_PULL: u8 = 0x02;
+const T_UPDATE: u8 = 0x03;
+const T_UPDATE_BULK: u8 = 0x04;
+const T_DRAIN: u8 = 0x05;
+const T_PENDING: u8 = 0x06;
+const T_CLOSE_PILOT: u8 = 0x07;
+const T_CLOSE: u8 = 0x08;
+const T_OK: u8 = 0x81;
+const T_TASKS: u8 = 0x82;
+const T_UPDATES: u8 = 0x83;
+const T_ERROR: u8 = 0x84;
+
+/// One protocol message (request or response), minus its corr id.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Frame {
+    /// TaskManager side: bulk insert of (uid, description index) records
+    /// routed to `pilot`.
+    Insert {
+        pilot: String,
+        tasks: Vec<(String, u32)>,
+    },
+    /// Agent side: pull up to `max` records for `pilot`; `block` waits for
+    /// data / close instead of returning an empty batch.
+    Pull {
+        pilot: String,
+        max: u32,
+        block: bool,
+    },
+    /// One state update flowing back.
+    Update { uid: String, state: TaskState },
+    /// Coalesced state updates (what consecutive `Update`s collapse into).
+    UpdateBulk { updates: Vec<(String, TaskState)> },
+    /// Drain queued state updates; `block` waits for at least one (or
+    /// close) instead of returning an empty batch.
+    Drain { block: bool },
+    /// Queue depth for one pilot.
+    Pending { pilot: String },
+    /// End one pilot's record stream.
+    ClosePilot { pilot: String },
+    /// Close the whole store (session teardown).
+    Close,
+    /// Generic success + count.
+    Ok { n: u64 },
+    /// Response to `Pull`.
+    Tasks { tasks: Vec<(String, u32)> },
+    /// Response to `Drain`.
+    Updates { updates: Vec<(String, TaskState)> },
+    /// Request-level failure (the connection itself stays up).
+    Error { msg: String },
+}
+
+#[derive(Debug)]
+pub struct CodecError(pub String);
+
+impl std::fmt::Display for CodecError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "codec: {}", self.0)
+    }
+}
+
+impl std::error::Error for CodecError {}
+
+fn err<T>(msg: impl Into<String>) -> Result<T, CodecError> {
+    Err(CodecError(msg.into()))
+}
+
+/// Append `v` as a LEB128 varint.
+pub fn write_varint(out: &mut Vec<u8>, mut v: u64) {
+    loop {
+        let b = (v & 0x7f) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.push(b);
+            return;
+        }
+        out.push(b | 0x80);
+    }
+}
+
+/// Encoded width of `v` as a varint, in bytes.
+pub fn varint_len(mut v: u64) -> usize {
+    let mut n = 1;
+    while v >= 0x80 {
+        v >>= 7;
+        n += 1;
+    }
+    n
+}
+
+/// Bounds-checked cursor over a decoded frame body.
+struct Cur<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn new(buf: &'a [u8]) -> Cur<'a> {
+        Cur { buf, pos: 0 }
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn u8(&mut self) -> Result<u8, CodecError> {
+        if self.pos >= self.buf.len() {
+            return err("truncated frame (u8)");
+        }
+        let b = self.buf[self.pos];
+        self.pos += 1;
+        Ok(b)
+    }
+
+    fn varint(&mut self) -> Result<u64, CodecError> {
+        let mut v: u64 = 0;
+        let mut shift = 0u32;
+        loop {
+            let b = self.u8()?;
+            if shift >= 63 && b > 1 {
+                return err("varint overflows u64");
+            }
+            v |= u64::from(b & 0x7f) << shift;
+            if b & 0x80 == 0 {
+                return Ok(v);
+            }
+            shift += 7;
+        }
+    }
+
+    fn bytes(&mut self, n: usize) -> Result<&'a [u8], CodecError> {
+        if self.remaining() < n {
+            return err("truncated frame (bytes)");
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn string(&mut self) -> Result<String, CodecError> {
+        let n = self.varint()? as usize;
+        if n > self.remaining() {
+            return err("truncated frame (string length past end)");
+        }
+        match std::str::from_utf8(self.bytes(n)?) {
+            Ok(s) => Ok(s.to_string()),
+            Err(_) => err("string is not UTF-8"),
+        }
+    }
+
+    /// List length guard: every element costs >= 1 byte, so any count
+    /// larger than the remaining body is corrupt (and would otherwise
+    /// pre-allocate unboundedly).
+    fn count(&mut self) -> Result<usize, CodecError> {
+        let n = self.varint()? as usize;
+        if n > self.remaining() {
+            return err("list count exceeds frame size");
+        }
+        Ok(n)
+    }
+
+    fn state(&mut self) -> Result<TaskState, CodecError> {
+        let c = self.u8()?;
+        match state_from_code(c) {
+            Some(s) => Ok(s),
+            None => err(format!("unknown state code {c}")),
+        }
+    }
+
+    fn done(&self) -> Result<(), CodecError> {
+        if self.pos == self.buf.len() {
+            Ok(())
+        } else {
+            err("trailing bytes after frame payload")
+        }
+    }
+}
+
+fn write_str(out: &mut Vec<u8>, s: &str) {
+    write_varint(out, s.len() as u64);
+    out.extend_from_slice(s.as_bytes());
+}
+
+impl Frame {
+    /// Append this frame, length-prefixed, to `out` (a reusable scratch
+    /// buffer — callers `clear()` + reuse it to stay allocation-free).
+    pub fn encode_into(&self, corr: u64, out: &mut Vec<u8>) {
+        // Reserve 4 bytes for the length prefix, encode the body in
+        // place, then shift left if the varint is shorter. A 4-byte
+        // varint covers lengths up to 2^28-1 = 256 MiB > MAX_FRAME.
+        let lp = out.len();
+        out.extend_from_slice(&[0u8; 4]);
+        let body_start = out.len();
+        write_varint(out, corr);
+        match self {
+            Frame::Insert { pilot, tasks } => {
+                out.push(T_INSERT);
+                write_str(out, pilot);
+                write_varint(out, tasks.len() as u64);
+                for (uid, index) in tasks {
+                    write_str(out, uid);
+                    write_varint(out, u64::from(*index));
+                }
+            }
+            Frame::Pull { pilot, max, block } => {
+                out.push(T_PULL);
+                write_str(out, pilot);
+                write_varint(out, u64::from(*max));
+                out.push(u8::from(*block));
+            }
+            Frame::Update { uid, state } => {
+                out.push(T_UPDATE);
+                write_str(out, uid);
+                out.push(state_code(*state));
+            }
+            Frame::UpdateBulk { updates } => {
+                out.push(T_UPDATE_BULK);
+                write_varint(out, updates.len() as u64);
+                for (uid, state) in updates {
+                    write_str(out, uid);
+                    out.push(state_code(*state));
+                }
+            }
+            Frame::Drain { block } => {
+                out.push(T_DRAIN);
+                out.push(u8::from(*block));
+            }
+            Frame::Pending { pilot } => {
+                out.push(T_PENDING);
+                write_str(out, pilot);
+            }
+            Frame::ClosePilot { pilot } => {
+                out.push(T_CLOSE_PILOT);
+                write_str(out, pilot);
+            }
+            Frame::Close => out.push(T_CLOSE),
+            Frame::Ok { n } => {
+                out.push(T_OK);
+                write_varint(out, *n);
+            }
+            Frame::Tasks { tasks } => {
+                out.push(T_TASKS);
+                write_varint(out, tasks.len() as u64);
+                for (uid, index) in tasks {
+                    write_str(out, uid);
+                    write_varint(out, u64::from(*index));
+                }
+            }
+            Frame::Updates { updates } => {
+                out.push(T_UPDATES);
+                write_varint(out, updates.len() as u64);
+                for (uid, state) in updates {
+                    write_str(out, uid);
+                    out.push(state_code(*state));
+                }
+            }
+            Frame::Error { msg } => {
+                out.push(T_ERROR);
+                write_str(out, msg);
+            }
+        }
+        let body_len = out.len() - body_start;
+        debug_assert!(body_len <= MAX_FRAME, "frame exceeds MAX_FRAME; chunk it");
+        let mut lenbuf = Vec::with_capacity(4);
+        write_varint(&mut lenbuf, body_len as u64);
+        let k = lenbuf.len().min(4);
+        out[lp..lp + k].copy_from_slice(&lenbuf[..k]);
+        if k < 4 {
+            out.copy_within(body_start.., lp + k);
+            out.truncate(lp + k + body_len);
+        }
+    }
+
+    /// Decode one frame body (everything after the length prefix).
+    pub fn decode(body: &[u8]) -> Result<(u64, Frame), CodecError> {
+        let mut c = Cur::new(body);
+        let corr = c.varint()?;
+        let tag = c.u8()?;
+        let frame = match tag {
+            T_INSERT => {
+                let pilot = c.string()?;
+                let n = c.count()?;
+                let mut tasks = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let uid = c.string()?;
+                    let index = c.varint()? as u32;
+                    tasks.push((uid, index));
+                }
+                Frame::Insert { pilot, tasks }
+            }
+            T_PULL => Frame::Pull {
+                pilot: c.string()?,
+                max: c.varint()? as u32,
+                block: c.u8()? != 0,
+            },
+            T_UPDATE => Frame::Update {
+                uid: c.string()?,
+                state: c.state()?,
+            },
+            T_UPDATE_BULK => {
+                let n = c.count()?;
+                let mut updates = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let uid = c.string()?;
+                    let state = c.state()?;
+                    updates.push((uid, state));
+                }
+                Frame::UpdateBulk { updates }
+            }
+            T_DRAIN => Frame::Drain {
+                block: c.u8()? != 0,
+            },
+            T_PENDING => Frame::Pending { pilot: c.string()? },
+            T_CLOSE_PILOT => Frame::ClosePilot { pilot: c.string()? },
+            T_CLOSE => Frame::Close,
+            T_OK => Frame::Ok { n: c.varint()? },
+            T_TASKS => {
+                let n = c.count()?;
+                let mut tasks = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let uid = c.string()?;
+                    let index = c.varint()? as u32;
+                    tasks.push((uid, index));
+                }
+                Frame::Tasks { tasks }
+            }
+            T_UPDATES => {
+                let n = c.count()?;
+                let mut updates = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let uid = c.string()?;
+                    let state = c.state()?;
+                    updates.push((uid, state));
+                }
+                Frame::Updates { updates }
+            }
+            T_ERROR => Frame::Error { msg: c.string()? },
+            other => return err(format!("unknown frame tag 0x{other:02x}")),
+        };
+        c.done()?;
+        Ok((corr, frame))
+    }
+
+    /// True for server→client frames.
+    pub fn is_response(&self) -> bool {
+        matches!(
+            self,
+            Frame::Ok { .. } | Frame::Tasks { .. } | Frame::Updates { .. } | Frame::Error { .. }
+        )
+    }
+}
+
+fn to_io(e: CodecError) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, e.to_string())
+}
+
+/// Read one length-prefixed frame. `Ok(None)` is a clean EOF at a frame
+/// boundary (the peer hung up between messages); EOF mid-frame is an
+/// `UnexpectedEof` error. `scratch` is reused across calls so the steady
+/// state does no allocation.
+pub fn read_frame<R: io::Read>(
+    r: &mut R,
+    scratch: &mut Vec<u8>,
+) -> io::Result<Option<(u64, Frame)>> {
+    // Length prefix, byte by byte (callers wrap the stream in a BufReader).
+    let mut len: u64 = 0;
+    let mut shift = 0u32;
+    let mut first = true;
+    loop {
+        let mut b = [0u8; 1];
+        match r.read(&mut b) {
+            Ok(0) => {
+                if first {
+                    return Ok(None);
+                }
+                return Err(io::Error::new(
+                    io::ErrorKind::UnexpectedEof,
+                    "eof inside frame length prefix",
+                ));
+            }
+            Ok(_) => {
+                if shift >= 63 && b[0] > 1 {
+                    return Err(io::Error::new(
+                        io::ErrorKind::InvalidData,
+                        "frame length varint overflows u64",
+                    ));
+                }
+                len |= u64::from(b[0] & 0x7f) << shift;
+                first = false;
+                if b[0] & 0x80 == 0 {
+                    break;
+                }
+                shift += 7;
+            }
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        }
+    }
+    if len as usize > MAX_FRAME {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("frame of {len} bytes exceeds MAX_FRAME ({MAX_FRAME})"),
+        ));
+    }
+    scratch.clear();
+    scratch.resize(len as usize, 0);
+    r.read_exact(scratch)?;
+    Frame::decode(scratch).map(Some).map_err(to_io)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    const ALL_STATES: [TaskState; 11] = [
+        TaskState::New,
+        TaskState::TmgrScheduling,
+        TaskState::AgentStagingInput,
+        TaskState::AgentSchedulingPending,
+        TaskState::AgentScheduling,
+        TaskState::AgentExecutingPending,
+        TaskState::AgentExecuting,
+        TaskState::AgentStagingOutput,
+        TaskState::Done,
+        TaskState::Failed,
+        TaskState::Canceled,
+    ];
+
+    fn rand_string(rng: &mut Rng) -> String {
+        let n = rng.below(24) as usize;
+        (0..n)
+            .map(|_| char::from(b'a' + (rng.below(26) as u8)))
+            .collect()
+    }
+
+    fn rand_state(rng: &mut Rng) -> TaskState {
+        ALL_STATES[rng.below(ALL_STATES.len() as u64) as usize]
+    }
+
+    fn rand_frame(rng: &mut Rng) -> Frame {
+        match rng.below(12) {
+            0 => Frame::Insert {
+                pilot: rand_string(rng),
+                tasks: (0..rng.below(40))
+                    .map(|_| (rand_string(rng), rng.below(1 << 20) as u32))
+                    .collect(),
+            },
+            1 => Frame::Pull {
+                pilot: rand_string(rng),
+                max: rng.below(1 << 16) as u32,
+                block: rng.bool(0.5),
+            },
+            2 => Frame::Update {
+                uid: rand_string(rng),
+                state: rand_state(rng),
+            },
+            3 => Frame::UpdateBulk {
+                updates: (0..rng.below(40))
+                    .map(|_| (rand_string(rng), rand_state(rng)))
+                    .collect(),
+            },
+            4 => Frame::Drain {
+                block: rng.bool(0.5),
+            },
+            5 => Frame::Pending {
+                pilot: rand_string(rng),
+            },
+            6 => Frame::ClosePilot {
+                pilot: rand_string(rng),
+            },
+            7 => Frame::Close,
+            8 => Frame::Ok { n: rng.next_u64() },
+            9 => Frame::Tasks {
+                tasks: (0..rng.below(40))
+                    .map(|_| (rand_string(rng), rng.below(1 << 20) as u32))
+                    .collect(),
+            },
+            10 => Frame::Updates {
+                updates: (0..rng.below(40))
+                    .map(|_| (rand_string(rng), rand_state(rng)))
+                    .collect(),
+            },
+            _ => Frame::Error {
+                msg: rand_string(rng),
+            },
+        }
+    }
+
+    #[test]
+    fn varint_roundtrip() {
+        let mut rng = Rng::new(11);
+        for v in [0u64, 1, 127, 128, 300, u32::MAX as u64, u64::MAX] {
+            let mut buf = Vec::new();
+            write_varint(&mut buf, v);
+            assert_eq!(buf.len(), varint_len(v));
+            let mut c = Cur::new(&buf);
+            assert_eq!(c.varint().unwrap(), v);
+            assert!(c.done().is_ok());
+        }
+        for _ in 0..2000 {
+            let v = rng.next_u64() >> (rng.below(64) as u32);
+            let mut buf = Vec::new();
+            write_varint(&mut buf, v);
+            let mut c = Cur::new(&buf);
+            assert_eq!(c.varint().unwrap(), v);
+        }
+    }
+
+    /// Property test: any frame survives encode→decode, frames concatenate
+    /// cleanly in one stream, and the scratch buffers are reusable.
+    #[test]
+    fn random_frames_roundtrip_through_a_stream() {
+        let mut rng = Rng::new(42);
+        let mut wire = Vec::new();
+        let mut expect = Vec::new();
+        for corr in 0..500u64 {
+            let f = rand_frame(&mut rng);
+            f.encode_into(corr, &mut wire);
+            expect.push(f);
+        }
+        let mut cursor = std::io::Cursor::new(wire);
+        let mut scratch = Vec::new();
+        for (corr, want) in expect.iter().enumerate() {
+            let (got_corr, got) = read_frame(&mut cursor, &mut scratch).unwrap().unwrap();
+            assert_eq!(got_corr, corr as u64);
+            assert_eq!(&got, want);
+        }
+        assert!(read_frame(&mut cursor, &mut scratch).unwrap().is_none());
+    }
+
+    #[test]
+    fn state_codes_roundtrip_and_reject_unknown() {
+        for s in ALL_STATES {
+            assert_eq!(state_from_code(state_code(s)), Some(s));
+        }
+        assert_eq!(state_from_code(11), None);
+        assert_eq!(state_from_code(255), None);
+    }
+
+    #[test]
+    fn truncated_frames_are_rejected() {
+        let mut wire = Vec::new();
+        Frame::Update {
+            uid: "task.000001".into(),
+            state: TaskState::Done,
+        }
+        .encode_into(7, &mut wire);
+        let mut scratch = Vec::new();
+        // every strict prefix of the frame fails with UnexpectedEof (or
+        // clean EOF when nothing at all was sent)
+        for cut in 0..wire.len() {
+            let mut cursor = std::io::Cursor::new(&wire[..cut]);
+            match read_frame(&mut cursor, &mut scratch) {
+                Ok(None) => assert_eq!(cut, 0, "clean EOF only at a frame boundary"),
+                Ok(Some(_)) => panic!("prefix of {cut} bytes must not decode"),
+                Err(e) => assert_eq!(e.kind(), std::io::ErrorKind::UnexpectedEof),
+            }
+        }
+    }
+
+    #[test]
+    fn oversized_length_prefix_is_rejected_before_allocation() {
+        let mut wire = Vec::new();
+        write_varint(&mut wire, (MAX_FRAME + 1) as u64);
+        let mut cursor = std::io::Cursor::new(wire);
+        let err = read_frame(&mut cursor, &mut Vec::new()).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+    }
+
+    #[test]
+    fn garbage_bodies_are_rejected() {
+        // unknown tag
+        assert!(Frame::decode(&[0x00, 0x7f]).is_err());
+        // unknown state code inside an update
+        let mut body = vec![0x00, T_UPDATE];
+        write_str(&mut body, "t0");
+        body.push(42);
+        assert!(Frame::decode(&body).is_err());
+        // string length pointing past the end of the body
+        let body = vec![0x00, T_PENDING, 0x50, b'a'];
+        assert!(Frame::decode(&body).is_err());
+        // list count exceeding the frame size (pre-allocation guard)
+        let mut body = vec![0x00, T_UPDATE_BULK];
+        write_varint(&mut body, 1_000_000);
+        assert!(Frame::decode(&body).is_err());
+        // trailing bytes after a valid payload
+        let mut wire = Vec::new();
+        Frame::Close.encode_into(1, &mut wire);
+        let mut body = wire[1..].to_vec(); // strip the 1-byte length prefix
+        body.push(0xee);
+        assert!(Frame::decode(&body).is_err());
+        // non-UTF-8 string
+        let mut body = vec![0x00, T_PENDING];
+        write_varint(&mut body, 2);
+        body.extend_from_slice(&[0xff, 0xfe]);
+        assert!(Frame::decode(&body).is_err());
+    }
+
+    #[test]
+    fn fuzzed_bodies_never_panic() {
+        let mut rng = Rng::new(9);
+        for _ in 0..5000 {
+            let n = rng.below(64) as usize;
+            let body: Vec<u8> = (0..n).map(|_| rng.next_u64() as u8).collect();
+            let _ = Frame::decode(&body); // must not panic; Err is fine
+        }
+    }
+}

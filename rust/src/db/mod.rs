@@ -6,15 +6,46 @@
 //! TaskManager, bulk pulls by the Agent (Fig. 8 "DB Bridge Pulls"), state
 //! updates flowing back. Thread-safe; usable in-process (real mode) and as
 //! a latency-modeled store in DES mode.
+//!
+//! Concurrency layout: the store is **lock-striped**. Pilot queues live in
+//! [`DB_STRIPES`] pilot-keyed partitions (FNV-hashed), each with its own
+//! mutex + condvar, so per-pilot agent engines pulling concurrently stop
+//! serializing on one global lock; the uid→record map is sharded the same
+//! way. The updates channel is deliberately NOT striped: it stays a single
+//! FIFO behind one mutex, because client-side callbacks (and the fault
+//! replay determinism gate) depend on observing state transitions in the
+//! exact order they were pushed.
 
+pub mod codec;
 pub mod net;
+pub mod remote;
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::sync::{Condvar, Mutex};
 
 pub use net::{DbClient, DbServer};
+pub use remote::RemoteDb;
 
 use crate::task::TaskState;
+
+/// Number of pilot-keyed partitions (queues and the uid→record shards).
+/// A small power of two: pilots per session are counted in single digits
+/// to low tens, and the point is decorrelating their locks, not hashing
+/// millions of keys.
+pub const DB_STRIPES: usize = 16;
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+fn stripe_of(key: &str) -> usize {
+    (fnv1a(key.as_bytes()) % DB_STRIPES as u64) as usize
+}
 
 /// A task record as stored in the DB (description index + routing info —
 /// the full description lives with the TaskManager; the DB carries what the
@@ -25,6 +56,35 @@ pub struct TaskRecord {
     pub index: u32,
     pub pilot: String,
     pub state: TaskState,
+}
+
+/// What every store the control plane can talk to provides: the in-process
+/// [`Db`] and the network-backed [`RemoteDb`] both implement this, so the
+/// session/tmgr/agent wiring is deployment-agnostic (§III-A: local vs
+/// distributed DB placement).
+pub trait TaskDb: Send + Sync {
+    /// TaskManager side: insert a bulk of task records routed to a pilot.
+    fn insert_tasks(&self, pilot: &str, records: Vec<TaskRecord>);
+    /// Agent side: pull up to `max` tasks for `pilot`. Non-blocking.
+    fn pull_tasks(&self, pilot: &str, max: usize) -> Vec<TaskRecord>;
+    /// Blocking pull: waits for data, pilot close, or store close (an
+    /// empty batch means the stream ended).
+    fn pull_tasks_blocking(&self, pilot: &str, max: usize) -> Vec<TaskRecord>;
+    /// Agent side: push one task state update back.
+    fn update_state(&self, uid: &str, state: TaskState);
+    /// Bulk state updates: one lock + one wakeup for a whole chunk.
+    fn update_states_bulk(&self, updates: Vec<(String, TaskState)>);
+    /// TaskManager side: drain pending state updates. Non-blocking.
+    fn drain_updates(&self) -> Vec<(String, TaskState)>;
+    /// Blocking drain: waits for at least one update or close (an empty
+    /// result means "closed and fully drained").
+    fn drain_updates_blocking(&self) -> Vec<(String, TaskState)>;
+    /// Number of tasks queued for a pilot.
+    fn pending(&self, pilot: &str) -> usize;
+    /// Mark one pilot's record stream as ended.
+    fn close_pilot(&self, pilot: &str);
+    /// Session teardown: wake all blocked pullers and drainers.
+    fn close(&self);
 }
 
 #[derive(Default)]
@@ -38,19 +98,36 @@ struct PilotQueue {
 }
 
 #[derive(Default)]
-struct Inner {
-    /// per-pilot pending queues (tasks scheduled to that pilot's agent)
+struct StripeInner {
+    /// pending queues for the pilots hashed to this stripe
     queues: Vec<PilotQueue>,
-    /// state updates flowing back to the TaskManager
-    updates: VecDeque<(String, TaskState)>,
+    /// mirror of the store-wide close flag (kept per stripe so pullers
+    /// never have to take a second lock to observe teardown)
+    closed: bool,
+}
+
+#[derive(Default)]
+struct Stripe {
+    inner: Mutex<StripeInner>,
+    cv: Condvar,
+}
+
+#[derive(Default)]
+struct UpdatesInner {
+    /// state updates flowing back to the TaskManager — one global FIFO
+    q: VecDeque<(String, TaskState)>,
     closed: bool,
 }
 
 /// The DB service. In real mode, TaskManager and Agent threads share it;
 /// in DES mode the harness charges a modeled pull latency around calls.
 pub struct Db {
-    inner: Mutex<Inner>,
-    cv: Condvar,
+    stripes: Vec<Stripe>,
+    /// last-known record per uid, sharded by uid hash (insert writes it,
+    /// state updates patch it) — concurrent engines touch disjoint shards
+    records: Vec<Mutex<HashMap<String, TaskRecord>>>,
+    updates: Mutex<UpdatesInner>,
+    updates_cv: Condvar,
 }
 
 impl Default for Db {
@@ -62,12 +139,14 @@ impl Default for Db {
 impl Db {
     pub fn new() -> Db {
         Db {
-            inner: Mutex::new(Inner::default()),
-            cv: Condvar::new(),
+            stripes: (0..DB_STRIPES).map(|_| Stripe::default()).collect(),
+            records: (0..DB_STRIPES).map(|_| Mutex::new(HashMap::new())).collect(),
+            updates: Mutex::new(UpdatesInner::default()),
+            updates_cv: Condvar::new(),
         }
     }
 
-    fn queue_idx(inner: &mut Inner, pilot: &str) -> usize {
+    fn queue_idx(inner: &mut StripeInner, pilot: &str) -> usize {
         if let Some(i) = inner.queues.iter().position(|pq| pq.pilot == pilot) {
             i
         } else {
@@ -81,16 +160,34 @@ impl Db {
 
     /// TaskManager side: insert a bulk of task records routed to a pilot.
     pub fn insert_tasks(&self, pilot: &str, records: Vec<TaskRecord>) {
-        let mut inner = self.inner.lock().unwrap();
+        // Mirror into the uid→record shards first (grouped, one lock per
+        // touched shard), then enqueue — a puller that wakes on the queue
+        // insert can already look every record up.
+        let mut by_shard: Vec<Vec<TaskRecord>> = (0..DB_STRIPES).map(|_| Vec::new()).collect();
+        for r in &records {
+            by_shard[stripe_of(&r.uid)].push(r.clone());
+        }
+        for (shard, recs) in by_shard.into_iter().enumerate() {
+            if recs.is_empty() {
+                continue;
+            }
+            let mut map = self.records[shard].lock().unwrap();
+            for r in recs {
+                map.insert(r.uid.clone(), r);
+            }
+        }
+        let stripe = &self.stripes[stripe_of(pilot)];
+        let mut inner = stripe.inner.lock().unwrap();
         let i = Self::queue_idx(&mut inner, pilot);
         inner.queues[i].q.extend(records);
-        self.cv.notify_all();
+        stripe.cv.notify_all();
     }
 
     /// Agent side: pull up to `max` tasks for `pilot` (bulk pull — RP's
     /// agent pulls "individually or in bulk", §IV-A). Non-blocking.
     pub fn pull_tasks(&self, pilot: &str, max: usize) -> Vec<TaskRecord> {
-        let mut inner = self.inner.lock().unwrap();
+        let stripe = &self.stripes[stripe_of(pilot)];
+        let mut inner = stripe.inner.lock().unwrap();
         let i = Self::queue_idx(&mut inner, pilot);
         let q = &mut inner.queues[i].q;
         let n = max.min(q.len());
@@ -101,7 +198,8 @@ impl Db {
     /// available, the pilot's stream is marked ended ([`Db::close_pilot`]),
     /// or the DB is closed. Used by the real-mode agent's DB bridge.
     pub fn pull_tasks_blocking(&self, pilot: &str, max: usize) -> Vec<TaskRecord> {
-        let mut inner = self.inner.lock().unwrap();
+        let stripe = &self.stripes[stripe_of(pilot)];
+        let mut inner = stripe.inner.lock().unwrap();
         loop {
             let i = Self::queue_idx(&mut inner, pilot);
             if !inner.queues[i].q.is_empty() {
@@ -112,15 +210,18 @@ impl Db {
             if inner.closed || inner.queues[i].closed {
                 return Vec::new();
             }
-            inner = self.cv.wait(inner).unwrap();
+            inner = stripe.cv.wait(inner).unwrap();
         }
     }
 
     /// Agent side: push a task state update back.
     pub fn update_state(&self, uid: &str, state: TaskState) {
-        let mut inner = self.inner.lock().unwrap();
-        inner.updates.push_back((uid.to_string(), state));
-        self.cv.notify_all();
+        if let Some(rec) = self.records[stripe_of(uid)].lock().unwrap().get_mut(uid) {
+            rec.state = state;
+        }
+        let mut inner = self.updates.lock().unwrap();
+        inner.q.push_back((uid.to_string(), state));
+        self.updates_cv.notify_all();
     }
 
     /// Bulk state updates: one lock + one wakeup for a whole chunk. The
@@ -131,15 +232,33 @@ impl Db {
         if updates.is_empty() {
             return;
         }
-        let mut inner = self.inner.lock().unwrap();
-        inner.updates.extend(updates);
-        self.cv.notify_all();
+        // Patch the record shards grouped by shard (one lock each) …
+        let mut by_shard: Vec<Vec<usize>> = (0..DB_STRIPES).map(|_| Vec::new()).collect();
+        for (k, (uid, _)) in updates.iter().enumerate() {
+            by_shard[stripe_of(uid)].push(k);
+        }
+        for (shard, idxs) in by_shard.into_iter().enumerate() {
+            if idxs.is_empty() {
+                continue;
+            }
+            let mut map = self.records[shard].lock().unwrap();
+            for k in idxs {
+                let (uid, state) = &updates[k];
+                if let Some(rec) = map.get_mut(uid) {
+                    rec.state = *state;
+                }
+            }
+        }
+        // … then append the whole chunk to the single FIFO atomically.
+        let mut inner = self.updates.lock().unwrap();
+        inner.q.extend(updates);
+        self.updates_cv.notify_all();
     }
 
     /// TaskManager side: drain pending state updates.
     pub fn drain_updates(&self) -> Vec<(String, TaskState)> {
-        let mut inner = self.inner.lock().unwrap();
-        inner.updates.drain(..).collect()
+        let mut inner = self.updates.lock().unwrap();
+        inner.q.drain(..).collect()
     }
 
     /// TaskManager side: blocking drain — waits until at least one update
@@ -147,21 +266,27 @@ impl Db {
     /// an empty result means "closed and fully drained"). Drives the
     /// streaming session's state-sync thread.
     pub fn drain_updates_blocking(&self) -> Vec<(String, TaskState)> {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = self.updates.lock().unwrap();
         loop {
-            if !inner.updates.is_empty() {
-                return inner.updates.drain(..).collect();
+            if !inner.q.is_empty() {
+                return inner.q.drain(..).collect();
             }
             if inner.closed {
                 return Vec::new();
             }
-            inner = self.cv.wait(inner).unwrap();
+            inner = self.updates_cv.wait(inner).unwrap();
         }
+    }
+
+    /// Last-known record for a uid (as inserted, patched by state updates).
+    pub fn lookup(&self, uid: &str) -> Option<TaskRecord> {
+        self.records[stripe_of(uid)].lock().unwrap().get(uid).cloned()
     }
 
     /// Number of tasks queued for a pilot.
     pub fn pending(&self, pilot: &str) -> usize {
-        let mut inner = self.inner.lock().unwrap();
+        let stripe = &self.stripes[stripe_of(pilot)];
+        let mut inner = stripe.inner.lock().unwrap();
         let i = Self::queue_idx(&mut inner, pilot);
         inner.queues[i].q.len()
     }
@@ -170,16 +295,54 @@ impl Db {
     /// what is queued, then get an empty batch instead of waiting. Other
     /// pilots' streams (and the updates channel) are unaffected.
     pub fn close_pilot(&self, pilot: &str) {
-        let mut inner = self.inner.lock().unwrap();
+        let stripe = &self.stripes[stripe_of(pilot)];
+        let mut inner = stripe.inner.lock().unwrap();
         let i = Self::queue_idx(&mut inner, pilot);
         inner.queues[i].closed = true;
-        self.cv.notify_all();
+        stripe.cv.notify_all();
     }
 
     /// Session teardown: wake all blocked pullers.
     pub fn close(&self) {
-        self.inner.lock().unwrap().closed = true;
-        self.cv.notify_all();
+        for stripe in &self.stripes {
+            stripe.inner.lock().unwrap().closed = true;
+            stripe.cv.notify_all();
+        }
+        self.updates.lock().unwrap().closed = true;
+        self.updates_cv.notify_all();
+    }
+}
+
+impl TaskDb for Db {
+    fn insert_tasks(&self, pilot: &str, records: Vec<TaskRecord>) {
+        Db::insert_tasks(self, pilot, records)
+    }
+    fn pull_tasks(&self, pilot: &str, max: usize) -> Vec<TaskRecord> {
+        Db::pull_tasks(self, pilot, max)
+    }
+    fn pull_tasks_blocking(&self, pilot: &str, max: usize) -> Vec<TaskRecord> {
+        Db::pull_tasks_blocking(self, pilot, max)
+    }
+    fn update_state(&self, uid: &str, state: TaskState) {
+        Db::update_state(self, uid, state)
+    }
+    fn update_states_bulk(&self, updates: Vec<(String, TaskState)>) {
+        Db::update_states_bulk(self, updates)
+    }
+    fn drain_updates(&self) -> Vec<(String, TaskState)> {
+        Db::drain_updates(self)
+    }
+    fn drain_updates_blocking(&self) -> Vec<(String, TaskState)> {
+        Db::drain_updates_blocking(self)
+    }
+    fn pending(&self, pilot: &str) -> usize {
+        Db::pending(self, pilot)
+    }
+    fn close_pilot(&self, pilot: &str) {
+        Db::close_pilot(self, pilot)
+    }
+    fn close(&self) {
+        Db::close(self)
     }
 }
 
@@ -287,5 +450,53 @@ mod tests {
         db.close();
         assert_eq!(db.drain_updates_blocking().len(), 1);
         assert!(db.drain_updates_blocking().is_empty());
+    }
+
+    #[test]
+    fn lookup_tracks_insert_and_updates() {
+        let db = Db::new();
+        db.insert_tasks("pilot.0000", vec![rec("t0", 0), rec("t1", 1)]);
+        assert_eq!(db.lookup("t0").unwrap().state, TaskState::TmgrScheduling);
+        db.update_state("t0", TaskState::AgentExecuting);
+        db.update_states_bulk(vec![("t1".into(), TaskState::Done)]);
+        assert_eq!(db.lookup("t0").unwrap().state, TaskState::AgentExecuting);
+        assert_eq!(db.lookup("t1").unwrap().state, TaskState::Done);
+        assert_eq!(db.lookup("t1").unwrap().index, 1);
+        assert!(db.lookup("nope").is_none());
+    }
+
+    /// The striped store must keep the updates channel a single global
+    /// FIFO: per-producer order is preserved and nothing is lost, even
+    /// with pilots hashing to different stripes.
+    #[test]
+    fn striped_store_keeps_one_update_fifo() {
+        let db = Arc::new(Db::new());
+        let mut handles = Vec::new();
+        for p in 0..4u32 {
+            let db = db.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..500u32 {
+                    db.update_state(&format!("p{p}.t{i}"), TaskState::Done);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let ups = db.drain_updates();
+        assert_eq!(ups.len(), 2000);
+        // per-producer subsequences arrive in send order
+        for p in 0..4u32 {
+            let prefix = format!("p{p}.");
+            let seq: Vec<&str> = ups
+                .iter()
+                .filter(|(uid, _)| uid.starts_with(&prefix))
+                .map(|(uid, _)| uid.as_str())
+                .collect();
+            assert_eq!(seq.len(), 500);
+            for (i, uid) in seq.iter().enumerate() {
+                assert_eq!(*uid, format!("p{p}.t{i}"));
+            }
+        }
     }
 }

@@ -4,34 +4,54 @@
 //! TaskManager locally, and distribute the DB and … Agent[s] on remote
 //! HPC infrastructures").
 //!
-//! Wire protocol: one JSON object per line (requests and responses), over
-//! plain TCP — simple, debuggable, and sufficient for the bulk-pull
-//! access pattern the measured path uses.
+//! Two wire protocols over plain TCP, negotiated per connection:
+//!
+//! **Binary framed** (the fast path, see [`super::codec`]): the client
+//! opens with the 5-byte magic `"RPB1\n"`; a binary-capable server
+//! answers `"RPA1\n"` and both sides switch to length-prefixed frames
+//! with correlation ids. The client pipelines: a background reader thread
+//! matches responses to requests, so up to `window` requests can be in
+//! flight, and consecutive state updates coalesce into `update_bulk`
+//! frames instead of paying one RTT each.
+//!
+//! **JSON lines** (the fallback, kept for debuggability): one JSON object
+//! per line, strict request→response lockstep. A JSON-only server replies
+//! to the magic preamble with an error *line*, which the client detects
+//! and falls back on the same connection:
 //!
 //!   {"op":"insert","pilot":P,"tasks":[{"uid":U,"index":I},…]} → {"ok":n}
-//!   {"op":"pull","pilot":P,"max":N}                           → {"tasks":[…]}
+//!   {"op":"pull","pilot":P,"max":N,"block":0|1}               → {"tasks":[…]}
 //!   {"op":"update","uid":U,"state":S}                         → {"ok":1}
-//!   {"op":"drain"}                                            → {"updates":[[U,S],…]}
+//!   {"op":"update_bulk","updates":[[U,S],…]}                  → {"ok":n}
+//!   {"op":"drain","block":0|1}                                → {"updates":[[U,S],…]}
 //!   {"op":"pending","pilot":P}                                → {"pending":n}
+//!   {"op":"close_pilot","pilot":P}                            → {"ok":1}
+//!   {"op":"close"}                                            → {"ok":1}
 
-use std::io::{BufRead, BufReader, Write};
-use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
 
 use crate::resilience::RetryPolicy;
 use crate::task::TaskState;
 use crate::util::json::Json;
 
+use super::codec::{self, Frame};
 use super::{Db, TaskRecord};
 
 fn state_name(s: TaskState) -> &'static str {
     s.name()
 }
 
-fn state_parse(s: &str) -> TaskState {
+/// Parse a state name; `None` for unknown strings. This is a decode
+/// error surfaced to the caller — never silently coerced to some default
+/// state (an unknown name used to map to `Canceled`, corrupting task
+/// state on any protocol skew).
+fn state_parse(s: &str) -> Option<TaskState> {
     use TaskState::*;
-    match s {
+    Some(match s {
         "NEW" => New,
         "TMGR_SCHEDULING" => TmgrScheduling,
         "AGENT_STAGING_INPUT" => AgentStagingInput,
@@ -42,47 +62,79 @@ fn state_parse(s: &str) -> TaskState {
         "AGENT_STAGING_OUTPUT" => AgentStagingOutput,
         "DONE" => Done,
         "FAILED" => Failed,
-        _ => Canceled,
-    }
+        "CANCELED" => Canceled,
+        _ => return None,
+    })
 }
 
-/// The server: wraps a shared `Db`, one thread per connection.
+fn other_err(msg: impl Into<String>) -> std::io::Error {
+    std::io::Error::new(std::io::ErrorKind::Other, msg.into())
+}
+
+fn data_err(msg: impl Into<String>) -> std::io::Error {
+    std::io::Error::new(std::io::ErrorKind::InvalidData, msg.into())
+}
+
+// ---------------------------------------------------------------------------
+// Server
+// ---------------------------------------------------------------------------
+
+#[derive(Default)]
+struct NetStats {
+    accepted: AtomicU64,
+    active: AtomicU64,
+    dropped: AtomicU64,
+    decode_errors: AtomicU64,
+}
+
+/// The server: wraps a shared `Db`, one thread per connection. The accept
+/// loop blocks in `accept()` (no sleep poll); `stop()` wakes it with a
+/// connect-to-self.
 pub struct DbServer {
     pub addr: SocketAddr,
     db: Arc<Db>,
-    shutdown: Arc<std::sync::atomic::AtomicBool>,
-    dropped: Arc<AtomicU64>,
+    shutdown: Arc<AtomicBool>,
+    stats: Arc<NetStats>,
 }
 
 impl DbServer {
-    /// Bind to 127.0.0.1:0 (ephemeral port) and start serving.
+    /// Bind to 127.0.0.1:0 (ephemeral port) and start serving, with
+    /// binary-protocol negotiation enabled.
     pub fn start(db: Arc<Db>) -> std::io::Result<DbServer> {
+        Self::start_inner(db, true)
+    }
+
+    /// Like [`DbServer::start`] but JSON-lines only: binary preambles get
+    /// a JSON error line, exercising the client's negotiation fallback.
+    pub fn start_json_only(db: Arc<Db>) -> std::io::Result<DbServer> {
+        Self::start_inner(db, false)
+    }
+
+    fn start_inner(db: Arc<Db>, binary: bool) -> std::io::Result<DbServer> {
         let listener = TcpListener::bind("127.0.0.1:0")?;
         let addr = listener.local_addr()?;
-        let shutdown = Arc::new(std::sync::atomic::AtomicBool::new(false));
-        let dropped = Arc::new(AtomicU64::new(0));
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let stats = Arc::new(NetStats::default());
         let db2 = db.clone();
         let stop = shutdown.clone();
-        let drops = dropped.clone();
-        std::thread::spawn(move || {
-            listener.set_nonblocking(true).ok();
-            loop {
-                if stop.load(Ordering::Relaxed) {
-                    break;
+        let stats2 = stats.clone();
+        std::thread::spawn(move || loop {
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    if stop.load(Ordering::Relaxed) {
+                        break; // the stop() wakeup dial (or a late client)
+                    }
+                    stats2.accepted.fetch_add(1, Ordering::Relaxed);
+                    stats2.active.fetch_add(1, Ordering::Relaxed);
+                    let db = db2.clone();
+                    let stats = stats2.clone();
+                    std::thread::spawn(move || serve_conn(stream, db, stats, binary));
                 }
-                match listener.accept() {
-                    Ok((stream, _)) => {
-                        let db = db2.clone();
-                        let drops = drops.clone();
-                        std::thread::spawn(move || serve_conn(stream, db, drops));
-                    }
-                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                        std::thread::sleep(std::time::Duration::from_millis(5));
-                    }
-                    Err(e) => {
+                Err(e) => {
+                    if !stop.load(Ordering::Relaxed) {
                         eprintln!("db server: accept failed, listener closing: {e}");
-                        break;
                     }
+                    break;
                 }
             }
         });
@@ -90,38 +142,187 @@ impl DbServer {
             addr,
             db,
             shutdown,
-            dropped,
+            stats,
         })
+    }
+
+    /// Connections accepted over the server's lifetime (tracer food).
+    pub fn accepted_connections(&self) -> u64 {
+        self.stats.accepted.load(Ordering::Relaxed)
+    }
+
+    /// Connections currently being served.
+    pub fn active_connections(&self) -> u64 {
+        self.stats.active.load(Ordering::Relaxed)
     }
 
     /// Connections that ended on an I/O error (as opposed to a clean EOF).
     /// Exposed so operators / tests can distinguish "client went away
     /// mid-request" from normal session teardown.
     pub fn dropped_connections(&self) -> u64 {
-        self.dropped.load(Ordering::Relaxed)
+        self.stats.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Requests rejected because they failed to decode (bad frame, unknown
+    /// state name, …).
+    pub fn decode_errors(&self) -> u64 {
+        self.stats.decode_errors.load(Ordering::Relaxed)
     }
 
     pub fn stop(&self) {
         self.shutdown.store(true, Ordering::Relaxed);
+        // Wake the blocking accept; the loop re-checks the flag and exits.
+        let _ = TcpStream::connect(self.addr);
         self.db.close();
+    }
+}
+
+/// Per-connection decode-error bookkeeping: count every occurrence, log
+/// only the first (a misbehaving peer would otherwise flood the log).
+struct ConnCtx {
+    stats: Arc<NetStats>,
+    peer: String,
+    logged_decode: bool,
+}
+
+impl ConnCtx {
+    fn decode_error(&mut self, msg: &str) {
+        self.stats.decode_errors.fetch_add(1, Ordering::Relaxed);
+        if !self.logged_decode {
+            eprintln!(
+                "db server: decode error from {}: {msg} (further decode errors on this \
+                 connection are counted, not logged)",
+                self.peer
+            );
+            self.logged_decode = true;
+        }
     }
 }
 
 /// Per-connection wrapper: the inner loop surfaces I/O failures as
 /// `io::Error` instead of silently swallowing them; this layer counts the
 /// drop and logs it exactly once per connection.
-fn serve_conn(stream: TcpStream, db: Arc<Db>, dropped: Arc<AtomicU64>) {
+fn serve_conn(stream: TcpStream, db: Arc<Db>, stats: Arc<NetStats>, binary: bool) {
     let peer = stream
         .peer_addr()
         .map(|a| a.to_string())
         .unwrap_or_else(|_| "<unknown>".into());
-    if let Err(e) = serve_conn_inner(stream, &db) {
-        dropped.fetch_add(1, Ordering::Relaxed);
+    let mut ctx = ConnCtx {
+        stats: stats.clone(),
+        peer: peer.clone(),
+        logged_decode: false,
+    };
+    if let Err(e) = serve_sniffed(stream, &db, &mut ctx, binary) {
+        if e.kind() == std::io::ErrorKind::InvalidData {
+            ctx.decode_error(&e.to_string());
+        }
+        stats.dropped.fetch_add(1, Ordering::Relaxed);
         eprintln!("db server: connection from {peer} dropped: {e}");
+    }
+    stats.active.fetch_sub(1, Ordering::Relaxed);
+}
+
+/// Protocol sniff: the binary magic starts with `'R'`, a JSON request
+/// line with `'{'` — peek one byte and dispatch without consuming it.
+fn serve_sniffed(
+    stream: TcpStream,
+    db: &Db,
+    ctx: &mut ConnCtx,
+    binary: bool,
+) -> std::io::Result<()> {
+    let mut first = [0u8; 1];
+    if stream.peek(&mut first)? == 0 {
+        return Ok(()); // connected and hung up without a byte
+    }
+    if binary && first[0] == codec::MAGIC[0] {
+        serve_binary(stream, db)
+    } else {
+        serve_json(stream, db, ctx)
     }
 }
 
-fn serve_conn_inner(stream: TcpStream, db: &Db) -> std::io::Result<()> {
+fn serve_binary(stream: TcpStream, db: &Db) -> std::io::Result<()> {
+    let mut writer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+    let mut magic = [0u8; 5];
+    reader.read_exact(&mut magic)?;
+    if &magic != codec::MAGIC {
+        return Err(data_err("bad binary preamble"));
+    }
+    writer.write_all(codec::MAGIC_ACK)?;
+    let mut scratch = Vec::new();
+    let mut enc = Vec::new();
+    // Strict per-connection FIFO: requests are handled (and answered) in
+    // arrival order, which is what makes client-side pipelining safe.
+    while let Some((corr, frame)) = codec::read_frame(&mut reader, &mut scratch)? {
+        let resp = handle_frame(frame, db);
+        enc.clear();
+        resp.encode_into(corr, &mut enc);
+        writer.write_all(&enc)?;
+    }
+    Ok(()) // clean EOF at a frame boundary
+}
+
+fn handle_frame(frame: Frame, db: &Db) -> Frame {
+    match frame {
+        Frame::Insert { pilot, tasks } => {
+            let n = tasks.len() as u64;
+            let recs = tasks
+                .into_iter()
+                .map(|(uid, index)| TaskRecord {
+                    uid,
+                    index,
+                    pilot: pilot.clone(),
+                    state: TaskState::TmgrScheduling,
+                })
+                .collect();
+            db.insert_tasks(&pilot, recs);
+            Frame::Ok { n }
+        }
+        Frame::Pull { pilot, max, block } => {
+            let recs = if block {
+                db.pull_tasks_blocking(&pilot, max as usize)
+            } else {
+                db.pull_tasks(&pilot, max as usize)
+            };
+            Frame::Tasks {
+                tasks: recs.into_iter().map(|r| (r.uid, r.index)).collect(),
+            }
+        }
+        Frame::Update { uid, state } => {
+            db.update_state(&uid, state);
+            Frame::Ok { n: 1 }
+        }
+        Frame::UpdateBulk { updates } => {
+            let n = updates.len() as u64;
+            db.update_states_bulk(updates);
+            Frame::Ok { n }
+        }
+        Frame::Drain { block } => Frame::Updates {
+            updates: if block {
+                db.drain_updates_blocking()
+            } else {
+                db.drain_updates()
+            },
+        },
+        Frame::Pending { pilot } => Frame::Ok {
+            n: db.pending(&pilot) as u64,
+        },
+        Frame::ClosePilot { pilot } => {
+            db.close_pilot(&pilot);
+            Frame::Ok { n: 1 }
+        }
+        Frame::Close => {
+            db.close();
+            Frame::Ok { n: 1 }
+        }
+        _ => Frame::Error {
+            msg: "response frame sent as request".into(),
+        },
+    }
+}
+
+fn serve_json(stream: TcpStream, db: &Db, ctx: &mut ConnCtx) -> std::io::Result<()> {
     let mut writer = stream.try_clone()?;
     let reader = BufReader::new(stream);
     for line in reader.lines() {
@@ -130,7 +331,7 @@ fn serve_conn_inner(stream: TcpStream, db: &Db) -> std::io::Result<()> {
             continue;
         }
         let resp = match Json::parse(&line) {
-            Ok(req) => handle(&req, db),
+            Ok(req) => handle(&req, db, ctx),
             Err(e) => Json::obj(vec![("error", Json::Str(format!("bad request: {e}")))]),
         };
         writeln!(writer, "{resp}")?;
@@ -138,7 +339,7 @@ fn serve_conn_inner(stream: TcpStream, db: &Db) -> std::io::Result<()> {
     Ok(()) // clean EOF: the client closed its end
 }
 
-fn handle(req: &Json, db: &Db) -> Json {
+fn handle(req: &Json, db: &Db, ctx: &mut ConnCtx) -> Json {
     match req.str_or("op", "") {
         "insert" => {
             let pilot = req.str_or("pilot", "");
@@ -163,7 +364,11 @@ fn handle(req: &Json, db: &Db) -> Json {
         "pull" => {
             let pilot = req.str_or("pilot", "");
             let max = req.u64_or("max", 1024) as usize;
-            let recs = db.pull_tasks(pilot, max);
+            let recs = if req.u64_or("block", 0) == 1 {
+                db.pull_tasks_blocking(pilot, max)
+            } else {
+                db.pull_tasks(pilot, max)
+            };
             Json::obj(vec![(
                 "tasks",
                 Json::arr(recs.into_iter().map(|r| {
@@ -175,11 +380,61 @@ fn handle(req: &Json, db: &Db) -> Json {
             )])
         }
         "update" => {
-            db.update_state(req.str_or("uid", ""), state_parse(req.str_or("state", "")));
-            Json::obj(vec![("ok", Json::Num(1.0))])
+            let name = req.str_or("state", "");
+            match state_parse(name) {
+                Some(state) => {
+                    db.update_state(req.str_or("uid", ""), state);
+                    Json::obj(vec![("ok", Json::Num(1.0))])
+                }
+                None => {
+                    let msg = format!("unknown state '{name}'");
+                    ctx.decode_error(&msg);
+                    Json::obj(vec![("error", Json::Str(msg))])
+                }
+            }
+        }
+        "update_bulk" => {
+            let mut ups: Vec<(String, TaskState)> = Vec::new();
+            let mut bad: Option<String> = None;
+            if let Some(arr) = req.get("updates").as_arr() {
+                for u in arr {
+                    let uid = u
+                        .as_arr()
+                        .and_then(|p| p.first())
+                        .and_then(|x| x.as_str())
+                        .unwrap_or("");
+                    let name = u
+                        .as_arr()
+                        .and_then(|p| p.get(1))
+                        .and_then(|x| x.as_str())
+                        .unwrap_or("");
+                    match state_parse(name) {
+                        Some(state) => ups.push((uid.to_string(), state)),
+                        None => {
+                            bad = Some(format!("unknown state '{name}'"));
+                            break;
+                        }
+                    }
+                }
+            }
+            match bad {
+                Some(msg) => {
+                    ctx.decode_error(&msg);
+                    Json::obj(vec![("error", Json::Str(msg))])
+                }
+                None => {
+                    let n = ups.len();
+                    db.update_states_bulk(ups);
+                    Json::obj(vec![("ok", Json::Num(n as f64))])
+                }
+            }
         }
         "drain" => {
-            let ups = db.drain_updates();
+            let ups = if req.u64_or("block", 0) == 1 {
+                db.drain_updates_blocking()
+            } else {
+                db.drain_updates()
+            };
             Json::obj(vec![(
                 "updates",
                 Json::arr(ups.into_iter().map(|(uid, st)| {
@@ -191,34 +446,400 @@ fn handle(req: &Json, db: &Db) -> Json {
             let n = db.pending(req.str_or("pilot", ""));
             Json::obj(vec![("pending", Json::Num(n as f64))])
         }
+        "close_pilot" => {
+            db.close_pilot(req.str_or("pilot", ""));
+            Json::obj(vec![("ok", Json::Num(1.0))])
+        }
+        "close" => {
+            db.close();
+            Json::obj(vec![("ok", Json::Num(1.0))])
+        }
         other => Json::obj(vec![("error", Json::Str(format!("unknown op '{other}'")))]),
     }
 }
 
+// ---------------------------------------------------------------------------
+// Client
+// ---------------------------------------------------------------------------
+
+/// Serialize a request frame as one JSON-lines request object.
+fn frame_to_json(frame: &Frame) -> Json {
+    match frame {
+        Frame::Insert { pilot, tasks } => Json::obj(vec![
+            ("op", Json::Str("insert".into())),
+            ("pilot", Json::Str(pilot.clone())),
+            (
+                "tasks",
+                Json::arr(tasks.iter().map(|(uid, index)| {
+                    Json::obj(vec![
+                        ("uid", Json::Str(uid.clone())),
+                        ("index", Json::Num(*index as f64)),
+                    ])
+                })),
+            ),
+        ]),
+        Frame::Pull { pilot, max, block } => Json::obj(vec![
+            ("op", Json::Str("pull".into())),
+            ("pilot", Json::Str(pilot.clone())),
+            ("max", Json::Num(*max as f64)),
+            ("block", Json::Num(if *block { 1.0 } else { 0.0 })),
+        ]),
+        Frame::Update { uid, state } => Json::obj(vec![
+            ("op", Json::Str("update".into())),
+            ("uid", Json::Str(uid.clone())),
+            ("state", Json::Str(state_name(*state).into())),
+        ]),
+        Frame::UpdateBulk { updates } => Json::obj(vec![
+            ("op", Json::Str("update_bulk".into())),
+            (
+                "updates",
+                Json::arr(updates.iter().map(|(uid, st)| {
+                    Json::arr(vec![
+                        Json::Str(uid.clone()),
+                        Json::Str(state_name(*st).to_string()),
+                    ])
+                })),
+            ),
+        ]),
+        Frame::Drain { block } => Json::obj(vec![
+            ("op", Json::Str("drain".into())),
+            ("block", Json::Num(if *block { 1.0 } else { 0.0 })),
+        ]),
+        Frame::Pending { pilot } => Json::obj(vec![
+            ("op", Json::Str("pending".into())),
+            ("pilot", Json::Str(pilot.clone())),
+        ]),
+        Frame::ClosePilot { pilot } => Json::obj(vec![
+            ("op", Json::Str("close_pilot".into())),
+            ("pilot", Json::Str(pilot.clone())),
+        ]),
+        Frame::Close => Json::obj(vec![("op", Json::Str("close".into()))]),
+        _ => Json::obj(vec![(
+            "error",
+            Json::Str("response frame sent as request".into()),
+        )]),
+    }
+}
+
+/// Parse a JSON-lines response object into the equivalent response frame.
+fn json_resp_to_frame(js: &Json) -> std::io::Result<Frame> {
+    let obj = match js.as_obj() {
+        Some(o) => o,
+        None => return Err(data_err("response is not a JSON object")),
+    };
+    if obj.contains_key("error") {
+        return Ok(Frame::Error {
+            msg: js.str_or("error", "").to_string(),
+        });
+    }
+    if obj.contains_key("tasks") {
+        let tasks = js
+            .get("tasks")
+            .as_arr()
+            .map(|a| {
+                a.iter()
+                    .map(|t| (t.str_or("uid", "").to_string(), t.u64_or("index", 0) as u32))
+                    .collect()
+            })
+            .unwrap_or_default();
+        return Ok(Frame::Tasks { tasks });
+    }
+    if obj.contains_key("updates") {
+        let mut updates = Vec::new();
+        if let Some(arr) = js.get("updates").as_arr() {
+            for u in arr {
+                let pair = u.as_arr().ok_or_else(|| data_err("bad update pair"))?;
+                let uid = pair
+                    .first()
+                    .and_then(|x| x.as_str())
+                    .ok_or_else(|| data_err("bad update uid"))?;
+                let name = pair
+                    .get(1)
+                    .and_then(|x| x.as_str())
+                    .ok_or_else(|| data_err("bad update state"))?;
+                let state =
+                    state_parse(name).ok_or_else(|| data_err(format!("unknown state '{name}'")))?;
+                updates.push((uid.to_string(), state));
+            }
+        }
+        return Ok(Frame::Updates { updates });
+    }
+    if obj.contains_key("pending") {
+        return Ok(Frame::Ok {
+            n: js.u64_or("pending", 0),
+        });
+    }
+    if obj.contains_key("ok") {
+        return Ok(Frame::Ok {
+            n: js.u64_or("ok", 0),
+        });
+    }
+    Err(data_err("unrecognized response object"))
+}
+
+#[derive(Clone, Copy, PartialEq)]
+enum SendKind {
+    /// The caller blocks for this response ([`Pipe::wait`]).
+    Await,
+    /// Fire-and-forget with at-least-once delivery: the frame is kept
+    /// until its ack arrives and is replayed after a reconnect.
+    ForgetReplay,
+}
+
+#[derive(Default)]
+struct PipeState {
+    /// corr → response slot for awaited requests
+    awaited: HashMap<u64, Option<Frame>>,
+    /// corr → frame for fire-and-forget requests not yet acked
+    unacked: HashMap<u64, Frame>,
+    /// requests sent whose responses have not arrived (window control)
+    inflight: usize,
+    /// set once the reader thread exits; why the connection is unusable
+    dead: Option<String>,
+}
+
+struct PipeShared {
+    st: Mutex<PipeState>,
+    cv: Condvar,
+    bytes_recv: AtomicU64,
+}
+
+/// One pipelined binary connection: the owning client writes frames; a
+/// background reader thread fills response slots and drives the window.
+struct Pipe {
+    writer: TcpStream,
+    enc: Vec<u8>,
+    next_corr: u64,
+    window: usize,
+    bytes_sent: u64,
+    shared: Arc<PipeShared>,
+}
+
+impl Pipe {
+    fn new(writer: TcpStream, reader: BufReader<TcpStream>, window: usize) -> Pipe {
+        let shared = Arc::new(PipeShared {
+            st: Mutex::new(PipeState::default()),
+            cv: Condvar::new(),
+            bytes_recv: AtomicU64::new(0),
+        });
+        let shared2 = shared.clone();
+        std::thread::spawn(move || reader_loop(reader, shared2));
+        Pipe {
+            writer,
+            enc: Vec::new(),
+            next_corr: 0,
+            window: window.max(1),
+            bytes_sent: 0,
+            shared,
+        }
+    }
+
+    fn send(&mut self, frame: Frame, kind: SendKind) -> std::io::Result<u64> {
+        let corr;
+        {
+            let mut st = self.shared.st.lock().unwrap();
+            // Window backpressure: don't run unboundedly ahead of the acks.
+            loop {
+                if let Some(d) = &st.dead {
+                    return Err(std::io::Error::new(
+                        std::io::ErrorKind::BrokenPipe,
+                        d.clone(),
+                    ));
+                }
+                if st.inflight < self.window {
+                    break;
+                }
+                st = self.shared.cv.wait(st).unwrap();
+            }
+            corr = self.next_corr;
+            self.next_corr += 1;
+            st.inflight += 1;
+            match kind {
+                SendKind::Await => {
+                    st.awaited.insert(corr, None);
+                }
+                SendKind::ForgetReplay => {
+                    st.unacked.insert(corr, frame.clone());
+                }
+            }
+        }
+        self.enc.clear();
+        frame.encode_into(corr, &mut self.enc);
+        match self.writer.write_all(&self.enc) {
+            Ok(()) => {
+                self.bytes_sent += self.enc.len() as u64;
+                Ok(corr)
+            }
+            Err(e) => {
+                let mut st = self.shared.st.lock().unwrap();
+                st.awaited.remove(&corr);
+                st.unacked.remove(&corr);
+                st.inflight = st.inflight.saturating_sub(1);
+                self.shared.cv.notify_all();
+                Err(e)
+            }
+        }
+    }
+
+    fn wait(&mut self, corr: u64) -> std::io::Result<Frame> {
+        let mut st = self.shared.st.lock().unwrap();
+        loop {
+            match st.awaited.get(&corr) {
+                Some(Some(_)) => {
+                    let f = st.awaited.remove(&corr).unwrap().unwrap();
+                    return Ok(f);
+                }
+                Some(None) => {}
+                None => return Err(other_err("response slot vanished")),
+            }
+            if let Some(d) = &st.dead {
+                let msg = d.clone();
+                st.awaited.remove(&corr);
+                return Err(std::io::Error::new(std::io::ErrorKind::BrokenPipe, msg));
+            }
+            st = self.shared.cv.wait(st).unwrap();
+        }
+    }
+
+    /// Wait until every in-flight request has been acked (so every
+    /// fire-and-forget write is known applied server-side) or the
+    /// connection died.
+    fn barrier(&mut self) -> std::io::Result<()> {
+        let mut st = self.shared.st.lock().unwrap();
+        loop {
+            if st.inflight == 0 {
+                return Ok(());
+            }
+            if let Some(d) = &st.dead {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::BrokenPipe,
+                    d.clone(),
+                ));
+            }
+            st = self.shared.cv.wait(st).unwrap();
+        }
+    }
+
+    /// Salvage un-acked fire-and-forget frames (in send order) for replay
+    /// on a fresh connection; marks this pipe unusable.
+    fn take_unacked(&mut self) -> Vec<Frame> {
+        let mut st = self.shared.st.lock().unwrap();
+        let mut pairs: Vec<(u64, Frame)> = st.unacked.drain().collect();
+        st.awaited.clear();
+        st.inflight = 0;
+        if st.dead.is_none() {
+            st.dead = Some("connection replaced".into());
+        }
+        self.shared.cv.notify_all();
+        pairs.sort_by_key(|(c, _)| *c);
+        pairs.into_iter().map(|(_, f)| f).collect()
+    }
+}
+
+fn reader_loop(mut reader: BufReader<TcpStream>, shared: Arc<PipeShared>) {
+    let mut scratch = Vec::new();
+    loop {
+        match codec::read_frame(&mut reader, &mut scratch) {
+            Ok(Some((corr, frame))) => {
+                let n = scratch.len() as u64 + codec::varint_len(scratch.len() as u64) as u64;
+                shared.bytes_recv.fetch_add(n, Ordering::Relaxed);
+                let mut st = shared.st.lock().unwrap();
+                if let Some(slot) = st.awaited.get_mut(&corr) {
+                    *slot = Some(frame);
+                    st.inflight = st.inflight.saturating_sub(1);
+                } else if st.unacked.remove(&corr).is_some() {
+                    st.inflight = st.inflight.saturating_sub(1);
+                }
+                shared.cv.notify_all();
+            }
+            Ok(None) => {
+                let mut st = shared.st.lock().unwrap();
+                if st.dead.is_none() {
+                    st.dead = Some("db server closed the connection".into());
+                }
+                shared.cv.notify_all();
+                return;
+            }
+            Err(e) => {
+                let mut st = shared.st.lock().unwrap();
+                if st.dead.is_none() {
+                    st.dead = Some(e.to_string());
+                }
+                shared.cv.notify_all();
+                return;
+            }
+        }
+    }
+}
+
+enum Wire {
+    Json {
+        writer: TcpStream,
+        reader: BufReader<TcpStream>,
+    },
+    Binary(Pipe),
+}
+
+/// Default in-flight request window for pipelined connections.
+pub const DEFAULT_WINDOW: usize = 64;
+/// Default coalescing threshold for buffered updates.
+pub const DEFAULT_COALESCE: usize = 256;
+
 /// The client side: what a remote Agent / TaskManager holds.
 ///
+/// [`DbClient::connect`] negotiates the binary pipelined protocol and
+/// falls back to JSON lines against old servers; the lockstep methods
+/// (`insert_tasks`, `pull_tasks`, `update_state`, …) behave identically
+/// in both modes. The pipelined extras — [`DbClient::update_state_async`],
+/// [`DbClient::update_state_buffered`], [`DbClient::flush`] — overlap
+/// round trips in binary mode and degrade to lockstep over JSON.
+///
 /// The paper's deployment keeps this link up for the lifetime of a run
-/// (§III-A); a dropped DB connection used to surface only as a parse
-/// error downstream. The client now remembers its address and an optional
-/// `RetryPolicy`, reconnecting with deterministic exponential backoff when
-/// a call fails mid-stream.
+/// (§III-A); with a `RetryPolicy` the client re-dials with deterministic
+/// exponential backoff when a call fails mid-stream, replaying un-acked
+/// fire-and-forget writes (at-least-once delivery — acked writes are
+/// never lost, a replay race can at worst duplicate an update, which the
+/// session's forward-jump state table tolerates).
 pub struct DbClient {
     addr: SocketAddr,
     retry: RetryPolicy,
     reconnects: u64,
-    writer: TcpStream,
-    reader: BufReader<TcpStream>,
+    prefer_binary: bool,
+    window: usize,
+    coalesce: usize,
+    pending_updates: Vec<(String, TaskState)>,
+    wire: Wire,
+    bytes_sent_base: u64,
+    bytes_recv_base: u64,
 }
 
 impl DbClient {
+    /// Connect and negotiate: binary framed if the server speaks it,
+    /// JSON lines otherwise.
     pub fn connect(addr: SocketAddr) -> std::io::Result<DbClient> {
-        let (writer, reader) = Self::open(addr)?;
+        Self::connect_mode(addr, true)
+    }
+
+    /// Connect in JSON-lines mode unconditionally (no preamble). Useful
+    /// for debugging with a line-oriented tool and for scripted servers
+    /// in tests.
+    pub fn connect_json(addr: SocketAddr) -> std::io::Result<DbClient> {
+        Self::connect_mode(addr, false)
+    }
+
+    fn connect_mode(addr: SocketAddr, prefer_binary: bool) -> std::io::Result<DbClient> {
+        let (wire, sent, recv) = open_wire(addr, prefer_binary, DEFAULT_WINDOW)?;
         Ok(DbClient {
             addr,
             retry: RetryPolicy::none(),
             reconnects: 0,
-            writer,
-            reader,
+            prefer_binary,
+            window: DEFAULT_WINDOW,
+            coalesce: DEFAULT_COALESCE,
+            pending_updates: Vec::new(),
+            wire,
+            bytes_sent_base: sent,
+            bytes_recv_base: recv,
         })
     }
 
@@ -228,16 +849,8 @@ impl DbClient {
     pub fn connect_with_retry(addr: SocketAddr, retry: RetryPolicy) -> std::io::Result<DbClient> {
         let mut attempt = 1u32;
         loop {
-            match Self::open(addr) {
-                Ok((writer, reader)) => {
-                    return Ok(DbClient {
-                        addr,
-                        retry,
-                        reconnects: 0,
-                        writer,
-                        reader,
-                    })
-                }
+            match Self::connect_mode(addr, true) {
+                Ok(client) => return Ok(client.with_retry(retry)),
                 Err(e) => {
                     if attempt >= retry.max_attempts.max(1) {
                         return Err(e);
@@ -250,11 +863,34 @@ impl DbClient {
         }
     }
 
-    /// Adopt a retry policy for subsequent `call`s: on an I/O failure the
+    /// Adopt a retry policy for subsequent calls: on an I/O failure the
     /// client re-dials the server and replays the request.
     pub fn with_retry(mut self, retry: RetryPolicy) -> DbClient {
         self.retry = retry;
         self
+    }
+
+    /// Cap on in-flight pipelined requests (binary mode only).
+    pub fn with_window(mut self, window: usize) -> DbClient {
+        self.window = window.max(1);
+        if let Wire::Binary(p) = &mut self.wire {
+            p.window = self.window;
+        }
+        self
+    }
+
+    /// Buffered updates auto-flush into one `update_bulk` at this size.
+    pub fn with_coalesce(mut self, coalesce: usize) -> DbClient {
+        self.coalesce = coalesce.max(1);
+        self
+    }
+
+    /// Which protocol this connection negotiated: `"binary"` or `"json"`.
+    pub fn proto(&self) -> &'static str {
+        match self.wire {
+            Wire::Json { .. } => "json",
+            Wire::Binary(_) => "binary",
+        }
     }
 
     /// How many times this client has had to re-dial the server.
@@ -262,120 +898,373 @@ impl DbClient {
         self.reconnects
     }
 
-    fn open(addr: SocketAddr) -> std::io::Result<(TcpStream, BufReader<TcpStream>)> {
-        let stream = TcpStream::connect(addr)?;
-        stream.set_nodelay(true).ok();
-        let reader = BufReader::new(stream.try_clone()?);
-        Ok((stream, reader))
+    /// Application bytes written since connect (all connections).
+    pub fn bytes_sent(&self) -> u64 {
+        self.bytes_sent_base
+            + match &self.wire {
+                Wire::Binary(p) => p.bytes_sent,
+                Wire::Json { .. } => 0,
+            }
     }
 
-    fn call(&mut self, req: Json) -> std::io::Result<Json> {
+    /// Application bytes read since connect (all connections).
+    pub fn bytes_received(&self) -> u64 {
+        self.bytes_recv_base
+            + match &self.wire {
+                Wire::Binary(p) => p.shared.bytes_recv.load(Ordering::Relaxed),
+                Wire::Json { .. } => 0,
+            }
+    }
+
+    // -- transport core ----------------------------------------------------
+
+    fn try_call(&mut self, frame: &Frame) -> std::io::Result<Frame> {
+        match &mut self.wire {
+            Wire::Json { writer, reader } => {
+                let line = frame_to_json(frame).to_string();
+                writer.write_all(line.as_bytes())?;
+                writer.write_all(b"\n")?;
+                self.bytes_sent_base += line.len() as u64 + 1;
+                let mut resp = String::new();
+                let n = reader.read_line(&mut resp)?;
+                if n == 0 {
+                    return Err(std::io::Error::new(
+                        std::io::ErrorKind::UnexpectedEof,
+                        "db server closed the connection",
+                    ));
+                }
+                self.bytes_recv_base += n as u64;
+                let js = Json::parse(&resp).map_err(|e| data_err(format!("bad response: {e}")))?;
+                json_resp_to_frame(&js)
+            }
+            Wire::Binary(p) => {
+                let corr = p.send(frame.clone(), SendKind::Await)?;
+                p.wait(corr)
+            }
+        }
+    }
+
+    fn call(&mut self, frame: &Frame) -> std::io::Result<Frame> {
         let mut attempt = 1u32;
         loop {
-            match self.try_call(&req) {
+            match self.try_call(frame) {
                 Ok(resp) => return Ok(resp),
                 Err(e) => {
                     if attempt >= self.retry.max_attempts.max(1) {
                         return Err(e);
                     }
-                    let delay = self.retry.backoff_s(attempt + 1, 0, self.addr.port() as u32);
-                    std::thread::sleep(std::time::Duration::from_secs_f64(delay));
-                    if let Ok((writer, reader)) = Self::open(self.addr) {
-                        self.writer = writer;
-                        self.reader = reader;
-                        self.reconnects += 1;
-                    }
+                    self.backoff(attempt);
+                    self.reopen();
                     attempt += 1;
                 }
             }
         }
     }
 
-    fn try_call(&mut self, req: &Json) -> std::io::Result<Json> {
-        writeln!(self.writer, "{req}")?;
-        let mut line = String::new();
-        let n = self.reader.read_line(&mut line)?;
-        if n == 0 {
-            return Err(std::io::Error::new(
-                std::io::ErrorKind::UnexpectedEof,
-                "db server closed the connection",
-            ));
-        }
-        Json::parse(&line).map_err(|e| {
-            std::io::Error::new(std::io::ErrorKind::InvalidData, format!("bad response: {e}"))
-        })
+    fn backoff(&self, attempt: u32) {
+        let delay = self.retry.backoff_s(attempt + 1, 0, self.addr.port() as u32);
+        std::thread::sleep(std::time::Duration::from_secs_f64(delay));
     }
 
+    /// Re-dial (and re-negotiate) after a failure, replaying any un-acked
+    /// fire-and-forget frames from the dead connection.
+    fn reopen(&mut self) {
+        let mut replay = Vec::new();
+        if let Wire::Binary(p) = &mut self.wire {
+            let _ = p.writer.shutdown(Shutdown::Both); // unblock the reader thread
+            self.bytes_sent_base += p.bytes_sent;
+            self.bytes_recv_base += p.shared.bytes_recv.load(Ordering::Relaxed);
+            replay = p.take_unacked();
+        }
+        if let Ok((wire, sent, recv)) = open_wire(self.addr, self.prefer_binary, self.window) {
+            self.bytes_sent_base += sent;
+            self.bytes_recv_base += recv;
+            self.wire = wire;
+            self.reconnects += 1;
+            let mut json_replay = Vec::new();
+            for f in replay {
+                match &mut self.wire {
+                    Wire::Binary(p) => {
+                        let _ = p.send(f, SendKind::ForgetReplay);
+                    }
+                    Wire::Json { .. } => json_replay.push(f),
+                }
+            }
+            for f in json_replay {
+                let _ = self.try_call(&f); // lockstep replay over JSON
+            }
+        }
+    }
+
+    /// Awaited op: flush buffered updates first (ordering), then one
+    /// request→response exchange; a server-side `Error` becomes `Err`.
+    fn op(&mut self, frame: Frame) -> std::io::Result<Frame> {
+        self.flush_buffer()?;
+        match self.call(&frame)? {
+            Frame::Error { msg } => Err(other_err(format!("db server error: {msg}"))),
+            resp => Ok(resp),
+        }
+    }
+
+    /// Fire-and-forget op (binary): windowed send, acked asynchronously,
+    /// replayed on reconnect. Over JSON this degrades to lockstep.
+    fn send_forget(&mut self, frame: Frame) -> std::io::Result<()> {
+        let mut attempt = 1u32;
+        loop {
+            if matches!(self.wire, Wire::Json { .. }) {
+                return match self.call(&frame)? {
+                    Frame::Error { msg } => Err(other_err(format!("db server error: {msg}"))),
+                    _ => Ok(()),
+                };
+            }
+            let res = match &mut self.wire {
+                Wire::Binary(p) => p.send(frame.clone(), SendKind::ForgetReplay).map(|_| ()),
+                Wire::Json { .. } => continue, // mode flipped on reopen; lockstep above
+            };
+            match res {
+                Ok(()) => return Ok(()),
+                Err(e) => {
+                    if attempt >= self.retry.max_attempts.max(1) {
+                        return Err(e);
+                    }
+                    self.backoff(attempt);
+                    self.reopen();
+                    attempt += 1;
+                }
+            }
+        }
+    }
+
+    fn flush_buffer(&mut self) -> std::io::Result<()> {
+        if self.pending_updates.is_empty() {
+            return Ok(());
+        }
+        let updates = std::mem::take(&mut self.pending_updates);
+        self.send_forget(Frame::UpdateBulk { updates })
+    }
+
+    // -- lockstep API (identical semantics in both modes) ------------------
+
     pub fn insert_tasks(&mut self, pilot: &str, recs: &[TaskRecord]) -> std::io::Result<usize> {
-        let req = Json::obj(vec![
-            ("op", Json::Str("insert".into())),
-            ("pilot", Json::Str(pilot.into())),
-            (
-                "tasks",
-                Json::arr(recs.iter().map(|r| {
-                    Json::obj(vec![
-                        ("uid", Json::Str(r.uid.clone())),
-                        ("index", Json::Num(r.index as f64)),
-                    ])
-                })),
-            ),
-        ]);
-        Ok(self.call(req)?.u64_or("ok", 0) as usize)
+        let frame = Frame::Insert {
+            pilot: pilot.to_string(),
+            tasks: recs.iter().map(|r| (r.uid.clone(), r.index)).collect(),
+        };
+        match self.op(frame)? {
+            Frame::Ok { n } => Ok(n as usize),
+            _ => Err(data_err("unexpected response to insert")),
+        }
     }
 
     pub fn pull_tasks(&mut self, pilot: &str, max: usize) -> std::io::Result<Vec<(String, u32)>> {
-        let req = Json::obj(vec![
-            ("op", Json::Str("pull".into())),
-            ("pilot", Json::Str(pilot.into())),
-            ("max", Json::Num(max as f64)),
-        ]);
-        let resp = self.call(req)?;
-        Ok(resp
-            .get("tasks")
-            .as_arr()
-            .map(|a| {
-                a.iter()
-                    .map(|t| (t.str_or("uid", "").to_string(), t.u64_or("index", 0) as u32))
-                    .collect()
-            })
-            .unwrap_or_default())
+        self.pull(pilot, max, false)
+    }
+
+    /// Blocking pull: the request parks server-side until data arrives or
+    /// the pilot/store closes. Use a dedicated connection for this — it
+    /// occupies the server's per-connection FIFO while parked.
+    pub fn pull_tasks_blocking(
+        &mut self,
+        pilot: &str,
+        max: usize,
+    ) -> std::io::Result<Vec<(String, u32)>> {
+        self.pull(pilot, max, true)
+    }
+
+    fn pull(
+        &mut self,
+        pilot: &str,
+        max: usize,
+        block: bool,
+    ) -> std::io::Result<Vec<(String, u32)>> {
+        let frame = Frame::Pull {
+            pilot: pilot.to_string(),
+            max: max.min(u32::MAX as usize) as u32,
+            block,
+        };
+        match self.op(frame)? {
+            Frame::Tasks { tasks } => Ok(tasks),
+            _ => Err(data_err("unexpected response to pull")),
+        }
     }
 
     pub fn update_state(&mut self, uid: &str, state: TaskState) -> std::io::Result<()> {
-        let req = Json::obj(vec![
-            ("op", Json::Str("update".into())),
-            ("uid", Json::Str(uid.into())),
-            ("state", Json::Str(state_name(state).into())),
-        ]);
-        self.call(req).map(|_| ())
+        let frame = Frame::Update {
+            uid: uid.to_string(),
+            state,
+        };
+        self.op(frame).map(|_| ())
+    }
+
+    pub fn update_states_bulk(&mut self, updates: &[(String, TaskState)]) -> std::io::Result<()> {
+        let frame = Frame::UpdateBulk {
+            updates: updates.to_vec(),
+        };
+        self.op(frame).map(|_| ())
     }
 
     pub fn drain_updates(&mut self) -> std::io::Result<Vec<(String, TaskState)>> {
-        let resp = self.call(Json::obj(vec![("op", Json::Str("drain".into()))]))?;
-        Ok(resp
-            .get("updates")
-            .as_arr()
-            .map(|a| {
-                a.iter()
-                    .filter_map(|u| {
-                        let pair = u.as_arr()?;
-                        Some((
-                            pair.first()?.as_str()?.to_string(),
-                            state_parse(pair.get(1)?.as_str()?),
-                        ))
-                    })
-                    .collect()
-            })
-            .unwrap_or_default())
+        self.drain(false)
+    }
+
+    /// Blocking drain (see [`DbClient::pull_tasks_blocking`] about using a
+    /// dedicated connection).
+    pub fn drain_updates_blocking(&mut self) -> std::io::Result<Vec<(String, TaskState)>> {
+        self.drain(true)
+    }
+
+    fn drain(&mut self, block: bool) -> std::io::Result<Vec<(String, TaskState)>> {
+        match self.op(Frame::Drain { block })? {
+            Frame::Updates { updates } => Ok(updates),
+            _ => Err(data_err("unexpected response to drain")),
+        }
     }
 
     pub fn pending(&mut self, pilot: &str) -> std::io::Result<usize> {
-        let req = Json::obj(vec![
-            ("op", Json::Str("pending".into())),
-            ("pilot", Json::Str(pilot.into())),
-        ]);
-        Ok(self.call(req)?.u64_or("pending", 0) as usize)
+        let frame = Frame::Pending {
+            pilot: pilot.to_string(),
+        };
+        match self.op(frame)? {
+            Frame::Ok { n } => Ok(n as usize),
+            _ => Err(data_err("unexpected response to pending")),
+        }
     }
+
+    pub fn close_pilot(&mut self, pilot: &str) -> std::io::Result<()> {
+        self.flush()?;
+        let frame = Frame::ClosePilot {
+            pilot: pilot.to_string(),
+        };
+        self.op(frame).map(|_| ())
+    }
+
+    pub fn close_db(&mut self) -> std::io::Result<()> {
+        self.flush()?;
+        self.op(Frame::Close).map(|_| ())
+    }
+
+    // -- pipelined API -----------------------------------------------------
+
+    /// Send one state update without waiting for its ack (binary mode:
+    /// windowed, coalescible by the server's FIFO; JSON mode: lockstep).
+    /// [`DbClient::flush`] turns "sent" into "applied server-side".
+    pub fn update_state_async(&mut self, uid: &str, state: TaskState) -> std::io::Result<()> {
+        self.flush_buffer()?;
+        self.send_forget(Frame::Update {
+            uid: uid.to_string(),
+            state,
+        })
+    }
+
+    /// Bulk variant of [`DbClient::update_state_async`]: one windowed
+    /// `update_bulk` frame, acked asynchronously.
+    pub fn update_states_bulk_async(
+        &mut self,
+        updates: &[(String, TaskState)],
+    ) -> std::io::Result<()> {
+        if updates.is_empty() {
+            return Ok(());
+        }
+        self.flush_buffer()?;
+        self.send_forget(Frame::UpdateBulk {
+            updates: updates.to_vec(),
+        })
+    }
+
+    /// Buffer one state update client-side; consecutive buffered updates
+    /// coalesce into a single `update_bulk` frame, sent when the buffer
+    /// reaches the coalescing threshold, before any other op, or at
+    /// [`DbClient::flush`].
+    pub fn update_state_buffered(&mut self, uid: &str, state: TaskState) -> std::io::Result<()> {
+        self.pending_updates.push((uid.to_string(), state));
+        if self.pending_updates.len() >= self.coalesce {
+            self.flush_buffer()?;
+        }
+        Ok(())
+    }
+
+    /// Flush buffered updates and wait until every in-flight request has
+    /// been acked: after `flush()` returns, all prior writes are applied
+    /// server-side (and visible to drains on other connections).
+    pub fn flush(&mut self) -> std::io::Result<()> {
+        self.flush_buffer()?;
+        let mut attempt = 1u32;
+        loop {
+            let res = match &mut self.wire {
+                Wire::Binary(p) => p.barrier(),
+                Wire::Json { .. } => Ok(()), // lockstep: nothing can be in flight
+            };
+            match res {
+                Ok(()) => return Ok(()),
+                Err(e) => {
+                    if attempt >= self.retry.max_attempts.max(1) {
+                        return Err(e);
+                    }
+                    self.backoff(attempt);
+                    self.reopen(); // replays un-acked writes; barrier re-checks
+                    attempt += 1;
+                }
+            }
+        }
+    }
+}
+
+impl Drop for DbClient {
+    fn drop(&mut self) {
+        // Shut the socket down so the pipe's reader thread sees EOF and
+        // exits instead of blocking forever on its cloned fd.
+        if let Wire::Binary(p) = &mut self.wire {
+            let _ = p.writer.shutdown(Shutdown::Both);
+        }
+    }
+}
+
+/// Dial and negotiate. Returns the wire plus handshake byte counts.
+fn open_wire(
+    addr: SocketAddr,
+    prefer_binary: bool,
+    window: usize,
+) -> std::io::Result<(Wire, u64, u64)> {
+    let stream = TcpStream::connect(addr)?;
+    stream.set_nodelay(true).ok();
+    let mut writer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+    if !prefer_binary {
+        return Ok((Wire::Json { writer, reader }, 0, 0));
+    }
+    writer.write_all(codec::MAGIC)?;
+    // Read the server's reply byte-by-byte, stopping at '\n' or 5 bytes —
+    // MAGIC_ACK is exactly 5 bytes ending in '\n', and any JSON fallback
+    // reply is a complete error line, so this never over-reads.
+    let mut preamble = Vec::with_capacity(8);
+    loop {
+        let mut b = [0u8; 1];
+        if reader.read(&mut b)? == 0 {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::UnexpectedEof,
+                "server hung up during protocol negotiation",
+            ));
+        }
+        preamble.push(b[0]);
+        if b[0] == b'\n' || preamble.len() == 5 {
+            break;
+        }
+    }
+    let mut recv = preamble.len() as u64;
+    if preamble == codec::MAGIC_ACK {
+        return Ok((
+            Wire::Binary(Pipe::new(writer, reader, window)),
+            codec::MAGIC.len() as u64,
+            recv,
+        ));
+    }
+    // Not the ack: a JSON-lines server answered our magic "line" with an
+    // error line. Consume the rest of it and fall back on this connection.
+    if *preamble.last().unwrap() != b'\n' {
+        let mut rest = Vec::new();
+        recv += reader.read_until(b'\n', &mut rest)? as u64;
+    }
+    Ok((Wire::Json { writer, reader }, codec::MAGIC.len() as u64, recv))
 }
 
 #[cfg(test)]
@@ -391,11 +1280,23 @@ mod tests {
         }
     }
 
+    fn fast_retry(max_attempts: u32) -> RetryPolicy {
+        RetryPolicy {
+            max_attempts,
+            backoff_base_s: 0.01,
+            backoff_factor: 1.0,
+            backoff_max_s: 0.05,
+            jitter_frac: 0.0,
+            deadline_s: 0.0,
+        }
+    }
+
     #[test]
     fn tcp_roundtrip_insert_pull_update_drain() {
         let db = Arc::new(Db::new());
         let server = DbServer::start(db.clone()).unwrap();
         let mut client = DbClient::connect(server.addr).unwrap();
+        assert_eq!(client.proto(), "binary");
 
         let recs: Vec<TaskRecord> = (0..10).map(rec).collect();
         assert_eq!(client.insert_tasks("pilot.0000", &recs).unwrap(), 10);
@@ -413,6 +1314,28 @@ mod tests {
         assert_eq!(ups[0], ("task.000000".to_string(), TaskState::Done));
         assert_eq!(ups[1].1, TaskState::Failed);
 
+        assert!(client.bytes_sent() > 0);
+        assert!(client.bytes_received() > 0);
+        server.stop();
+    }
+
+    #[test]
+    fn negotiation_falls_back_to_json_lines() {
+        let db = Arc::new(Db::new());
+        let server = DbServer::start_json_only(db.clone()).unwrap();
+        let mut client = DbClient::connect(server.addr).unwrap();
+        assert_eq!(client.proto(), "json");
+
+        // full op coverage over the fallback wire
+        let recs: Vec<TaskRecord> = (0..5).map(rec).collect();
+        assert_eq!(client.insert_tasks("pilot.0000", &recs).unwrap(), 5);
+        assert_eq!(client.pending("pilot.0000").unwrap(), 5);
+        assert_eq!(client.pull_tasks("pilot.0000", 3).unwrap().len(), 3);
+        client.update_state("task.000000", TaskState::Done).unwrap();
+        client
+            .update_states_bulk(&[("task.000001".into(), TaskState::Failed)])
+            .unwrap();
+        assert_eq!(client.drain_updates().unwrap().len(), 2);
         server.stop();
     }
 
@@ -464,30 +1387,77 @@ mod tests {
         server.stop();
     }
 
-    fn fast_retry(max_attempts: u32) -> RetryPolicy {
-        RetryPolicy {
-            max_attempts,
-            backoff_base_s: 0.01,
-            backoff_factor: 1.0,
-            backoff_max_s: 0.05,
-            jitter_frac: 0.0,
-            deadline_s: 0.0,
+    #[test]
+    fn unknown_state_is_a_decode_error_not_canceled() {
+        let db = Arc::new(Db::new());
+        let server = DbServer::start(db.clone()).unwrap();
+        let mut stream = TcpStream::connect(server.addr).unwrap();
+        writeln!(
+            stream,
+            r#"{{"op":"update","uid":"t0","state":"BOGUS_STATE"}}"#
+        )
+        .unwrap();
+        let mut line = String::new();
+        BufReader::new(stream.try_clone().unwrap())
+            .read_line(&mut line)
+            .unwrap();
+        assert!(line.contains("unknown state"), "got: {line}");
+        // the bogus update must NOT have been applied as Canceled
+        assert!(db.drain_updates().is_empty());
+        // wait for the counter (the serving thread races the assertion)
+        for _ in 0..100 {
+            if server.decode_errors() >= 1 {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(5));
         }
+        assert_eq!(server.decode_errors(), 1);
+        server.stop();
+    }
+
+    #[test]
+    fn server_counts_connections() {
+        let db = Arc::new(Db::new());
+        let server = DbServer::start(db).unwrap();
+        {
+            let mut c1 = DbClient::connect(server.addr).unwrap();
+            let mut c2 = DbClient::connect_json(server.addr).unwrap();
+            assert_eq!(c1.pending("p").unwrap(), 0);
+            assert_eq!(c2.pending("p").unwrap(), 0);
+            assert_eq!(server.accepted_connections(), 2);
+        } // both clients hang up cleanly
+        for _ in 0..200 {
+            if server.active_connections() == 0 {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        assert_eq!(server.active_connections(), 0);
+        assert_eq!(server.dropped_connections(), 0);
+        server.stop();
     }
 
     #[test]
     fn connect_with_retry_waits_for_late_server() {
-        // Reserve an ephemeral port, release it, and bring the listener up
+        // Reserve an ephemeral port, release it, and bring a server up
         // only after the client has started dialing.
         let probe = TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = probe.local_addr().unwrap();
         drop(probe);
         let h = std::thread::spawn(move || {
             std::thread::sleep(std::time::Duration::from_millis(60));
-            TcpListener::bind(addr).unwrap()
+            let listener = TcpListener::bind(addr).unwrap();
+            // answer the negotiation so connect() completes
+            let (c, _) = listener.accept().unwrap();
+            let mut r = BufReader::new(c.try_clone().unwrap());
+            let mut magic = [0u8; 5];
+            r.read_exact(&mut magic).unwrap();
+            assert_eq!(&magic, codec::MAGIC);
+            let mut w = c;
+            w.write_all(codec::MAGIC_ACK).unwrap();
         });
         let client = DbClient::connect_with_retry(addr, fast_retry(50));
-        let _listener = h.join().unwrap();
+        h.join().unwrap();
         assert!(client.is_ok(), "client should dial until the server is up");
         // an immediate single-attempt connect to a dead port still errors
         let probe = TcpListener::bind("127.0.0.1:0").unwrap();
@@ -512,7 +1482,7 @@ mod tests {
             r.read_line(&mut line).unwrap();
             writeln!(w, r#"{{"pending":3}}"#).unwrap();
         });
-        let mut client = DbClient::connect(addr).unwrap().with_retry(fast_retry(5));
+        let mut client = DbClient::connect_json(addr).unwrap().with_retry(fast_retry(5));
         assert_eq!(client.pending("p").unwrap(), 3);
         assert!(client.reconnects() >= 1, "the dropped link forced a re-dial");
         h.join().unwrap();
@@ -526,7 +1496,7 @@ mod tests {
             let (c, _) = listener.accept().unwrap();
             drop(c); // hang up without answering
         });
-        let mut client = DbClient::connect(addr).unwrap();
+        let mut client = DbClient::connect_json(addr).unwrap();
         h.join().unwrap();
         let err = client.pending("p").expect_err("dead link must error");
         // either the read sees EOF or the write sees a reset — both are
@@ -554,6 +1524,116 @@ mod tests {
     }
 
     #[test]
+    fn pipelined_async_updates_complete_in_order() {
+        let db = Arc::new(Db::new());
+        let server = DbServer::start(db.clone()).unwrap();
+        // a window far smaller than the burst, to exercise backpressure
+        let mut client = DbClient::connect(server.addr).unwrap().with_window(8);
+        assert_eq!(client.proto(), "binary");
+        for i in 0..100u32 {
+            client
+                .update_state_async(&format!("t{i:03}"), TaskState::Done)
+                .unwrap();
+        }
+        client.flush().unwrap(); // every send acked ⇒ applied server-side
+        let ups = db.drain_updates();
+        assert_eq!(ups.len(), 100);
+        for (i, (uid, _)) in ups.iter().enumerate() {
+            assert_eq!(uid, &format!("t{i:03}"), "updates must apply in send order");
+        }
+        server.stop();
+    }
+
+    #[test]
+    fn coalesced_update_bulk_equals_sequential_updates() {
+        let seq_db = Arc::new(Db::new());
+        let seq_server = DbServer::start(seq_db.clone()).unwrap();
+        let coal_db = Arc::new(Db::new());
+        let coal_server = DbServer::start(coal_db.clone()).unwrap();
+
+        let mut seq = DbClient::connect(seq_server.addr).unwrap();
+        let mut coal = DbClient::connect(coal_server.addr).unwrap().with_coalesce(7);
+        for i in 0..50u32 {
+            let st = if i % 3 == 0 {
+                TaskState::Done
+            } else {
+                TaskState::AgentExecuting
+            };
+            seq.update_state(&format!("t{i:02}"), st).unwrap();
+            coal.update_state_buffered(&format!("t{i:02}"), st).unwrap();
+        }
+        coal.flush().unwrap();
+        assert_eq!(seq_db.drain_updates(), coal_db.drain_updates());
+        seq_server.stop();
+        coal_server.stop();
+    }
+
+    #[test]
+    fn reconnect_mid_pipeline_keeps_acked_writes() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let seen = Arc::new(Mutex::new(Vec::<String>::new()));
+        let seen2 = seen.clone();
+        let h = std::thread::spawn(move || {
+            // conn 1: handshake, ack the first 10 updates, drop mid-pipeline
+            let (c, _) = listener.accept().unwrap();
+            let mut w = c.try_clone().unwrap();
+            let mut r = BufReader::new(c);
+            let mut magic = [0u8; 5];
+            r.read_exact(&mut magic).unwrap();
+            w.write_all(codec::MAGIC_ACK).unwrap();
+            let mut scratch = Vec::new();
+            let mut enc = Vec::new();
+            for _ in 0..10 {
+                let (corr, f) = codec::read_frame(&mut r, &mut scratch).unwrap().unwrap();
+                if let Frame::Update { uid, .. } = f {
+                    seen2.lock().unwrap().push(uid);
+                }
+                enc.clear();
+                Frame::Ok { n: 1 }.encode_into(corr, &mut enc);
+                w.write_all(&enc).unwrap();
+            }
+            let _ = w.shutdown(Shutdown::Both);
+            // conn 2: full service until the client hangs up
+            let (c, _) = listener.accept().unwrap();
+            let mut w = c.try_clone().unwrap();
+            let mut r = BufReader::new(c);
+            r.read_exact(&mut magic).unwrap();
+            w.write_all(codec::MAGIC_ACK).unwrap();
+            while let Ok(Some((corr, f))) = codec::read_frame(&mut r, &mut scratch) {
+                if let Frame::Update { uid, .. } = f {
+                    seen2.lock().unwrap().push(uid);
+                }
+                enc.clear();
+                Frame::Ok { n: 1 }.encode_into(corr, &mut enc);
+                if w.write_all(&enc).is_err() {
+                    break;
+                }
+            }
+        });
+        let mut client = DbClient::connect(addr)
+            .unwrap()
+            .with_retry(fast_retry(10))
+            .with_window(64);
+        for i in 0..40u32 {
+            client
+                .update_state_async(&format!("t{i:02}"), TaskState::Done)
+                .unwrap();
+        }
+        client.flush().unwrap();
+        assert!(client.reconnects() >= 1, "the drop must force a re-dial");
+        drop(client); // conn 2 sees EOF, scripted server thread exits
+        h.join().unwrap();
+        // At-least-once: every update (acked or replayed) reached a server
+        // connection; none were lost in the dropped pipeline window.
+        let seen = seen.lock().unwrap();
+        for i in 0..40u32 {
+            let uid = format!("t{i:02}");
+            assert!(seen.contains(&uid), "update {uid} was lost in the reconnect");
+        }
+    }
+
+    #[test]
     fn state_name_parse_roundtrip() {
         use TaskState::*;
         for s in [
@@ -569,7 +1649,9 @@ mod tests {
             Failed,
             Canceled,
         ] {
-            assert_eq!(state_parse(state_name(s)), s);
+            assert_eq!(state_parse(state_name(s)), Some(s));
         }
+        assert_eq!(state_parse("BOGUS"), None);
+        assert_eq!(state_parse(""), None);
     }
 }

@@ -1,0 +1,286 @@
+//! A [`TaskDb`] backed by a remote [`DbServer`] — what the session wires
+//! in when the DB runs on another host (§III-A distributed deployment).
+//!
+//! Connection topology (one `RemoteDb` per process, shared by all stages):
+//!
+//! - **ctrl**: one pipelined connection for the fast ops — inserts,
+//!   state updates (sent fire-and-forget inside the window), pending,
+//!   close. Never carries a blocking op, so nothing can stall the window.
+//! - **pull conns**: one dedicated connection *per pilot* for blocking
+//!   pulls. A parked blocking pull occupies the server's per-connection
+//!   FIFO, so each agent engine's bridge gets its own.
+//! - **drain conn**: one dedicated connection for (blocking) drains,
+//!   feeding the session's state-sync thread.
+//!
+//! [`TaskDb`] methods are infallible by contract (the in-process store
+//! cannot fail); network errors here degrade to empty results plus a
+//! log-once report — the same observable behavior as a closed store, which
+//! the session's teardown paths already handle.
+
+use std::collections::HashMap;
+use std::net::SocketAddr;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::resilience::RetryPolicy;
+use crate::task::TaskState;
+
+use super::net::DbClient;
+use super::{TaskDb, TaskRecord};
+
+pub struct RemoteDb {
+    addr: SocketAddr,
+    retry: RetryPolicy,
+    ctrl: Mutex<DbClient>,
+    pulls: Mutex<HashMap<String, Arc<Mutex<DbClient>>>>,
+    drain: Mutex<Option<DbClient>>,
+    logged_err: AtomicBool,
+}
+
+impl RemoteDb {
+    /// Connect the control link (pull/drain links are dialed lazily).
+    pub fn connect(addr: SocketAddr) -> std::io::Result<RemoteDb> {
+        Self::connect_with(addr, RetryPolicy::none())
+    }
+
+    /// Connect with a retry policy applied to every link (reconnect with
+    /// deterministic backoff on mid-run failures, PR-7 semantics).
+    pub fn connect_with(addr: SocketAddr, retry: RetryPolicy) -> std::io::Result<RemoteDb> {
+        let ctrl = DbClient::connect(addr)?.with_retry(retry);
+        Ok(RemoteDb {
+            addr,
+            retry,
+            ctrl: Mutex::new(ctrl),
+            pulls: Mutex::new(HashMap::new()),
+            drain: Mutex::new(None),
+            logged_err: AtomicBool::new(false),
+        })
+    }
+
+    /// Which protocol the control link negotiated (`"binary"`/`"json"`).
+    pub fn proto(&self) -> &'static str {
+        self.ctrl.lock().unwrap().proto()
+    }
+
+    fn log_err(&self, what: &str, e: &std::io::Error) {
+        if !self.logged_err.swap(true, Ordering::Relaxed) {
+            eprintln!(
+                "remote db {}: {what} failed: {e} (further failures are silent; \
+                 results degrade to empty)",
+                self.addr
+            );
+        }
+    }
+
+    /// Get (or dial) the dedicated blocking-pull connection for a pilot.
+    fn pull_conn(&self, pilot: &str) -> std::io::Result<Arc<Mutex<DbClient>>> {
+        let mut pool = self.pulls.lock().unwrap();
+        if let Some(c) = pool.get(pilot) {
+            return Ok(c.clone());
+        }
+        let client = DbClient::connect(self.addr)?.with_retry(self.retry);
+        let client = Arc::new(Mutex::new(client));
+        pool.insert(pilot.to_string(), client.clone());
+        Ok(client)
+    }
+
+    fn with_drain_conn<T>(
+        &self,
+        f: impl FnOnce(&mut DbClient) -> std::io::Result<T>,
+    ) -> std::io::Result<T> {
+        let mut guard = self.drain.lock().unwrap();
+        if guard.is_none() {
+            *guard = Some(DbClient::connect(self.addr)?.with_retry(self.retry));
+        }
+        f(guard.as_mut().unwrap())
+    }
+
+    fn to_records(&self, pilot: &str, pairs: Vec<(String, u32)>) -> Vec<TaskRecord> {
+        pairs
+            .into_iter()
+            .map(|(uid, index)| TaskRecord {
+                uid,
+                index,
+                pilot: pilot.to_string(),
+                state: TaskState::TmgrScheduling,
+            })
+            .collect()
+    }
+}
+
+impl TaskDb for RemoteDb {
+    fn insert_tasks(&self, pilot: &str, records: Vec<TaskRecord>) {
+        if let Err(e) = self.ctrl.lock().unwrap().insert_tasks(pilot, &records) {
+            self.log_err("insert_tasks", &e);
+        }
+    }
+
+    fn pull_tasks(&self, pilot: &str, max: usize) -> Vec<TaskRecord> {
+        let conn = match self.pull_conn(pilot) {
+            Ok(c) => c,
+            Err(e) => {
+                self.log_err("pull_tasks(connect)", &e);
+                return Vec::new();
+            }
+        };
+        let mut conn = conn.lock().unwrap();
+        match conn.pull_tasks(pilot, max) {
+            Ok(pairs) => self.to_records(pilot, pairs),
+            Err(e) => {
+                self.log_err("pull_tasks", &e);
+                Vec::new()
+            }
+        }
+    }
+
+    fn pull_tasks_blocking(&self, pilot: &str, max: usize) -> Vec<TaskRecord> {
+        let conn = match self.pull_conn(pilot) {
+            Ok(c) => c,
+            Err(e) => {
+                self.log_err("pull_tasks_blocking(connect)", &e);
+                return Vec::new();
+            }
+        };
+        let mut conn = conn.lock().unwrap();
+        match conn.pull_tasks_blocking(pilot, max) {
+            Ok(pairs) => self.to_records(pilot, pairs),
+            Err(e) => {
+                self.log_err("pull_tasks_blocking", &e);
+                Vec::new()
+            }
+        }
+    }
+
+    fn update_state(&self, uid: &str, state: TaskState) {
+        // Fire-and-forget inside the pipeline window: no RTT on the agent's
+        // hot path. Replayed on reconnect; ordering holds per connection.
+        if let Err(e) = self.ctrl.lock().unwrap().update_state_async(uid, state) {
+            self.log_err("update_state", &e);
+        }
+    }
+
+    fn update_states_bulk(&self, updates: Vec<(String, TaskState)>) {
+        if updates.is_empty() {
+            return;
+        }
+        if let Err(e) = self.ctrl.lock().unwrap().update_states_bulk_async(&updates) {
+            self.log_err("update_states_bulk", &e);
+        }
+    }
+
+    fn drain_updates(&self) -> Vec<(String, TaskState)> {
+        // Read-your-writes for the phased (non-streaming) paths: make sure
+        // everything sent on ctrl is applied before draining elsewhere.
+        if let Err(e) = self.ctrl.lock().unwrap().flush() {
+            self.log_err("drain_updates(flush)", &e);
+        }
+        match self.with_drain_conn(|c| c.drain_updates()) {
+            Ok(ups) => ups,
+            Err(e) => {
+                self.log_err("drain_updates", &e);
+                Vec::new()
+            }
+        }
+    }
+
+    fn drain_updates_blocking(&self) -> Vec<(String, TaskState)> {
+        // No ctrl barrier here: the sync thread calls this in a loop while
+        // engines keep sending, and updates become visible as their frames
+        // are applied — a barrier would chase a moving target.
+        match self.with_drain_conn(|c| c.drain_updates_blocking()) {
+            Ok(ups) => ups,
+            Err(e) => {
+                self.log_err("drain_updates_blocking", &e);
+                Vec::new()
+            }
+        }
+    }
+
+    fn pending(&self, pilot: &str) -> usize {
+        match self.ctrl.lock().unwrap().pending(pilot) {
+            Ok(n) => n,
+            Err(e) => {
+                self.log_err("pending", &e);
+                0
+            }
+        }
+    }
+
+    fn close_pilot(&self, pilot: &str) {
+        // close_pilot flushes first: every update acked before the stream
+        // end marker, so nothing the agent sent can be lost behind it.
+        if let Err(e) = self.ctrl.lock().unwrap().close_pilot(pilot) {
+            self.log_err("close_pilot", &e);
+        }
+    }
+
+    fn close(&self) {
+        if let Err(e) = self.ctrl.lock().unwrap().close_db() {
+            self.log_err("close", &e);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{Db, DbServer};
+    use super::*;
+
+    fn rec(i: u32, pilot: &str) -> TaskRecord {
+        TaskRecord {
+            uid: format!("task.{i:06}"),
+            index: i,
+            pilot: pilot.into(),
+            state: TaskState::TmgrScheduling,
+        }
+    }
+
+    #[test]
+    fn remote_db_round_trips_through_the_trait() {
+        let db = Arc::new(Db::new());
+        let server = DbServer::start(db.clone()).unwrap();
+        let remote: Arc<dyn TaskDb> = Arc::new(RemoteDb::connect(server.addr).unwrap());
+
+        remote.insert_tasks("pilot.0000", (0..8).map(|i| rec(i, "pilot.0000")).collect());
+        assert_eq!(remote.pending("pilot.0000"), 8);
+
+        let got = remote.pull_tasks_blocking("pilot.0000", 5);
+        assert_eq!(got.len(), 5);
+        assert_eq!(got[0].uid, "task.000000");
+        assert_eq!(got[0].pilot, "pilot.0000");
+
+        remote.update_state("task.000000", TaskState::AgentExecuting);
+        remote.update_states_bulk(vec![
+            ("task.000000".into(), TaskState::Done),
+            ("task.000001".into(), TaskState::Failed),
+        ]);
+        // nonblocking drain barriers the ctrl link first, so all three
+        // async updates are visible
+        let ups = remote.drain_updates();
+        assert_eq!(ups.len(), 3);
+        assert_eq!(ups[0], ("task.000000".to_string(), TaskState::AgentExecuting));
+        assert_eq!(ups[2], ("task.000001".to_string(), TaskState::Failed));
+
+        remote.close_pilot("pilot.0000");
+        // queued remainder drains, then the stream-end empty batch
+        assert_eq!(remote.pull_tasks_blocking("pilot.0000", 100).len(), 3);
+        assert!(remote.pull_tasks_blocking("pilot.0000", 100).is_empty());
+
+        remote.close();
+        assert!(remote.drain_updates_blocking().is_empty());
+        server.stop();
+    }
+
+    #[test]
+    fn close_wakes_a_parked_blocking_pull() {
+        let db = Arc::new(Db::new());
+        let server = DbServer::start(db.clone()).unwrap();
+        let remote = Arc::new(RemoteDb::connect(server.addr).unwrap());
+        let r2 = remote.clone();
+        let h = std::thread::spawn(move || r2.pull_tasks_blocking("pilot.0000", 8));
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        remote.close();
+        assert!(h.join().unwrap().is_empty());
+        server.stop();
+    }
+}

@@ -8,6 +8,7 @@ pub mod exp34;
 pub mod exp5;
 pub mod figs;
 pub mod harness;
+pub mod net_bench;
 pub mod overlap_bench;
 pub mod sched_bench;
 pub mod workloads;

@@ -1,0 +1,402 @@
+//! The seeded control-plane wire benchmark (`rp net-bench`): drives the
+//! same deterministic insert → pull → update → drain workload through a
+//! loopback [`DbServer`] twice — once over the JSON-lines protocol in
+//! per-op lockstep (the pre-PR-10 wire), once over the binary framed
+//! protocol with pipelined, coalesced updates — and compares throughput,
+//! bytes per operation, and pull/drain round-trip latency.
+//!
+//! Two outputs per scenario:
+//!  * an **equivalence verdict**: an FNV-1a digest over every pulled
+//!    record (uid, index) and every drained update (uid, state code), in
+//!    stream order, must match between the two protocols — the wire
+//!    format must not change what the store says;
+//!  * a **speedup**: binary ops/s over JSON ops/s. The acceptance bar
+//!    (ISSUE 10) is binary > JSON on the largest scenario.
+//!
+//! `to_json` renders the sweep as `BENCH_net.json`. Regeneration:
+//! EXPERIMENTS.md §Network sweeps.
+//!
+//! [`DbServer`]: crate::db::DbServer
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::db::{Db, DbClient, DbServer, TaskRecord};
+use crate::task::TaskState;
+
+/// A sweep point: workload size + shape + seed. The driver is
+/// single-threaded so the op sequence (and hence the digest) is a pure
+/// function of the scenario.
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    pub name: &'static str,
+    pub n_tasks: usize,
+    pub n_pilots: usize,
+    /// insert chunk size (tasks per insert op)
+    pub chunk: usize,
+    /// max records per pull op
+    pub pull_max: usize,
+    pub seed: u64,
+}
+
+/// What one protocol did with one scenario.
+#[derive(Clone, Debug)]
+pub struct ModeResult {
+    /// `"binary"` or `"json"` (as negotiated — a mismatch is a bug)
+    pub proto: &'static str,
+    pub secs: f64,
+    /// protocol round trips + fire-and-forget sends issued by the driver
+    pub ops: u64,
+    pub ops_per_sec: f64,
+    /// application bytes on the wire, both directions
+    pub bytes: u64,
+    pub bytes_per_op: f64,
+    /// pull/drain round-trip latency percentiles, microseconds
+    pub p50_us: f64,
+    pub p99_us: f64,
+    pub digest: u64,
+}
+
+/// Measured comparison of the two protocols on one scenario.
+#[derive(Clone, Debug)]
+pub struct ScenarioResult {
+    pub name: &'static str,
+    pub n_tasks: usize,
+    pub n_pilots: usize,
+    pub json: ModeResult,
+    pub binary: ModeResult,
+    pub speedup: f64,
+    pub digest_match: bool,
+}
+
+/// The paper-shaped sweep: small and medium mixed workloads, and with
+/// `full` a large single-pilot point plus a 4-pilot split (the §III-A
+/// multi-agent deployment shape).
+pub fn paper_sweep(seed: u64, full: bool) -> Vec<Scenario> {
+    let mut sweep = vec![
+        Scenario {
+            name: "mix_1k",
+            n_tasks: 1_000,
+            n_pilots: 1,
+            chunk: 64,
+            pull_max: 128,
+            seed,
+        },
+        Scenario {
+            name: "mix_5k",
+            n_tasks: 5_000,
+            n_pilots: 1,
+            chunk: 128,
+            pull_max: 256,
+            seed: seed ^ 1,
+        },
+    ];
+    if full {
+        sweep.push(Scenario {
+            name: "mix_20k",
+            n_tasks: 20_000,
+            n_pilots: 1,
+            chunk: 256,
+            pull_max: 512,
+            seed: seed ^ 2,
+        });
+        sweep.push(Scenario {
+            name: "pilots_4",
+            n_tasks: 8_000,
+            n_pilots: 4,
+            chunk: 128,
+            pull_max: 256,
+            seed: seed ^ 3,
+        });
+    }
+    sweep
+}
+
+const FNV_BASIS: u64 = 0xcbf29ce484222325;
+const FNV_PRIME: u64 = 0x100000001b3;
+
+fn fnv_bytes(digest: &mut u64, bytes: &[u8]) {
+    for &b in bytes {
+        *digest ^= b as u64;
+        *digest = digest.wrapping_mul(FNV_PRIME);
+    }
+}
+
+fn fnv_u64(digest: &mut u64, v: u64) {
+    *digest ^= v;
+    *digest = digest.wrapping_mul(FNV_PRIME);
+}
+
+fn pilot_name(p: usize) -> String {
+    format!("pilot.{p:04}")
+}
+
+fn records(sc: &Scenario, pilot_idx: usize) -> Vec<TaskRecord> {
+    let pilot = pilot_name(pilot_idx);
+    (0..sc.n_tasks)
+        .filter(|i| i % sc.n_pilots == pilot_idx)
+        .map(|i| TaskRecord {
+            uid: format!("task.{i:06}"),
+            index: i as u32,
+            pilot: pilot.clone(),
+            state: TaskState::TmgrScheduling,
+        })
+        .collect()
+}
+
+fn percentile(sorted_us: &[f64], p: f64) -> f64 {
+    if sorted_us.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted_us.len() - 1) as f64 * p).round() as usize;
+    sorted_us[idx.min(sorted_us.len() - 1)]
+}
+
+/// Drive one scenario through one protocol against a fresh loopback
+/// server. `binary = false` is the per-op lockstep JSON baseline;
+/// `binary = true` uses the pipelined client: buffered, coalesced state
+/// updates flushed as `update_bulk` frames inside the in-flight window.
+pub fn run_mode(sc: &Scenario, binary: bool) -> std::io::Result<ModeResult> {
+    let db = Arc::new(Db::new());
+    let server = if binary {
+        DbServer::start(db.clone())?
+    } else {
+        DbServer::start_json_only(db.clone())?
+    };
+    let mut client = if binary {
+        DbClient::connect(server.addr)?
+    } else {
+        DbClient::connect_json(server.addr)?
+    };
+    let proto = client.proto();
+
+    let mut ops: u64 = 0;
+    let mut digest = FNV_BASIS;
+    let mut rtts_us: Vec<f64> = Vec::new();
+    let t0 = Instant::now();
+
+    // phase 1 — submission: chunked bulk inserts (awaited in both modes;
+    // the insert path was already bulk before PR 10)
+    for p in 0..sc.n_pilots {
+        let recs = records(sc, p);
+        let pilot = pilot_name(p);
+        for chunk in recs.chunks(sc.chunk.max(1)) {
+            client.insert_tasks(&pilot, chunk)?;
+            ops += 1;
+        }
+    }
+
+    // phase 2 — execution: pull in bulk, report two state transitions per
+    // task, drain after every batch (the session sync cadence)
+    let mut drained: usize = 0;
+    for p in 0..sc.n_pilots {
+        let pilot = pilot_name(p);
+        loop {
+            let t = Instant::now();
+            let batch = client.pull_tasks(&pilot, sc.pull_max)?;
+            rtts_us.push(t.elapsed().as_secs_f64() * 1e6);
+            ops += 1;
+            if batch.is_empty() {
+                break;
+            }
+            for (uid, index) in &batch {
+                fnv_bytes(&mut digest, uid.as_bytes());
+                fnv_u64(&mut digest, *index as u64);
+                if binary {
+                    client.update_state_buffered(uid, TaskState::AgentExecuting)?;
+                    client.update_state_buffered(uid, TaskState::Done)?;
+                } else {
+                    client.update_state(uid, TaskState::AgentExecuting)?;
+                    client.update_state(uid, TaskState::Done)?;
+                }
+                ops += 2;
+            }
+            let t = Instant::now();
+            let ups = client.drain_updates()?;
+            rtts_us.push(t.elapsed().as_secs_f64() * 1e6);
+            ops += 1;
+            drained += ups.len();
+            for (uid, state) in &ups {
+                fnv_bytes(&mut digest, uid.as_bytes());
+                fnv_u64(&mut digest, *state as u64);
+            }
+        }
+    }
+
+    // phase 3 — settle: barrier the pipeline, then drain the tail
+    client.flush()?;
+    while drained < 2 * sc.n_tasks {
+        let t = Instant::now();
+        let ups = client.drain_updates()?;
+        rtts_us.push(t.elapsed().as_secs_f64() * 1e6);
+        ops += 1;
+        if ups.is_empty() {
+            break;
+        }
+        drained += ups.len();
+        for (uid, state) in &ups {
+            fnv_bytes(&mut digest, uid.as_bytes());
+            fnv_u64(&mut digest, *state as u64);
+        }
+    }
+    fnv_u64(&mut digest, drained as u64);
+    client.close_db()?;
+
+    let secs = t0.elapsed().as_secs_f64();
+    let bytes = client.bytes_sent() + client.bytes_received();
+    server.stop();
+    rtts_us.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Ok(ModeResult {
+        proto,
+        secs,
+        ops,
+        ops_per_sec: if secs > 0.0 { ops as f64 / secs } else { 0.0 },
+        bytes,
+        bytes_per_op: if ops > 0 { bytes as f64 / ops as f64 } else { 0.0 },
+        p50_us: percentile(&rtts_us, 0.50),
+        p99_us: percentile(&rtts_us, 0.99),
+        digest,
+    })
+}
+
+/// Run one scenario through both protocols and compare.
+pub fn run_scenario(sc: &Scenario) -> std::io::Result<ScenarioResult> {
+    let json = run_mode(sc, false)?;
+    let binary = run_mode(sc, true)?;
+    let speedup = if binary.ops_per_sec > 0.0 && json.ops_per_sec > 0.0 {
+        binary.ops_per_sec / json.ops_per_sec
+    } else {
+        0.0
+    };
+    let digest_match = json.digest == binary.digest;
+    Ok(ScenarioResult {
+        name: sc.name,
+        n_tasks: sc.n_tasks,
+        n_pilots: sc.n_pilots,
+        json,
+        binary,
+        speedup,
+        digest_match,
+    })
+}
+
+/// Run the paper sweep.
+pub fn run_sweep(seed: u64, full: bool) -> std::io::Result<Vec<ScenarioResult>> {
+    paper_sweep(seed, full).iter().map(run_scenario).collect()
+}
+
+/// The CI determinism + performance gate (`rp net-bench --check`):
+/// rerun the sweep and require (a) run-to-run digest stability, (b)
+/// JSON/binary digest equality everywhere, and (c) binary strictly
+/// faster than JSON on the largest scenario. Returns failure messages
+/// (empty = pass).
+pub fn check(results: &[ScenarioResult], seed: u64, full: bool) -> std::io::Result<Vec<String>> {
+    let mut failures = Vec::new();
+    let rerun = run_sweep(seed, full)?;
+    for (a, b) in results.iter().zip(rerun.iter()) {
+        if a.binary.digest != b.binary.digest || a.json.digest != b.json.digest {
+            failures.push(format!("{}: digest not stable across reruns", a.name));
+        }
+    }
+    for r in results {
+        if !r.digest_match {
+            failures.push(format!(
+                "{}: json digest {:016x} != binary digest {:016x}",
+                r.name, r.json.digest, r.binary.digest
+            ));
+        }
+    }
+    if let Some(largest) = results.iter().max_by_key(|r| r.n_tasks) {
+        if largest.binary.ops_per_sec <= largest.json.ops_per_sec {
+            failures.push(format!(
+                "{}: binary {:.0} ops/s not faster than json {:.0} ops/s",
+                largest.name, largest.binary.ops_per_sec, largest.json.ops_per_sec
+            ));
+        }
+    }
+    Ok(failures)
+}
+
+fn mode_json(m: &ModeResult) -> String {
+    format!(
+        "{{\"proto\": \"{}\", \"secs\": {:.6}, \"ops\": {}, \"ops_per_sec\": {:.1}, \
+         \"bytes\": {}, \"bytes_per_op\": {:.1}, \"p50_us\": {:.1}, \"p99_us\": {:.1}, \
+         \"digest\": \"{:016x}\"}}",
+        m.proto, m.secs, m.ops, m.ops_per_sec, m.bytes, m.bytes_per_op, m.p50_us, m.p99_us,
+        m.digest
+    )
+}
+
+/// Render the sweep as `BENCH_net.json` (schema `rp-net-bench/v1`) —
+/// hand-rolled JSON, since the image has no serde.
+pub fn to_json(results: &[ScenarioResult], seed: u64, full: bool) -> String {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str("  \"schema\": \"rp-net-bench/v1\",\n");
+    s.push_str("  \"generated\": true,\n");
+    s.push_str(&format!("  \"seed\": {seed},\n"));
+    s.push_str(&format!("  \"full\": {full},\n"));
+    s.push_str("  \"scenarios\": [\n");
+    for (i, r) in results.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"name\": \"{}\", \"n_tasks\": {}, \"n_pilots\": {},\n     \
+             \"json\": {},\n     \"binary\": {},\n     \
+             \"speedup\": {:.2}, \"digest_match\": {}}}{}\n",
+            r.name,
+            r.n_tasks,
+            r.n_pilots,
+            mode_json(&r.json),
+            mode_json(&r.binary),
+            r.speedup,
+            r.digest_match,
+            if i + 1 < results.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> Scenario {
+        Scenario {
+            name: "test_small",
+            n_tasks: 120,
+            n_pilots: 2,
+            chunk: 16,
+            pull_max: 32,
+            seed: 0xBE7C,
+        }
+    }
+
+    #[test]
+    fn json_and_binary_see_the_same_stream() {
+        let r = run_scenario(&small()).unwrap();
+        assert_eq!(r.json.proto, "json");
+        assert_eq!(r.binary.proto, "binary");
+        assert!(r.digest_match, "wire format changed what the store says");
+        assert!(r.json.ops > 0 && r.binary.ops > 0);
+        assert!(r.json.bytes > 0 && r.binary.bytes > 0);
+    }
+
+    #[test]
+    fn digests_are_deterministic_across_runs() {
+        // this is what the CI bench-smoke `--check` flag asserts at scale
+        let a = run_mode(&small(), true).unwrap();
+        let b = run_mode(&small(), true).unwrap();
+        assert_eq!(a.digest, b.digest);
+        assert_eq!(a.ops, b.ops);
+    }
+
+    #[test]
+    fn json_has_schema_and_scenarios() {
+        let r = run_scenario(&small()).unwrap();
+        let json = to_json(&[r], 42, false);
+        assert!(json.contains("\"schema\": \"rp-net-bench/v1\""));
+        assert!(json.contains("\"name\": \"test_small\""));
+        assert!(json.contains("\"digest_match\": true"));
+        assert!(json.contains("\"proto\": \"binary\""));
+    }
+}

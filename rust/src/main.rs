@@ -7,7 +7,7 @@
 //!   rp platforms
 //!   rp artifacts [--dir PATH]
 
-use rp::experiments::{exp12, exp34, exp5, figs, overlap_bench, sched_bench, write_csv};
+use rp::experiments::{exp12, exp34, exp5, figs, net_bench, overlap_bench, sched_bench, write_csv};
 use rp::util::args::Args;
 
 fn main() {
@@ -19,6 +19,7 @@ fn main() {
         Some("fault-smoke") => fault_smoke(&args),
         Some("sched-bench") => sched_bench_cmd(&args),
         Some("overlap-bench") => overlap_bench_cmd(&args),
+        Some("net-bench") => net_bench_cmd(&args),
         _ => usage(),
     }
 }
@@ -46,7 +47,13 @@ fn usage() {
                              BENCH_overlap.json (--seed N --full --out PATH\n\
                              --check; --check fails unless first-exec precedes\n\
                              last-submit at >=10k tasks and traces replay\n\
-                             byte-identically under the seed)\n"
+                             byte-identically under the seed)\n\
+           net-bench         seeded control-plane wire sweep: JSON-lines lockstep\n\
+                             vs binary framed + pipelined DB client on a loopback\n\
+                             server, writes BENCH_net.json (--seed N --full\n\
+                             --out PATH --check; --check re-runs the sweep and\n\
+                             fails on digest divergence or if binary is not\n\
+                             faster than JSON on the largest scenario)\n"
     );
     std::process::exit(2);
 }
@@ -268,6 +275,73 @@ fn overlap_bench_cmd(args: &Args) {
         }
     }
     let json = overlap_bench::to_json(&results, seed, full);
+    if let Err(e) = std::fs::write(out, &json) {
+        eprintln!("FAIL: could not write {out}: {e}");
+        std::process::exit(1);
+    }
+    println!("wrote {out}");
+    if !ok {
+        std::process::exit(1);
+    }
+}
+
+/// The CI wire-protocol gate: run the seeded JSON-vs-binary control-plane
+/// sweep, assert stream-digest equivalence between protocols, optionally
+/// re-run for determinism and the binary>json throughput bar, and write
+/// `BENCH_net.json`.
+fn net_bench_cmd(args: &Args) {
+    let seed = args.u64_or("seed", 42);
+    let full = args.flag("full");
+    let out = args.get_or("out", "BENCH_net.json");
+    println!("net-bench: seeded control-plane wire sweep, seed={seed} full={full}");
+    let results = match net_bench::run_sweep(seed, full) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("FAIL: net-bench sweep failed: {e}");
+            std::process::exit(1);
+        }
+    };
+    let mut ok = true;
+    for r in &results {
+        println!(
+            "  {:<10} tasks={:<6} pilots={} json={:>9.1} ops/s binary={:>9.1} ops/s \
+             speedup={:.2}x bytes/op {:.0} -> {:.0} p99 {:.0}us -> {:.0}us digest_match={}",
+            r.name,
+            r.n_tasks,
+            r.n_pilots,
+            r.json.ops_per_sec,
+            r.binary.ops_per_sec,
+            r.speedup,
+            r.json.bytes_per_op,
+            r.binary.bytes_per_op,
+            r.json.p99_us,
+            r.binary.p99_us,
+            r.digest_match
+        );
+        if !r.digest_match {
+            eprintln!("FAIL: {} stream digests differ between protocols", r.name);
+            ok = false;
+        }
+    }
+    if args.flag("check") {
+        match net_bench::check(&results, seed, full) {
+            Ok(failures) if failures.is_empty() => println!(
+                "net check OK: digests stable and protocol-independent; \
+                 binary beats json on the largest scenario"
+            ),
+            Ok(failures) => {
+                for f in failures {
+                    eprintln!("FAIL: {f}");
+                }
+                ok = false;
+            }
+            Err(e) => {
+                eprintln!("FAIL: net-bench check rerun failed: {e}");
+                ok = false;
+            }
+        }
+    }
+    let json = net_bench::to_json(&results, seed, full);
     if let Err(e) = std::fs::write(out, &json) {
         eprintln!("FAIL: could not write {out}: {e}");
         std::process::exit(1);

@@ -21,11 +21,12 @@
 //! [`Session::run_local`] remains as a thin blocking wrapper:
 //! create_pilot → submit → wait → finish.
 
+use std::net::SocketAddr;
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::agent::agent::{Agent, AgentConfig, AgentResult, FunctionRegistry};
-use crate::db::Db;
+use crate::db::{Db, RemoteDb, TaskDb};
 use crate::mesh::{spawn, ComponentHandle, SpawnOpts, WallClock, WorkQueue};
 use crate::pilot::{PilotDescription, PilotManager};
 use crate::platform::Platform;
@@ -59,7 +60,7 @@ pub struct Session {
     pub uid: String,
     pub pmgr: PilotManager,
     pub tmgr: Arc<Mutex<TaskManager>>,
-    pub db: Arc<Db>,
+    pub db: Arc<dyn TaskDb>,
     pub registry: FunctionRegistry,
     /// streaming knobs (chunk size, pacing, executor threads); adjust
     /// before the first `submit`
@@ -90,11 +91,30 @@ impl Default for Session {
 
 impl Session {
     pub fn new() -> Session {
+        let db: Arc<dyn TaskDb> = Arc::new(Db::new());
+        Session::with_db(db)
+    }
+
+    /// A session whose task store lives behind a remote [`DbServer`]
+    /// (`rust/src/db/net.rs`): every stage talks to `addr` through a
+    /// [`RemoteDb`] — a pipelined binary control link plus dedicated
+    /// blocking pull/drain links. The rest of the streaming pipeline is
+    /// unchanged; it only sees the [`TaskDb`] trait.
+    ///
+    /// [`DbServer`]: crate::db::DbServer
+    pub fn with_remote_db(addr: SocketAddr) -> Result<Session> {
+        let remote = RemoteDb::connect(addr)
+            .map_err(|e| RpError::Runtime(format!("remote db {addr}: connect failed: {e}")))?;
+        let db: Arc<dyn TaskDb> = Arc::new(remote);
+        Ok(Session::with_db(db))
+    }
+
+    fn with_db(db: Arc<dyn TaskDb>) -> Session {
         Session {
             uid: ids::session_uid(),
             pmgr: PilotManager::new(),
             tmgr: Arc::new(Mutex::new(TaskManager::new())),
-            db: Arc::new(Db::new()),
+            db,
             registry: FunctionRegistry::new(),
             stream: StreamConfig::default(),
             clock: Arc::new(WallClock::new()),
@@ -178,7 +198,7 @@ impl Session {
             let ledger = ledger.clone();
             let clock = self.clock.clone();
             std::thread::spawn(move || {
-                Agent::run_streaming(&cfg, &db, &store, &registry, &ledger, clock)
+                Agent::run_streaming(&cfg, db.as_ref(), &store, &registry, &ledger, clock)
             })
         };
         self.engines.push(Engine {
@@ -635,6 +655,30 @@ mod tests {
             "no overlap: first exec {first_exec} >= last submit {last_submit}"
         );
         assert_eq!(res.tracer.of_kind(Ev::Overlap).len(), 1);
+    }
+
+    #[test]
+    fn session_runs_against_a_remote_db_server() {
+        use crate::db::DbServer;
+        let store = Arc::new(Db::new());
+        let server = DbServer::start(store).unwrap();
+        let mut s = Session::with_remote_db(server.addr).unwrap();
+        s.register_function("triple", |p| Ok(3.0 * p.as_f64().unwrap_or(0.0)));
+        s.create_pilot(PilotDescription::new("local.localhost", 1, 3600.0))
+            .unwrap();
+        let handles = s
+            .submit(vec![
+                TaskDescription::emulated("/bin/true", 1, 1, 0.0),
+                TaskDescription::func("triple", Json::Num(14.0), 0.0),
+            ])
+            .unwrap();
+        s.wait(&handles, None).unwrap();
+        let res = s.finish().unwrap();
+        assert_eq!(res.tasks.len(), 2);
+        assert!(res.tasks.iter().all(|t| t.state == TaskState::Done));
+        assert_eq!(res.tasks[1].result, Some(42.0));
+        assert_eq!(server.dropped_connections(), 0);
+        server.stop();
     }
 
     #[test]

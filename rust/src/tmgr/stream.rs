@@ -27,7 +27,7 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
 use super::TaskManager;
-use crate::db::{Db, TaskRecord};
+use crate::db::{TaskDb, TaskRecord};
 use crate::mesh::{Component, Flow, WorkQueue};
 use crate::task::TaskState;
 use crate::tracer::{Ev, Tracer};
@@ -159,7 +159,7 @@ pub struct SubmitReceipt {
 /// [`SubmitReceipt`] per flushed chunk.
 pub struct TmgrStage {
     tmgr: Arc<Mutex<TaskManager>>,
-    db: Arc<Db>,
+    db: Arc<dyn TaskDb>,
     /// per-pilot (uid, ledger), in round-robin order
     pilots: Vec<(String, Arc<SubmitLedger>)>,
     pilot_uids: Vec<String>,
@@ -177,7 +177,7 @@ pub struct TmgrStage {
 impl TmgrStage {
     pub fn new(
         tmgr: Arc<Mutex<TaskManager>>,
-        db: Arc<Db>,
+        db: Arc<dyn TaskDb>,
         pilots: Vec<(String, Arc<SubmitLedger>)>,
         cfg: &StreamConfig,
         clock: Arc<dyn crate::mesh::Clock>,
@@ -291,6 +291,7 @@ impl Component for TmgrStage {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::db::Db;
     use crate::mesh::{spawn, SpawnOpts, WallClock};
     use crate::task::TaskDescription;
 

@@ -1,0 +1,110 @@
+//! Loopback control-plane stress (ISSUE 10 satellite): four agent
+//! threads, each with its own pipelined binary client, push 10k state
+//! updates apiece through one [`DbServer`] backed by the lock-striped
+//! store, while a fifth connection drains the single updates FIFO.
+//!
+//! Asserts the invariants the session relies on: nothing is lost
+//! (40k updates arrive), each agent's updates arrive in its own send
+//! order (per-producer FIFO through stripes + pipeline + wire), and the
+//! server sees clean connects/disconnects (no drops, active drains to 0).
+
+use std::sync::Arc;
+
+use rp::db::{Db, DbClient, DbServer, TaskRecord};
+use rp::task::TaskState;
+
+const N_AGENTS: usize = 4;
+const TASKS_PER_AGENT: usize = 5_000;
+const UPDATES_PER_AGENT: usize = 2 * TASKS_PER_AGENT;
+
+fn pilot(a: usize) -> String {
+    format!("pilot.{a:04}")
+}
+
+fn uid(a: usize, j: usize) -> String {
+    format!("p{a}.task.{j:06}")
+}
+
+#[test]
+fn four_agents_stream_40k_updates_through_the_sharded_store() {
+    let db = Arc::new(Db::new());
+    let server = DbServer::start(db.clone()).unwrap();
+
+    // preload every pilot's queue (submission is not under test here)
+    for a in 0..N_AGENTS {
+        let recs: Vec<TaskRecord> = (0..TASKS_PER_AGENT)
+            .map(|j| TaskRecord {
+                uid: uid(a, j),
+                index: j as u32,
+                pilot: pilot(a),
+                state: TaskState::TmgrScheduling,
+            })
+            .collect();
+        db.insert_tasks(&pilot(a), recs);
+    }
+
+    let agents: Vec<_> = (0..N_AGENTS)
+        .map(|a| {
+            let addr = server.addr;
+            std::thread::spawn(move || {
+                let mut client = DbClient::connect(addr).unwrap();
+                assert_eq!(client.proto(), "binary");
+                let mut pulled = 0usize;
+                while pulled < TASKS_PER_AGENT {
+                    let batch = client.pull_tasks(&pilot(a), 512).unwrap();
+                    assert!(!batch.is_empty(), "queue exhausted early");
+                    for (uid, _) in &batch {
+                        client
+                            .update_state_buffered(uid, TaskState::AgentExecuting)
+                            .unwrap();
+                        client.update_state_buffered(uid, TaskState::Done).unwrap();
+                    }
+                    pulled += batch.len();
+                }
+                client.flush().unwrap();
+            })
+        })
+        .collect();
+
+    // drain the single FIFO from a dedicated connection until everything
+    // the agents acked has arrived
+    let mut drain = DbClient::connect(server.addr).unwrap();
+    let mut seen: Vec<(String, TaskState)> = Vec::new();
+    while seen.len() < N_AGENTS * UPDATES_PER_AGENT {
+        let ups = drain.drain_updates_blocking().unwrap();
+        assert!(!ups.is_empty(), "updates channel closed early");
+        seen.extend(ups);
+    }
+    for h in agents {
+        h.join().unwrap();
+    }
+    assert_eq!(seen.len(), N_AGENTS * UPDATES_PER_AGENT);
+
+    // per-producer FIFO: each agent's subsequence is exactly its send
+    // order — pull order (the pilot queue is FIFO) times two states
+    for a in 0..N_AGENTS {
+        let prefix = format!("p{a}.");
+        let got: Vec<&(String, TaskState)> =
+            seen.iter().filter(|(u, _)| u.starts_with(&prefix)).collect();
+        assert_eq!(got.len(), UPDATES_PER_AGENT);
+        for (j, pair) in got.chunks(2).enumerate() {
+            assert_eq!(pair[0].0, uid(a, j));
+            assert_eq!(pair[0].1, TaskState::AgentExecuting);
+            assert_eq!(pair[1].0, uid(a, j));
+            assert_eq!(pair[1].1, TaskState::Done);
+        }
+    }
+
+    // connection accounting: 4 agents + 1 drain, all clean
+    drop(drain);
+    assert!(server.accepted_connections() >= (N_AGENTS + 1) as u64);
+    assert_eq!(server.dropped_connections(), 0);
+    for _ in 0..200 {
+        if server.active_connections() == 0 {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+    assert_eq!(server.active_connections(), 0);
+    server.stop();
+}
