@@ -269,7 +269,15 @@ fn write_str(out: &mut Vec<u8>, s: &str) {
 impl Frame {
     /// Append this frame, length-prefixed, to `out` (a reusable scratch
     /// buffer — callers `clear()` + reuse it to stay allocation-free).
-    pub fn encode_into(&self, corr: u64, out: &mut Vec<u8>) {
+    ///
+    /// Fails — leaving `out` exactly as it was — if the body would exceed
+    /// [`MAX_FRAME`]. Enforced in release builds: an oversized frame must
+    /// never reach the wire, where the peer's `read_frame` would drop the
+    /// connection and the reconnect replay would re-send it forever (and
+    /// a body past 256 MiB would overflow the 4-byte length-prefix
+    /// reservation, corrupting the stream). Callers chunk bulk payloads
+    /// (see `DbClient`) so well-formed traffic never hits this.
+    pub fn encode_into(&self, corr: u64, out: &mut Vec<u8>) -> Result<(), CodecError> {
         // Reserve 4 bytes for the length prefix, encode the body in
         // place, then shift left if the varint is shorter. A 4-byte
         // varint covers lengths up to 2^28-1 = 256 MiB > MAX_FRAME.
@@ -345,7 +353,13 @@ impl Frame {
             }
         }
         let body_len = out.len() - body_start;
-        debug_assert!(body_len <= MAX_FRAME, "frame exceeds MAX_FRAME; chunk it");
+        if body_len > MAX_FRAME {
+            out.truncate(lp);
+            return err(format!(
+                "encoded frame of {body_len} bytes exceeds MAX_FRAME ({MAX_FRAME}); \
+                 chunk the payload"
+            ));
+        }
         let mut lenbuf = Vec::with_capacity(4);
         write_varint(&mut lenbuf, body_len as u64);
         let k = lenbuf.len().min(4);
@@ -354,6 +368,7 @@ impl Frame {
             out.copy_within(body_start.., lp + k);
             out.truncate(lp + k + body_len);
         }
+        Ok(())
     }
 
     /// Decode one frame body (everything after the length prefix).
@@ -601,7 +616,7 @@ mod tests {
         let mut expect = Vec::new();
         for corr in 0..500u64 {
             let f = rand_frame(&mut rng);
-            f.encode_into(corr, &mut wire);
+            f.encode_into(corr, &mut wire).unwrap();
             expect.push(f);
         }
         let mut cursor = std::io::Cursor::new(wire);
@@ -630,7 +645,8 @@ mod tests {
             uid: "task.000001".into(),
             state: TaskState::Done,
         }
-        .encode_into(7, &mut wire);
+        .encode_into(7, &mut wire)
+        .unwrap();
         let mut scratch = Vec::new();
         // every strict prefix of the frame fails with UnexpectedEof (or
         // clean EOF when nothing at all was sent)
@@ -642,6 +658,24 @@ mod tests {
                 Err(e) => assert_eq!(e.kind(), std::io::ErrorKind::UnexpectedEof),
             }
         }
+    }
+
+    #[test]
+    fn oversized_frame_is_an_encode_error_not_a_wire_write() {
+        let mut out = Vec::new();
+        Frame::Close.encode_into(0, &mut out).unwrap();
+        let len_before = out.len();
+        let big = Frame::Update {
+            uid: "x".repeat(MAX_FRAME),
+            state: TaskState::Done,
+        };
+        assert!(big.encode_into(1, &mut out).is_err());
+        assert_eq!(out.len(), len_before, "failed encode must not touch the buffer");
+        // the frame already in the buffer still decodes cleanly
+        let mut cursor = std::io::Cursor::new(out);
+        let (corr, frame) = read_frame(&mut cursor, &mut Vec::new()).unwrap().unwrap();
+        assert_eq!(corr, 0);
+        assert_eq!(frame, Frame::Close);
     }
 
     #[test]
@@ -671,7 +705,7 @@ mod tests {
         assert!(Frame::decode(&body).is_err());
         // trailing bytes after a valid payload
         let mut wire = Vec::new();
-        Frame::Close.encode_into(1, &mut wire);
+        Frame::Close.encode_into(1, &mut wire).unwrap();
         let mut body = wire[1..].to_vec(); // strip the 1-byte length prefix
         body.push(0xee);
         assert!(Frame::decode(&body).is_err());

@@ -64,6 +64,8 @@ pub struct TaskRecord {
 /// distributed DB placement).
 pub trait TaskDb: Send + Sync {
     /// TaskManager side: insert a bulk of task records routed to a pilot.
+    /// Idempotent on uid: a record the store has already seen (e.g. a
+    /// replayed insert after a lost ack) is dropped, not enqueued twice.
     fn insert_tasks(&self, pilot: &str, records: Vec<TaskRecord>);
     /// Agent side: pull up to `max` tasks for `pilot`. Non-blocking.
     fn pull_tasks(&self, pilot: &str, max: usize) -> Vec<TaskRecord>;
@@ -159,28 +161,49 @@ impl Db {
     }
 
     /// TaskManager side: insert a bulk of task records routed to a pilot.
-    pub fn insert_tasks(&self, pilot: &str, records: Vec<TaskRecord>) {
+    ///
+    /// Idempotent on uid: records the store has already seen are dropped,
+    /// not enqueued twice. This is what makes a client-side replay of an
+    /// `insert` whose ack was lost in a connection drop safe — without it
+    /// an agent could pull (and execute) the same uid twice. Returns how
+    /// many records were actually enqueued.
+    pub fn insert_tasks(&self, pilot: &str, records: Vec<TaskRecord>) -> usize {
         // Mirror into the uid→record shards first (grouped, one lock per
-        // touched shard), then enqueue — a puller that wakes on the queue
-        // insert can already look every record up.
-        let mut by_shard: Vec<Vec<TaskRecord>> = (0..DB_STRIPES).map(|_| Vec::new()).collect();
-        for r in &records {
-            by_shard[stripe_of(&r.uid)].push(r.clone());
+        // touched shard), deciding freshness as we go — a puller that
+        // wakes on the queue insert can already look every record up.
+        let mut keep = vec![false; records.len()];
+        let mut by_shard: Vec<Vec<usize>> = (0..DB_STRIPES).map(|_| Vec::new()).collect();
+        for (k, r) in records.iter().enumerate() {
+            by_shard[stripe_of(&r.uid)].push(k);
         }
-        for (shard, recs) in by_shard.into_iter().enumerate() {
-            if recs.is_empty() {
+        for (shard, idxs) in by_shard.into_iter().enumerate() {
+            if idxs.is_empty() {
                 continue;
             }
             let mut map = self.records[shard].lock().unwrap();
-            for r in recs {
-                map.insert(r.uid.clone(), r);
+            for k in idxs {
+                let r = &records[k];
+                if !map.contains_key(&r.uid) {
+                    map.insert(r.uid.clone(), r.clone());
+                    keep[k] = true;
+                }
             }
+        }
+        let fresh: Vec<TaskRecord> = records
+            .into_iter()
+            .zip(keep)
+            .filter_map(|(r, k)| k.then_some(r))
+            .collect();
+        let n = fresh.len();
+        if n == 0 {
+            return 0;
         }
         let stripe = &self.stripes[stripe_of(pilot)];
         let mut inner = stripe.inner.lock().unwrap();
         let i = Self::queue_idx(&mut inner, pilot);
-        inner.queues[i].q.extend(records);
+        inner.queues[i].q.extend(fresh);
         stripe.cv.notify_all();
+        n
     }
 
     /// Agent side: pull up to `max` tasks for `pilot` (bulk pull — RP's
@@ -315,7 +338,7 @@ impl Db {
 
 impl TaskDb for Db {
     fn insert_tasks(&self, pilot: &str, records: Vec<TaskRecord>) {
-        Db::insert_tasks(self, pilot, records)
+        Db::insert_tasks(self, pilot, records);
     }
     fn pull_tasks(&self, pilot: &str, max: usize) -> Vec<TaskRecord> {
         Db::pull_tasks(self, pilot, max)
@@ -381,6 +404,25 @@ mod tests {
         db.insert_tasks("pilot.0001", vec![rec("b", 1)]);
         assert_eq!(db.pull_tasks("pilot.0001", 10)[0].uid, "b");
         assert_eq!(db.pull_tasks("pilot.0000", 10)[0].uid, "a");
+    }
+
+    #[test]
+    fn reinserting_known_uids_is_idempotent() {
+        let db = Db::new();
+        let recs = vec![rec("t0", 0), rec("t1", 1)];
+        assert_eq!(db.insert_tasks("pilot.0000", recs.clone()), 2);
+        // a replayed insert (lost ack, reconnect) must not grow the queue
+        assert_eq!(db.insert_tasks("pilot.0000", recs.clone()), 0);
+        assert_eq!(db.pending("pilot.0000"), 2);
+        // pulled records stay known: a replay arriving after execution
+        // started must not requeue them either
+        assert_eq!(db.pull_tasks("pilot.0000", 10).len(), 2);
+        assert_eq!(db.insert_tasks("pilot.0000", recs), 0);
+        assert_eq!(db.pending("pilot.0000"), 0);
+        // mixed batch: only the genuinely new record is enqueued
+        let mixed = vec![rec("t0", 0), rec("t2", 2)];
+        assert_eq!(db.insert_tasks("pilot.0000", mixed), 1);
+        assert_eq!(db.pull_tasks("pilot.0000", 10)[0].uid, "t2");
     }
 
     #[test]

@@ -257,7 +257,17 @@ fn serve_binary(stream: TcpStream, db: &Db) -> std::io::Result<()> {
     while let Some((corr, frame)) = codec::read_frame(&mut reader, &mut scratch)? {
         let resp = handle_frame(frame, db);
         enc.clear();
-        resp.encode_into(corr, &mut enc);
+        if resp.encode_into(corr, &mut enc).is_err() {
+            // A response too large for one frame (a pull/drain of an
+            // enormous batch): answer with an in-band error instead of
+            // writing a frame the client's read_frame would reject.
+            enc.clear();
+            Frame::Error {
+                msg: "response exceeds MAX_FRAME; pull or drain in smaller batches".into(),
+            }
+            .encode_into(corr, &mut enc)
+            .expect("error frame fits in MAX_FRAME");
+        }
         writer.write_all(&enc)?;
     }
     Ok(()) // clean EOF at a frame boundary
@@ -266,7 +276,6 @@ fn serve_binary(stream: TcpStream, db: &Db) -> std::io::Result<()> {
 fn handle_frame(frame: Frame, db: &Db) -> Frame {
     match frame {
         Frame::Insert { pilot, tasks } => {
-            let n = tasks.len() as u64;
             let recs = tasks
                 .into_iter()
                 .map(|(uid, index)| TaskRecord {
@@ -276,8 +285,10 @@ fn handle_frame(frame: Frame, db: &Db) -> Frame {
                     state: TaskState::TmgrScheduling,
                 })
                 .collect();
-            db.insert_tasks(&pilot, recs);
-            Frame::Ok { n }
+            // n = records newly enqueued; a replayed insert re-acks with 0
+            Frame::Ok {
+                n: db.insert_tasks(&pilot, recs) as u64,
+            }
         }
         Frame::Pull { pilot, max, block } => {
             let recs = if block {
@@ -357,8 +368,7 @@ fn handle(req: &Json, db: &Db, ctx: &mut ConnCtx) -> Json {
                         .collect()
                 })
                 .unwrap_or_default();
-            let n = tasks.len();
-            db.insert_tasks(pilot, tasks);
+            let n = db.insert_tasks(pilot, tasks);
             Json::obj(vec![("ok", Json::Num(n as f64))])
         }
         "pull" => {
@@ -635,7 +645,14 @@ impl Pipe {
     }
 
     fn send(&mut self, frame: Frame, kind: SendKind) -> std::io::Result<u64> {
-        let corr;
+        // Encode before any window/slot bookkeeping: an oversized frame is
+        // a local error with nothing to clean up (and nothing hits the
+        // wire, so the peer never drops the connection over it).
+        let corr = self.next_corr;
+        self.enc.clear();
+        frame
+            .encode_into(corr, &mut self.enc)
+            .map_err(|e| data_err(e.to_string()))?;
         {
             let mut st = self.shared.st.lock().unwrap();
             // Window backpressure: don't run unboundedly ahead of the acks.
@@ -651,7 +668,6 @@ impl Pipe {
                 }
                 st = self.shared.cv.wait(st).unwrap();
             }
-            corr = self.next_corr;
             self.next_corr += 1;
             st.inflight += 1;
             match kind {
@@ -663,8 +679,6 @@ impl Pipe {
                 }
             }
         }
-        self.enc.clear();
-        frame.encode_into(corr, &mut self.enc);
         match self.writer.write_all(&self.enc) {
             Ok(()) => {
                 self.bytes_sent += self.enc.len() as u64;
@@ -785,6 +799,40 @@ pub const DEFAULT_WINDOW: usize = 64;
 /// Default coalescing threshold for buffered updates.
 pub const DEFAULT_COALESCE: usize = 256;
 
+/// Soft per-frame budget for bulk request payloads: half of
+/// [`codec::MAX_FRAME`], so chunked frames stay far from the hard limit
+/// the codec enforces on encode.
+const FRAME_BUDGET: usize = codec::MAX_FRAME / 2;
+
+/// Greedy split of a bulk payload into index ranges whose summed per-item
+/// cost (an upper bound on encoded bytes) stays under [`FRAME_BUDGET`]. A
+/// single over-budget item gets its own range — the codec's hard check
+/// still rejects it at encode time rather than corrupting the wire.
+fn chunk_ranges<T>(items: &[T], cost: impl Fn(&T) -> usize) -> Vec<std::ops::Range<usize>> {
+    let mut out = Vec::new();
+    let mut start = 0usize;
+    let mut acc = 0usize;
+    for (i, it) in items.iter().enumerate() {
+        let c = cost(it);
+        if i > start && acc + c > FRAME_BUDGET {
+            out.push(start..i);
+            start = i;
+            acc = 0;
+        }
+        acc += c;
+    }
+    if start < items.len() {
+        out.push(start..items.len());
+    }
+    out
+}
+
+/// Per-item encoded-size upper bound for `(uid, state)` update pairs:
+/// string header (<= 5) + uid bytes + 1 state byte.
+fn update_cost(u: &(String, TaskState)) -> usize {
+    u.0.len() + 6
+}
+
 /// The client side: what a remote Agent / TaskManager holds.
 ///
 /// [`DbClient::connect`] negotiates the binary pipelined protocol and
@@ -799,7 +847,12 @@ pub const DEFAULT_COALESCE: usize = 256;
 /// exponential backoff when a call fails mid-stream, replaying un-acked
 /// fire-and-forget writes (at-least-once delivery — acked writes are
 /// never lost, a replay race can at worst duplicate an update, which the
-/// session's forward-jump state table tolerates).
+/// session's forward-jump state table tolerates; replayed inserts are
+/// deduplicated by uid server-side). Un-acked frames salvaged from a dead
+/// connection live in a client-side replay buffer that survives *failed*
+/// re-dials too: an outage spanning several backoff intervals delays them
+/// but cannot drop them, and [`DbClient::flush`] refuses to report
+/// success until every one was re-sent and acked.
 pub struct DbClient {
     addr: SocketAddr,
     retry: RetryPolicy,
@@ -808,6 +861,10 @@ pub struct DbClient {
     window: usize,
     coalesce: usize,
     pending_updates: Vec<(String, TaskState)>,
+    /// Un-acked fire-and-forget frames salvaged from dead connections,
+    /// oldest first, awaiting replay on a live one. Only drained by a
+    /// successful re-send; kept across failed reopen attempts.
+    pending_replay: Vec<Frame>,
     wire: Wire,
     bytes_sent_base: u64,
     bytes_recv_base: u64,
@@ -837,6 +894,7 @@ impl DbClient {
             window: DEFAULT_WINDOW,
             coalesce: DEFAULT_COALESCE,
             pending_updates: Vec::new(),
+            pending_replay: Vec::new(),
             wire,
             bytes_sent_base: sent,
             bytes_recv_base: recv,
@@ -966,33 +1024,66 @@ impl DbClient {
         std::thread::sleep(std::time::Duration::from_secs_f64(delay));
     }
 
-    /// Re-dial (and re-negotiate) after a failure, replaying any un-acked
-    /// fire-and-forget frames from the dead connection.
+    /// Re-dial (and re-negotiate) after a failure. Un-acked fire-and-forget
+    /// frames salvaged from the dead connection are queued in
+    /// `pending_replay`, which survives *failed* re-dials: they are
+    /// re-sent (oldest first) once a connection is up again, so an outage
+    /// spanning several backoff intervals delays delivery but cannot lose
+    /// it. `flush()` gates on the buffer being empty *and* acked.
     fn reopen(&mut self) {
-        let mut replay = Vec::new();
         if let Wire::Binary(p) = &mut self.wire {
             let _ = p.writer.shutdown(Shutdown::Both); // unblock the reader thread
             self.bytes_sent_base += p.bytes_sent;
             self.bytes_recv_base += p.shared.bytes_recv.load(Ordering::Relaxed);
-            replay = p.take_unacked();
+            // Zero the counters: a second salvage of this same dead pipe
+            // (after a failed re-dial below) must not double-count.
+            p.bytes_sent = 0;
+            p.shared.bytes_recv.store(0, Ordering::Relaxed);
+            // Anything already in pending_replay failed an *earlier* replay
+            // and was never re-sent, so frames salvaged from this (newer)
+            // connection were sent before them: salvaged first, then the
+            // leftovers, keeps the original send order.
+            let mut salvaged = p.take_unacked();
+            salvaged.append(&mut self.pending_replay);
+            self.pending_replay = salvaged;
         }
-        if let Ok((wire, sent, recv)) = open_wire(self.addr, self.prefer_binary, self.window) {
-            self.bytes_sent_base += sent;
-            self.bytes_recv_base += recv;
-            self.wire = wire;
-            self.reconnects += 1;
-            let mut json_replay = Vec::new();
-            for f in replay {
+        match open_wire(self.addr, self.prefer_binary, self.window) {
+            Ok((wire, sent, recv)) => {
+                self.bytes_sent_base += sent;
+                self.bytes_recv_base += recv;
+                self.wire = wire;
+                self.reconnects += 1;
+                self.replay_pending();
+            }
+            Err(_) => {
+                // Re-dial failed: pending_replay keeps the salvaged frames
+                // for the next attempt. The dead wire stays in place, so
+                // any further send errors immediately and retries land
+                // back here after the caller's backoff.
+            }
+        }
+    }
+
+    /// Re-send salvaged fire-and-forget frames on the current wire, oldest
+    /// first. A frame whose send fails stays queued (with everything after
+    /// it) for the next reopen — never silently dropped. Over a JSON
+    /// fallback wire the replay is lockstep; any response, including a
+    /// server-side `Error`, means the frame was delivered.
+    fn replay_pending(&mut self) {
+        while !self.pending_replay.is_empty() {
+            let frame = self.pending_replay[0].clone();
+            let delivered = if matches!(self.wire, Wire::Json { .. }) {
+                self.try_call(&frame).is_ok()
+            } else {
                 match &mut self.wire {
-                    Wire::Binary(p) => {
-                        let _ = p.send(f, SendKind::ForgetReplay);
-                    }
-                    Wire::Json { .. } => json_replay.push(f),
+                    Wire::Binary(p) => p.send(frame.clone(), SendKind::ForgetReplay).is_ok(),
+                    Wire::Json { .. } => unreachable!(),
                 }
+            };
+            if !delivered {
+                return;
             }
-            for f in json_replay {
-                let _ = self.try_call(&f); // lockstep replay over JSON
-            }
+            self.pending_replay.remove(0);
         }
     }
 
@@ -1040,20 +1131,33 @@ impl DbClient {
             return Ok(());
         }
         let updates = std::mem::take(&mut self.pending_updates);
-        self.send_forget(Frame::UpdateBulk { updates })
+        for range in chunk_ranges(&updates, update_cost) {
+            self.send_forget(Frame::UpdateBulk {
+                updates: updates[range].to_vec(),
+            })?;
+        }
+        Ok(())
     }
 
     // -- lockstep API (identical semantics in both modes) ------------------
 
+    /// Insert a bulk of records, chunked below the frame-size limit.
+    /// Returns how many the server newly enqueued (replays of records it
+    /// has already seen are deduplicated by uid and not counted).
     pub fn insert_tasks(&mut self, pilot: &str, recs: &[TaskRecord]) -> std::io::Result<usize> {
-        let frame = Frame::Insert {
-            pilot: pilot.to_string(),
-            tasks: recs.iter().map(|r| (r.uid.clone(), r.index)).collect(),
-        };
-        match self.op(frame)? {
-            Frame::Ok { n } => Ok(n as usize),
-            _ => Err(data_err("unexpected response to insert")),
+        let mut total = 0usize;
+        // uid bytes + string header (<= 5) + varint index (<= 5)
+        for range in chunk_ranges(recs, |r| r.uid.len() + 10) {
+            let frame = Frame::Insert {
+                pilot: pilot.to_string(),
+                tasks: recs[range].iter().map(|r| (r.uid.clone(), r.index)).collect(),
+            };
+            match self.op(frame)? {
+                Frame::Ok { n } => total += n as usize,
+                _ => return Err(data_err("unexpected response to insert")),
+            }
         }
+        Ok(total)
     }
 
     pub fn pull_tasks(&mut self, pilot: &str, max: usize) -> std::io::Result<Vec<(String, u32)>> {
@@ -1097,10 +1201,13 @@ impl DbClient {
     }
 
     pub fn update_states_bulk(&mut self, updates: &[(String, TaskState)]) -> std::io::Result<()> {
-        let frame = Frame::UpdateBulk {
-            updates: updates.to_vec(),
-        };
-        self.op(frame).map(|_| ())
+        for range in chunk_ranges(updates, update_cost) {
+            let frame = Frame::UpdateBulk {
+                updates: updates[range].to_vec(),
+            };
+            self.op(frame)?;
+        }
+        Ok(())
     }
 
     pub fn drain_updates(&mut self) -> std::io::Result<Vec<(String, TaskState)>> {
@@ -1166,9 +1273,12 @@ impl DbClient {
             return Ok(());
         }
         self.flush_buffer()?;
-        self.send_forget(Frame::UpdateBulk {
-            updates: updates.to_vec(),
-        })
+        for range in chunk_ranges(updates, update_cost) {
+            self.send_forget(Frame::UpdateBulk {
+                updates: updates[range].to_vec(),
+            })?;
+        }
+        Ok(())
     }
 
     /// Buffer one state update client-side; consecutive buffered updates
@@ -1184,15 +1294,26 @@ impl DbClient {
     }
 
     /// Flush buffered updates and wait until every in-flight request has
-    /// been acked: after `flush()` returns, all prior writes are applied
-    /// server-side (and visible to drains on other connections).
+    /// been acked: after `flush()` returns `Ok`, all prior writes are
+    /// applied server-side (and visible to drains on other connections) —
+    /// including writes salvaged from dead connections: success is never
+    /// reported while any salvaged frame still awaits replay or its ack.
     pub fn flush(&mut self) -> std::io::Result<()> {
         self.flush_buffer()?;
         let mut attempt = 1u32;
         loop {
-            let res = match &mut self.wire {
-                Wire::Binary(p) => p.barrier(),
-                Wire::Json { .. } => Ok(()), // lockstep: nothing can be in flight
+            if !self.pending_replay.is_empty() {
+                self.replay_pending();
+            }
+            let res = if self.pending_replay.is_empty() {
+                match &mut self.wire {
+                    Wire::Binary(p) => p.barrier(),
+                    Wire::Json { .. } => Ok(()), // lockstep: nothing can be in flight
+                }
+            } else {
+                Err(other_err(
+                    "un-acked writes salvaged from a dead connection still await replay",
+                ))
             };
             match res {
                 Ok(()) => return Ok(()),
@@ -1590,7 +1711,7 @@ mod tests {
                     seen2.lock().unwrap().push(uid);
                 }
                 enc.clear();
-                Frame::Ok { n: 1 }.encode_into(corr, &mut enc);
+                Frame::Ok { n: 1 }.encode_into(corr, &mut enc).unwrap();
                 w.write_all(&enc).unwrap();
             }
             let _ = w.shutdown(Shutdown::Both);
@@ -1605,7 +1726,7 @@ mod tests {
                     seen2.lock().unwrap().push(uid);
                 }
                 enc.clear();
-                Frame::Ok { n: 1 }.encode_into(corr, &mut enc);
+                Frame::Ok { n: 1 }.encode_into(corr, &mut enc).unwrap();
                 if w.write_all(&enc).is_err() {
                     break;
                 }
@@ -1631,6 +1752,142 @@ mod tests {
             let uid = format!("t{i:02}");
             assert!(seen.contains(&uid), "update {uid} was lost in the reconnect");
         }
+    }
+
+    #[test]
+    fn unacked_writes_survive_an_outage_spanning_reopen_failures() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let seen = Arc::new(Mutex::new(Vec::<String>::new()));
+        let seen2 = seen.clone();
+        let h = std::thread::spawn(move || {
+            // conn 1: handshake, ack 5 updates, drop mid-pipeline
+            let (c, _) = listener.accept().unwrap();
+            let mut w = c.try_clone().unwrap();
+            let mut r = BufReader::new(c);
+            let mut magic = [0u8; 5];
+            r.read_exact(&mut magic).unwrap();
+            w.write_all(codec::MAGIC_ACK).unwrap();
+            let mut scratch = Vec::new();
+            let mut enc = Vec::new();
+            for _ in 0..5 {
+                let (corr, f) = codec::read_frame(&mut r, &mut scratch).unwrap().unwrap();
+                if let Frame::Update { uid, .. } = f {
+                    seen2.lock().unwrap().push(uid);
+                }
+                enc.clear();
+                Frame::Ok { n: 1 }.encode_into(corr, &mut enc).unwrap();
+                w.write_all(&enc).unwrap();
+            }
+            let _ = w.shutdown(Shutdown::Both);
+            drop(r);
+            // conns 2-4: accepted and hung up before the handshake answer —
+            // open_wire fails, so these are *failed* reopen attempts; the
+            // salvaged un-acked frames must survive every one of them
+            for _ in 0..3 {
+                let (c, _) = listener.accept().unwrap();
+                drop(c);
+            }
+            // conn 5: full service until the client hangs up
+            let (c, _) = listener.accept().unwrap();
+            let mut w = c.try_clone().unwrap();
+            let mut r = BufReader::new(c);
+            r.read_exact(&mut magic).unwrap();
+            w.write_all(codec::MAGIC_ACK).unwrap();
+            while let Ok(Some((corr, f))) = codec::read_frame(&mut r, &mut scratch) {
+                if let Frame::Update { uid, .. } = f {
+                    seen2.lock().unwrap().push(uid);
+                }
+                enc.clear();
+                Frame::Ok { n: 1 }.encode_into(corr, &mut enc).unwrap();
+                if w.write_all(&enc).is_err() {
+                    break;
+                }
+            }
+        });
+        let mut client = DbClient::connect(addr)
+            .unwrap()
+            .with_retry(fast_retry(100))
+            .with_window(64);
+        for i in 0..20u32 {
+            client
+                .update_state_async(&format!("t{i:02}"), TaskState::Done)
+                .unwrap();
+        }
+        client.flush().unwrap(); // Ok only once every update was re-sent + acked
+        assert!(client.reconnects() >= 1, "the drop must force a re-dial");
+        drop(client);
+        h.join().unwrap();
+        let seen = seen.lock().unwrap();
+        for i in 0..20u32 {
+            let uid = format!("t{i:02}");
+            assert!(
+                seen.contains(&uid),
+                "update {uid} was lost across the failed reopens"
+            );
+        }
+    }
+
+    #[test]
+    fn flush_fails_rather_than_claiming_undelivered_writes_applied() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let h = std::thread::spawn(move || {
+            // handshake, read one frame without acking, then vanish for
+            // good — there is no server left to replay against
+            let (c, _) = listener.accept().unwrap();
+            let mut w = c.try_clone().unwrap();
+            let mut r = BufReader::new(c);
+            let mut magic = [0u8; 5];
+            r.read_exact(&mut magic).unwrap();
+            w.write_all(codec::MAGIC_ACK).unwrap();
+            let mut scratch = Vec::new();
+            let _ = codec::read_frame(&mut r, &mut scratch);
+            drop(listener);
+        });
+        let mut client = DbClient::connect(addr).unwrap().with_retry(fast_retry(4));
+        client.update_state_async("t00", TaskState::Done).unwrap();
+        h.join().unwrap();
+        client
+            .flush()
+            .expect_err("flush must not report an undelivered write as applied");
+    }
+
+    #[test]
+    fn oversized_bulk_updates_are_chunked_below_max_frame() {
+        let db = Arc::new(Db::new());
+        let server = DbServer::start(db.clone()).unwrap();
+        let mut client = DbClient::connect(server.addr).unwrap();
+        // Three updates whose summed encoding exceeds MAX_FRAME, issued as
+        // one bulk call: they must go out as several frames (the codec
+        // rejects any single frame this large, in release builds too).
+        let big = "u".repeat(6 << 20);
+        let updates: Vec<(String, TaskState)> = (0..3)
+            .map(|i| (format!("{big}.{i}"), TaskState::Done))
+            .collect();
+        client.update_states_bulk(&updates).unwrap();
+        let ups = db.drain_updates();
+        assert_eq!(ups.len(), 3);
+        for (i, (uid, st)) in ups.iter().enumerate() {
+            assert!(uid.ends_with(&format!(".{i}")), "updates must stay in order");
+            assert_eq!(*st, TaskState::Done);
+        }
+        server.stop();
+    }
+
+    #[test]
+    fn replayed_insert_does_not_duplicate_tasks() {
+        let db = Arc::new(Db::new());
+        let server = DbServer::start(db.clone()).unwrap();
+        let mut client = DbClient::connect(server.addr).unwrap();
+        let recs: Vec<TaskRecord> = (0..5).map(rec).collect();
+        assert_eq!(client.insert_tasks("pilot.0000", &recs).unwrap(), 5);
+        // a reconnect replay re-sends the same records; the server
+        // deduplicates by uid, so agents can never pull a uid twice
+        assert_eq!(client.insert_tasks("pilot.0000", &recs).unwrap(), 0);
+        assert_eq!(client.pending("pilot.0000").unwrap(), 5);
+        assert_eq!(client.pull_tasks("pilot.0000", 100).unwrap().len(), 5);
+        server.stop();
     }
 
     #[test]

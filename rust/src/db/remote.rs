@@ -13,9 +13,16 @@
 //!   feeding the session's state-sync thread.
 //!
 //! [`TaskDb`] methods are infallible by contract (the in-process store
-//! cannot fail); network errors here degrade to empty results plus a
-//! log-once report — the same observable behavior as a closed store, which
-//! the session's teardown paths already handle.
+//! cannot fail), and an empty result from the blocking calls is the
+//! trait's "closed and fully drained" sentinel — so a network error that
+//! degraded straight to empty would be indistinguishable from a clean
+//! stream end. Every link therefore carries a reconnect policy
+//! ([`RetryPolicy::net_default`] unless [`RemoteDb::connect_with`] says
+//! otherwise): a dropped connection re-dials with deterministic backoff
+//! and replays un-acked writes before any result is returned. Only once
+//! that retry budget is exhausted does a call degrade to an empty result,
+//! with a log-once report and the [`RemoteDb::degraded`] flag set so
+//! callers can tell the two empties apart after the fact.
 
 use std::collections::HashMap;
 use std::net::SocketAddr;
@@ -38,9 +45,14 @@ pub struct RemoteDb {
 }
 
 impl RemoteDb {
-    /// Connect the control link (pull/drain links are dialed lazily).
+    /// Connect the control link (pull/drain links are dialed lazily) with
+    /// the default reconnect policy, [`RetryPolicy::net_default`]. Use
+    /// [`RemoteDb::connect_with`] (e.g. with [`RetryPolicy::none`]) to
+    /// override — fail-fast is opt-in, not the default, because a single
+    /// dropped connection mid-run would otherwise read as a clean stream
+    /// end and silently end pull/drain loops.
     pub fn connect(addr: SocketAddr) -> std::io::Result<RemoteDb> {
-        Self::connect_with(addr, RetryPolicy::none())
+        Self::connect_with(addr, RetryPolicy::net_default())
     }
 
     /// Connect with a retry policy applied to every link (reconnect with
@@ -60,6 +72,14 @@ impl RemoteDb {
     /// Which protocol the control link negotiated (`"binary"`/`"json"`).
     pub fn proto(&self) -> &'static str {
         self.ctrl.lock().unwrap().proto()
+    }
+
+    /// True once any operation exhausted its retry budget and degraded to
+    /// an empty/zero result. Because the [`TaskDb`] contract cannot carry
+    /// errors, this is how callers distinguish "the stream ended cleanly"
+    /// from "the link failed and results may be incomplete".
+    pub fn degraded(&self) -> bool {
+        self.logged_err.load(Ordering::Relaxed)
     }
 
     fn log_err(&self, what: &str, e: &std::io::Error) {
@@ -269,6 +289,45 @@ mod tests {
         remote.close();
         assert!(remote.drain_updates_blocking().is_empty());
         server.stop();
+    }
+
+    #[test]
+    fn default_retry_redials_a_dropped_control_connection() {
+        use super::super::codec::{self, Frame};
+        use std::io::{BufReader, Read, Write};
+        use std::net::TcpListener;
+
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let h = std::thread::spawn(move || {
+            // conn 1 (ctrl): handshake, then drop without serving anything
+            let (c, _) = listener.accept().unwrap();
+            let mut w = c.try_clone().unwrap();
+            let mut r = BufReader::new(c);
+            let mut magic = [0u8; 5];
+            r.read_exact(&mut magic).unwrap();
+            w.write_all(codec::MAGIC_ACK).unwrap();
+            drop(w);
+            drop(r);
+            // conn 2: the re-dial; answer one pending request
+            let (c, _) = listener.accept().unwrap();
+            let mut w = c.try_clone().unwrap();
+            let mut r = BufReader::new(c);
+            r.read_exact(&mut magic).unwrap();
+            w.write_all(codec::MAGIC_ACK).unwrap();
+            let mut scratch = Vec::new();
+            let (corr, f) = codec::read_frame(&mut r, &mut scratch).unwrap().unwrap();
+            assert!(matches!(f, Frame::Pending { .. }));
+            let mut enc = Vec::new();
+            Frame::Ok { n: 7 }.encode_into(corr, &mut enc).unwrap();
+            w.write_all(&enc).unwrap();
+        });
+        let remote = RemoteDb::connect(addr).unwrap();
+        // without the default reconnect policy this degrades to 0 — a
+        // transient drop masquerading as an empty store
+        assert_eq!(remote.pending("pilot.0000"), 7);
+        assert!(!remote.degraded());
+        h.join().unwrap();
     }
 
     #[test]

@@ -82,6 +82,25 @@ impl RetryPolicy {
         }
     }
 
+    /// Default policy for remote-DB network links (`db::RemoteDb`,
+    /// `Session::with_remote_db`): the paper's deployments keep the
+    /// client↔DB link up for the lifetime of a run (§III-A), so a dropped
+    /// connection mid-run must be survivable *by default* — with no retry,
+    /// one transient drop is indistinguishable from a clean stream end and
+    /// silently terminates pull/drain loops. 8 attempts, 50 ms base
+    /// doubling to a 2 s cap (≈ 5 s of outage covered), jitter-free so
+    /// reconnect schedules stay deterministic.
+    pub fn net_default() -> RetryPolicy {
+        RetryPolicy {
+            max_attempts: 8,
+            backoff_base_s: 0.05,
+            backoff_factor: 2.0,
+            backoff_max_s: 2.0,
+            jitter_frac: 0.0,
+            deadline_s: 0.0,
+        }
+    }
+
     /// Does this policy ever resubmit?
     pub fn retries(&self) -> bool {
         self.max_attempts > 1

@@ -101,9 +101,25 @@ impl Session {
     /// blocking pull/drain links. The rest of the streaming pipeline is
     /// unchanged; it only sees the [`TaskDb`] trait.
     ///
+    /// Every link reconnects with [`RetryPolicy::net_default`] backoff
+    /// when it drops mid-run, replaying un-acked writes — without that a
+    /// single transient network error would read as a clean stream end
+    /// and silently end the sync thread or an agent's pull loop. Use
+    /// [`Session::with_remote_db_retry`] to choose a different policy.
+    ///
     /// [`DbServer`]: crate::db::DbServer
+    /// [`RetryPolicy::net_default`]: crate::resilience::RetryPolicy::net_default
     pub fn with_remote_db(addr: SocketAddr) -> Result<Session> {
-        let remote = RemoteDb::connect(addr)
+        Self::with_remote_db_retry(addr, crate::resilience::RetryPolicy::net_default())
+    }
+
+    /// Like [`Session::with_remote_db`] with an explicit reconnect policy
+    /// for the DB links (`RetryPolicy::none()` restores fail-fast).
+    pub fn with_remote_db_retry(
+        addr: SocketAddr,
+        retry: crate::resilience::RetryPolicy,
+    ) -> Result<Session> {
+        let remote = RemoteDb::connect_with(addr, retry)
             .map_err(|e| RpError::Runtime(format!("remote db {addr}: connect failed: {e}")))?;
         let db: Arc<dyn TaskDb> = Arc::new(remote);
         Ok(Session::with_db(db))
